@@ -1,0 +1,78 @@
+"""End-to-end benches on reduced configs (CPU wall-clock, relative only):
+train step/s, decode tokens/s with normal vs packed KV, AMC-Adam overhead.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.paper_tables import row
+from repro.configs import get_arch
+from repro.configs.base import AMCConfig, ShapeConfig
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+from repro.models.params import init_params
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+
+def bench_train_step():
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    B, S = 4, 128
+    params = init_params(M.abstract_params(cfg), jax.random.PRNGKey(0))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab),
+             "targets": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                           cfg.vocab)}
+    for opt in ("adamw", "amc_adamw"):
+        settings = step_lib.TrainSettings(optimizer=opt, q_chunk=64)
+        init_fn, _ = adamw.make_optimizer(opt)
+        state = step_lib.TrainState(params, init_fn(params),
+                                    jnp.zeros((), jnp.int32))
+        fn = jax.jit(step_lib.make_train_step(cfg, settings, rules=None))
+        state, _ = fn(state, batch)  # compile
+        t0 = time.perf_counter()
+        for _ in range(5):
+            state, loss = fn(state, batch)
+        jax.block_until_ready(loss)
+        us = (time.perf_counter() - t0) / 5 * 1e6
+        opt_bytes = sum(x.nbytes for x in jax.tree.leaves(state.opt))
+        row(f"train_step_{opt}", us,
+            f"tokens={B*S} opt_state_bytes={opt_bytes}")
+
+
+def bench_decode_kv_modes():
+    base = get_arch("granite-3-2b").reduced()
+    B, S = 4, 256
+    shape = ShapeConfig("d", S, B, "decode")
+    for mode in ("normal", "int8", "int4"):
+        cfg = dataclasses.replace(base, amc=AMCConfig(kv_mode=mode))
+        params = init_params(M.abstract_params(cfg), jax.random.PRNGKey(0))
+        cache = jax.tree.map(
+            lambda l: jnp.zeros(l.shape, l.jdtype),
+            M.abstract_cache(cfg, shape),
+            is_leaf=lambda x: hasattr(x, "jdtype"))
+        fn = jax.jit(lambda p, c, b: M.decode_step(cfg, p, c, b),
+                     donate_argnums=(1,))
+        batch = {"tokens": jnp.ones((B, 1), jnp.int32),
+                 "positions": jnp.zeros((B,), jnp.int32)}
+        logits, cache = fn(params, cache, batch)  # compile
+        t0 = time.perf_counter()
+        n = 10
+        for i in range(n):
+            batch["positions"] = batch["positions"] + 1
+            logits, cache = fn(params, cache, batch)
+        jax.block_until_ready(logits)
+        us = (time.perf_counter() - t0) / n * 1e6
+        cache_bytes = sum(x.nbytes for x in jax.tree.leaves(cache))
+        row(f"decode_step_kv_{mode}", us,
+            f"cache_bytes={cache_bytes} tok_per_s={B/(us/1e6):.0f}")
+
+
+def run_all():
+    bench_train_step()
+    bench_decode_kv_modes()

@@ -1,0 +1,80 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container Pallas kernels run in interpret mode (Python-speed),
+so wall-clock there is meaningless; what we report per kernel is
+  * the HBM bytes moved by the kernel vs its bf16 XLA equivalent (the
+    quantity the TPU roofline actually charges), and
+  * wall time of the jnp reference path as a CPU sanity number.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.paper_tables import row, _time_us
+from repro.core import quant, ternary
+from repro.kernels import ref
+from repro.launch.mesh import HBM_BW, PEAK_BF16_FLOPS
+
+
+def bench_ternary_matmul():
+    M, K, N = 256, 4096, 4096
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    t, scale = ternary.ternarize(w)
+    wp = ternary.pack_ternary_2bit(t)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K), jnp.bfloat16)
+    us = _time_us(jax.jit(ref.ternary_matmul_ref), x, wp, scale, n=5)
+    bytes_packed = wp.size + M * K * 2 + M * N * 2
+    bytes_bf16 = K * N * 2 + M * K * 2 + M * N * 2
+    flops = 2 * M * K * N
+    roof_packed = max(bytes_packed / HBM_BW, flops / PEAK_BF16_FLOPS) * 1e6
+    roof_bf16 = max(bytes_bf16 / HBM_BW, flops / PEAK_BF16_FLOPS) * 1e6
+    row("ternary_matmul_ref_cpu", us,
+        f"M{M}xK{K}xN{N} hbm_bytes={bytes_packed} vs_bf16={bytes_bf16} "
+        f"traffic_ratio={bytes_bf16/bytes_packed:.2f}x "
+        f"tpu_roofline_us={roof_packed:.2f} vs_bf16_us={roof_bf16:.2f}")
+
+
+def bench_dual_plane_matmul():
+    M, K, N = 256, 2048, 2048
+    k = jax.random.PRNGKey(0)
+    qh, sh = quant.quantize_int4(jax.random.normal(k, (K, N)), axis=0)
+    ql, sl = quant.quantize_int4(
+        jax.random.normal(jax.random.fold_in(k, 1), (K, N)), axis=0)
+    buf = quant.pack_int4_pair(qh, ql)
+    x = jax.random.normal(jax.random.fold_in(k, 2), (M, K), jnp.bfloat16)
+    us = _time_us(jax.jit(ref.dual_plane_matmul_ref), x, buf, sh, sl, n=5)
+    bytes_dual = buf.size + M * K * 2 + 2 * M * N * 2
+    bytes_two_bf16 = 2 * K * N * 2 + M * K * 2 + 2 * M * N * 2
+    row("dual_plane_matmul_ref_cpu", us,
+        f"two_matmuls_one_buffer traffic_ratio="
+        f"{bytes_two_bf16/bytes_dual:.2f}x")
+
+
+def bench_packed_kv_attention():
+    B, KV, Hg, D, S = 8, 8, 4, 128, 8192
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D))
+    kq, ks = quant.quantize_int4(kf, axis=-1)
+    kp = quant.pack_int4_pair(kq[..., 0::2], kq[..., 1::2])
+    vp, vs = kp, ks[..., 0].astype(jnp.bfloat16)
+    ks2 = vs
+    lengths = jnp.full((B,), S, jnp.int32)
+    us = _time_us(jax.jit(ref.packed_kv_attention_ref), q, kp, vp, ks2, vs,
+                  lengths, n=3)
+    cache_packed = 2 * B * KV * S * (D // 2 + 2)
+    cache_bf16 = 2 * B * KV * S * D * 2
+    row("packed_kv_attention_ref_cpu", us,
+        f"B{B}xKV{KV}xS{S}xD{D} cache_bytes={cache_packed} "
+        f"vs_bf16={cache_bf16} traffic_ratio={cache_bf16/cache_packed:.2f}x "
+        f"decode_roofline_us={cache_packed/HBM_BW*1e6:.1f} "
+        f"vs_bf16_us={cache_bf16/HBM_BW*1e6:.1f}")
+
+
+def run_all():
+    bench_ternary_matmul()
+    bench_dual_plane_matmul()
+    bench_packed_kv_attention()

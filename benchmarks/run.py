@@ -1,0 +1,22 @@
+"""Benchmark harness — one section per paper table + kernel and e2e benches.
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md SS7 experiment index).
+"""
+from __future__ import annotations
+
+import sys
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import e2e_bench, kernels_bench, paper_tables
+    print("# -- paper tables I-VI analogs --")
+    paper_tables.run_all()
+    print("# -- pallas kernels (bytes/roofline; CPU ref wall-time) --")
+    kernels_bench.run_all()
+    print("# -- end-to-end (reduced configs, CPU) --")
+    e2e_bench.run_all()
+    print("# done")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Fault tolerance + elasticity demo.
+
+  PYTHONPATH=src python examples/elastic_restart.py
+
+1. trains with a checkpoint every 4 steps,
+2. injects a simulated node failure mid-run — the Supervisor restores the
+   latest checkpoint (params, optimizer, data-iterator position) and
+   resumes; final losses are identical to a failure-free run,
+3. then restores the same checkpoint onto a DIFFERENT mesh layout
+   (elastic restart: e.g. a job rescheduled on fewer chips).
+"""
+import shutil
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt_lib
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.distributed.fault import SimulatedFailure
+from repro.launch.mesh import make_local_mesh
+from repro.train import TrainSettings
+from repro.train.trainer import Trainer, TrainerConfig
+
+CKPT = "/tmp/amc_elastic_demo"
+shutil.rmtree(CKPT, ignore_errors=True)
+shutil.rmtree(CKPT + "_clean", ignore_errors=True)
+
+cfg = get_arch("qwen1.5-0.5b").reduced()
+shape = ShapeConfig("t", 64, 4, "train")
+settings = TrainSettings(lr=5e-3, q_chunk=16)
+
+fired = {"done": False}
+
+
+def injector(step):
+    if step == 6 and not fired["done"]:
+        fired["done"] = True
+        raise SimulatedFailure("pod 1 lost heartbeat")
+
+
+tr = Trainer(cfg, shape, make_local_mesh(), settings,
+             TrainerConfig(total_steps=12, ckpt_every=4, ckpt_dir=CKPT,
+                           warmup=2),
+             failure_injector=injector)
+losses = tr.train()
+tr.close()
+print(f"run with failure @6: restarts={tr.supervisor.restarts}, "
+      f"{len(losses)} losses, final={losses[-1]:.4f}")
+
+tr2 = Trainer(cfg, shape, make_local_mesh(), settings,
+              TrainerConfig(total_steps=12, ckpt_every=4,
+                            ckpt_dir=CKPT + "_clean", warmup=2))
+losses_clean = tr2.train()
+tr2.close()
+assert np.allclose(losses, losses_clean, rtol=1e-5), "recovery diverged!"
+print("failure-free run matches exactly: recovery lost/repeated no steps")
+
+# elastic restore: same checkpoint, different mesh (here 1 device x (1,1) —
+# on a pod this is e.g. 512 -> 256 chips; arrays are saved as full logical
+# values and re-laid-out by device_put)
+step = ckpt_lib.latest_step(CKPT)
+mesh2 = jax.make_mesh((1, 1), ("data", "model"))
+tr3 = Trainer(cfg, shape, mesh2, settings,
+              TrainerConfig(total_steps=12, ckpt_dir=CKPT, warmup=2))
+print(f"elastic restore at step {tr3.current_step()} onto mesh "
+      f"{dict(mesh2.shape)}: OK")
+tr3.close()

@@ -1,0 +1,46 @@
+"""Batched serving with augmented (int4-packed) KV storage.
+
+  PYTHONPATH=src python examples/serve_augmented.py
+
+Serves a reduced granite-3-2b with continuous batching twice — Normal-mode
+bf16 KV vs Augmented-mode int4 KV — and compares cache bytes, effective
+KV-tokens-per-GiB and output agreement. The int4 cache is the paper's
+dynamic plane: written once per token (streamed), lossy, drained by
+attention reads (FILO), never rematerialized densely in HBM (the Pallas
+packed_kv_attention kernel computes on packed bytes on TPU).
+"""
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs import get_arch
+from repro.configs.base import AMCConfig
+from repro.launch.mesh import make_local_mesh
+from repro.serve import Request, ServeEngine
+
+cfg0 = get_arch("granite-3-2b").reduced()
+mesh = make_local_mesh()
+rng = np.random.default_rng(0)
+prompts = [rng.integers(0, cfg0.vocab, size=(6,)).astype(np.int32)
+           for _ in range(6)]
+
+results = {}
+for mode in ("normal", "int4"):
+    cfg = dataclasses.replace(cfg0, amc=AMCConfig(kv_mode=mode))
+    eng = ServeEngine(cfg, mesh, max_batch=3, max_seq=48, seed=11)
+    reqs = [Request(prompt=p, max_new_tokens=8, id=i)
+            for i, p in enumerate(prompts)]
+    outs = eng.generate(reqs)
+    cache_bytes = sum(x.nbytes for x in jax.tree.leaves(eng.cache))
+    results[mode] = (outs, cache_bytes)
+    print(f"[{mode:6s}] cache={cache_bytes:8d} B  "
+          f"first outputs: {outs[0]}")
+
+outs_n, bytes_n = results["normal"]
+outs_q, bytes_q = results["int4"]
+agree = np.mean([outs_n[i] == outs_q[i] for i in outs_n])
+print(f"\ncache bytes: {bytes_n} -> {bytes_q} "
+      f"({bytes_n/bytes_q:.2f}x augmentation)")
+print(f"greedy output agreement int4 vs bf16: {agree:.0%} "
+      f"(lossy dynamic plane, error-aware serving tolerates it)")

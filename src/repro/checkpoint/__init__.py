@@ -1,0 +1,4 @@
+from repro.checkpoint.ckpt import (AsyncCheckpointer, all_steps, latest_step,
+                                   restore, save)
+
+__all__ = ["AsyncCheckpointer", "all_steps", "latest_step", "restore", "save"]

@@ -1,0 +1,8 @@
+from repro.configs.base import (AMCConfig, ModelConfig, MoEConfig,
+                                ShapeConfig, SHAPES, cell_applicable,
+                                input_specs)
+from repro.configs.registry import ARCHS, all_cells, get_arch, get_shape
+
+__all__ = ["AMCConfig", "ModelConfig", "MoEConfig", "ShapeConfig", "SHAPES",
+           "ARCHS", "all_cells", "get_arch", "get_shape", "cell_applicable",
+           "input_specs"]

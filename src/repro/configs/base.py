@@ -1,0 +1,281 @@
+"""Model/shape configuration system.
+
+Every assigned architecture is an exact `ModelConfig`; every assigned input
+shape is a `ShapeConfig`.  `input_specs()` produces ShapeDtypeStruct
+stand-ins (no allocation) for the dry-run; `reduced()` produces the small
+same-family config used by CPU smoke tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def pad_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    capacity_factor: float = 1.25
+    # "ep": experts sharded over the model axis (requires divisibility);
+    # "tp": expert FFN hidden dim sharded over the model axis.
+    sharding: str = "ep"
+    # dense FFN interleave (qwen3-moe uses pure MoE; grok uses MoE every layer)
+    shared_expert: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    state_dim: int = 128     # N (ssm_state)
+    head_dim: int = 64       # P
+    expand: int = 2          # d_inner = expand * d_model
+    n_groups: int = 1
+    conv_dim: int = 4
+    chunk: int = 256         # SSD chunk length
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    lru_width: int = 4096
+    window: int = 2048            # local attention window
+    pattern: Tuple[str, ...] = ("rec", "rec", "attn")
+
+
+@dataclasses.dataclass(frozen=True)
+class VisionConfig:
+    cross_attn_every: int = 5     # one cross-attn layer per this many layers
+    n_cross_layers: int = 8
+    n_patches: int = 1601         # 1 CLS + 40x40 patches (llama-3.2 vision)
+    vision_dim: int = 4096        # projected patch embedding dim (stub)
+
+
+@dataclasses.dataclass(frozen=True)
+class EncDecConfig:
+    n_encoder_layers: int = 4
+    n_frames: int = 1500          # whisper 30s @ 50Hz after conv stub
+    frame_dim: int = 384
+
+
+@dataclasses.dataclass(frozen=True)
+class AMCConfig:
+    """Augmented-memory settings for this model instance."""
+    weight_mode: str = "normal"     # normal | ternary | dual
+    ternary_fmt: str = "2bit"       # base3 | 2bit (kernels prefer 2bit)
+    kv_mode: str = "normal"         # normal | int4 | int8
+    retention_steps: int = 8
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense | moe | audio | vlm | ssm | hybrid
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab: int
+    head_dim: Optional[int] = None
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    act: str = "swiglu"            # swiglu | gelu
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    vision: Optional[VisionConfig] = None
+    encdec: Optional[EncDecConfig] = None
+    amc: AMCConfig = dataclasses.field(default_factory=AMCConfig)
+    source: str = ""
+
+    @property
+    def hd(self) -> int:
+        if self.head_dim is not None:
+            return self.head_dim
+        return self.d_model // max(self.n_heads, 1)
+
+    @property
+    def vocab_padded(self) -> int:
+        return pad_to(self.vocab, 256)
+
+    @property
+    def attention_free(self) -> bool:
+        return self.family == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Supports 500k-token decode (bounded state / windowed attention)."""
+        return self.family in ("ssm", "hybrid")
+
+    @property
+    def is_encoder_decoder(self) -> bool:
+        return self.encdec is not None
+
+    def param_count(self) -> int:
+        """Analytic parameter count (for MODEL_FLOPS and capacity tables)."""
+        d, v = self.d_model, self.vocab_padded
+        n = v * d  # embedding
+        if not self.tie_embeddings:
+            n += v * d  # lm head
+        per_layer = 0
+        hd, H, KV = self.hd, self.n_heads, self.n_kv_heads
+        attn = d * H * hd + 2 * d * KV * hd + H * hd * d
+        ffn_mults = 3 if self.act == "swiglu" else 2
+        if self.family == "ssm":
+            s = self.ssm
+            din = s.expand * d
+            per_layer = d * (2 * din) + din * d + din * 2 * s.state_dim
+        elif self.family == "hybrid":
+            h = self.hybrid
+            rec = 2 * d * h.lru_width + h.lru_width * d + 2 * h.lru_width
+            att = attn
+            npat = len(h.pattern)
+            n_att = self.n_layers // npat
+            n_rec = self.n_layers - n_att
+            per_layer = 0
+            n += n_rec * (rec + ffn_mults * d * self.d_ff + 2 * d)
+            n += n_att * (att + ffn_mults * d * self.d_ff + 2 * d)
+            return n
+        elif self.moe is not None:
+            per_layer = attn + self.moe.n_experts * ffn_mults * d * self.d_ff
+            per_layer += d * self.moe.n_experts  # router
+        else:
+            per_layer = attn + ffn_mults * d * self.d_ff
+        if self.vision is not None:
+            cross = d * H * hd + 2 * d * self.n_kv_heads * hd + H * hd * d
+            n += self.vision.n_cross_layers * (cross + ffn_mults * d * self.d_ff)
+        per_layer += 2 * d  # norms
+        n += self.n_layers * per_layer
+        if self.encdec is not None:
+            enc_layer = attn + ffn_mults * d * self.d_ff + 2 * d
+            dec_cross = attn
+            n += self.encdec.n_encoder_layers * enc_layer
+            n += self.n_layers * dec_cross  # decoder cross-attn blocks
+        return int(n)
+
+    def active_param_count(self) -> int:
+        """Activated params per token (MoE: only top-k experts count)."""
+        if self.moe is None:
+            return self.param_count()
+        d = self.d_model
+        ffn_mults = 3 if self.act == "swiglu" else 2
+        full = self.param_count()
+        inactive = (self.moe.n_experts - self.moe.top_k) * ffn_mults * d * self.d_ff
+        return int(full - self.n_layers * inactive)
+
+    def nonembed_param_count(self) -> int:
+        v, d = self.vocab_padded, self.d_model
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.param_count() - emb
+
+    def nonembed_active_param_count(self) -> int:
+        v, d = self.vocab_padded, self.d_model
+        emb = v * d * (1 if self.tie_embeddings else 2)
+        return self.active_param_count() - emb
+
+    def model_flops(self, shape: "ShapeConfig") -> float:
+        """Analytic useful FLOPs per step (global): 6ND train / 2ND fwd for
+        non-embedding active params, plus the LM-head matmul explicitly."""
+        tokens = shape.global_batch * (shape.seq_len
+                                       if shape.kind != "decode" else 1)
+        mult = 6 if shape.kind == "train" else 2
+        body = mult * self.nonembed_active_param_count() * tokens
+        head = mult * tokens * self.d_model * self.vocab_padded
+        return float(body + head)
+
+    def reduced(self) -> "ModelConfig":
+        """Small same-family config for CPU smoke tests."""
+        kw = dict(
+            name=self.name + "-reduced",
+            family=self.family,
+            n_layers=min(self.n_layers, 2 if self.hybrid is None else 3),
+            d_model=128,
+            n_heads=4,
+            n_kv_heads=min(self.n_kv_heads, 4) if self.n_kv_heads < self.n_heads else 4,
+            d_ff=256,
+            vocab=512,
+            head_dim=32,
+            qkv_bias=self.qkv_bias,
+            act=self.act,
+            tie_embeddings=self.tie_embeddings,
+            amc=self.amc,
+            source=self.source,
+        )
+        if self.moe:
+            kw["moe"] = dataclasses.replace(self.moe, n_experts=8, top_k=2)
+            kw["d_ff"] = 64
+        if self.ssm:
+            kw["ssm"] = SSMConfig(state_dim=16, head_dim=16, expand=2,
+                                  conv_dim=4, chunk=32)
+            kw["n_heads"] = 0
+            kw["n_kv_heads"] = 0
+            kw["head_dim"] = None
+        if self.hybrid:
+            kw["hybrid"] = HybridConfig(lru_width=128, window=16,
+                                        pattern=self.hybrid.pattern)
+            kw["n_layers"] = 4   # 1 macro-block (rec,rec,attn) + 1 tail rec
+            kw["n_kv_heads"] = 1
+        if self.vision:
+            kw["vision"] = VisionConfig(cross_attn_every=5, n_cross_layers=1,
+                                        n_patches=16, vision_dim=128)
+            kw["n_layers"] = 5   # 1 macro-block: 4 self + 1 cross
+        if self.encdec:
+            kw["encdec"] = EncDecConfig(n_encoder_layers=2, n_frames=16,
+                                        frame_dim=128)
+            kw["n_layers"] = 2
+        return ModelConfig(**kw)
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+
+SHAPES = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+def cell_applicable(cfg: ModelConfig, shape: ShapeConfig) -> Tuple[bool, str]:
+    """Whether an (arch x shape) cell runs, with a skip reason otherwise."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full quadratic attention at 524k context: "
+                       "skipped per assignment (sub-quadratic archs only)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    B, S = shape.global_batch, shape.seq_len
+    i32 = jnp.int32
+    specs = {}
+    if shape.kind == "train":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+        specs["targets"] = jax.ShapeDtypeStruct((B, S), i32)
+    elif shape.kind == "prefill":
+        specs["tokens"] = jax.ShapeDtypeStruct((B, S), i32)
+    else:  # decode: one new token against a cache of S
+        specs["tokens"] = jax.ShapeDtypeStruct((B, 1), i32)
+        specs["positions"] = jax.ShapeDtypeStruct((B,), i32)
+    if cfg.encdec is not None:
+        e = cfg.encdec
+        specs["frames"] = jax.ShapeDtypeStruct(
+            (B, e.n_frames, e.frame_dim), jnp.bfloat16)
+    if cfg.vision is not None:
+        v = cfg.vision
+        specs["patches"] = jax.ShapeDtypeStruct(
+            (B, v.n_patches, v.vision_dim), jnp.bfloat16)
+    return specs

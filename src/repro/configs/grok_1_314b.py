@@ -1,0 +1,22 @@
+"""Grok-1 314B: 64L d=6144 48H (GQA kv=8) d_ff=32768, 8 experts top-2.
+[hf:xai-org/grok-1; unverified]"""
+from repro.configs.base import AMCConfig, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="grok-1-314b",
+    family="moe",
+    n_layers=64,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=32768,
+    vocab=131072,
+    head_dim=128,
+    act="swiglu",                  # grok's MoE MLP is gated (3-matrix geglu
+                                   # form) -> ~314B total params
+    # 8 experts do not divide the 16-way model axis -> TP mode: the expert
+    # hidden dim (32768/16=2048) is sharded instead (see DESIGN.md SS4).
+    moe=MoEConfig(n_experts=8, top_k=2, capacity_factor=1.25, sharding="tp"),
+    amc=AMCConfig(weight_mode="dual", kv_mode="int8"),
+    source="hf:xai-org/grok-1",
+)

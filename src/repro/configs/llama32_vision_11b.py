@@ -1,0 +1,23 @@
+"""Llama-3.2-11B-Vision backbone: 40L (32 self + 8 cross-attn) d=4096 32H
+(GQA kv=8) d_ff=14336 vocab=128256; vision frontend STUB (input_specs
+provides projected patch embeddings). [hf:meta-llama/Llama-3.2-11B-Vision;
+unverified]"""
+from repro.configs.base import AMCConfig, ModelConfig, VisionConfig
+
+CONFIG = ModelConfig(
+    name="llama-3.2-vision-11b",
+    family="vlm",
+    n_layers=40,                   # total: 8 macro-blocks of (4 self + 1 cross)
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    head_dim=128,
+    rope_theta=5e5,
+    act="swiglu",
+    vision=VisionConfig(cross_attn_every=5, n_cross_layers=8,
+                        n_patches=1601, vision_dim=4096),
+    amc=AMCConfig(weight_mode="dual", kv_mode="int4"),
+    source="hf:meta-llama/Llama-3.2-11B-Vision",
+)

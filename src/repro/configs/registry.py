@@ -1,0 +1,43 @@
+"""Registry of all assigned architectures and shapes."""
+from __future__ import annotations
+
+from repro.configs import (grok_1_314b, granite_3_2b, llama32_vision_11b,
+                           mamba2_130m, minicpm_2b, minitron_8b,
+                           qwen15_0_5b, qwen3_moe_30b_a3b,
+                           recurrentgemma_9b, whisper_tiny)
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig, cell_applicable
+
+ARCHS: dict[str, ModelConfig] = {
+    c.name: c for c in [
+        qwen3_moe_30b_a3b.CONFIG,
+        grok_1_314b.CONFIG,
+        whisper_tiny.CONFIG,
+        minitron_8b.CONFIG,
+        granite_3_2b.CONFIG,
+        qwen15_0_5b.CONFIG,
+        minicpm_2b.CONFIG,
+        llama32_vision_11b.CONFIG,
+        mamba2_130m.CONFIG,
+        recurrentgemma_9b.CONFIG,
+    ]
+}
+
+
+def get_arch(name: str) -> ModelConfig:
+    if name not in ARCHS:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(ARCHS)}")
+    return ARCHS[name]
+
+
+def get_shape(name: str) -> ShapeConfig:
+    if name not in SHAPES:
+        raise KeyError(f"unknown shape {name!r}; known: {sorted(SHAPES)}")
+    return SHAPES[name]
+
+
+def all_cells():
+    """Yield every (arch, shape, applicable, skip_reason) cell — 40 total."""
+    for aname, cfg in ARCHS.items():
+        for sname, shape in SHAPES.items():
+            ok, reason = cell_applicable(cfg, shape)
+            yield cfg, shape, ok, reason

@@ -1,0 +1,20 @@
+"""Whisper-tiny: 4L enc + 4L dec, d=384 6H d_ff=1536 vocab=51865; enc-dec
+with conv frontend STUB (input_specs provides precomputed frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.configs.base import AMCConfig, EncDecConfig, ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,                    # decoder layers
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab=51865,                   # padded to 51968 for 16-way vocab sharding
+    act="gelu",
+    rope_theta=0.0,                # whisper: learned positions, no RoPE
+    encdec=EncDecConfig(n_encoder_layers=4, n_frames=1500, frame_dim=384),
+    amc=AMCConfig(weight_mode="ternary", kv_mode="int8"),
+    source="arXiv:2212.04356",
+)

@@ -1,0 +1,13 @@
+"""Core AMC (Augmented Memory Computing) library.
+
+The paper's contribution — mode-switchable memory that stores >1 logical
+datum per physical word, with retention/refresh and FILO access discipline —
+as composable JAX modules.
+"""
+from repro.core.amc import AugmentedStore, Mode, FILOViolation, RetentionExpired
+from repro.core.retention import LeakageModel, RefreshPolicy
+
+__all__ = [
+    "AugmentedStore", "Mode", "FILOViolation", "RetentionExpired",
+    "LeakageModel", "RefreshPolicy",
+]

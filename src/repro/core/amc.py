@@ -1,0 +1,220 @@
+"""AugmentedStore — the paper's mode-switchable augmented memory, as a
+framework-level buffer abstraction.
+
+A store owns ONE physical allocation and operates in one of three modes
+(switchable at runtime, per store — the software analogue of the paper's
+per-sub-array mode configuration):
+
+  NORMAL           dense bf16, one value per 16-bit word (the 6T mode)
+  AUGMENTED_DUAL   uint8 dual-plane: static int4 + dynamic int4 (8T mode)
+  AUGMENTED_TERNARY packed trits, 1.6 or 2 bits/value (7T mode)
+
+The host-side LEDGER enforces the paper's access discipline:
+  * a static-plane write/read runs through the dynamic node -> it DESTROYS
+    the dynamic plane; FILO ordering (static first-in, last-out) is required
+    while dynamic data is live, and violations raise `FILOViolation` unless
+    `force=True` (in which case the dynamic plane is really zeroed — the
+    physics, not just the bookkeeping).
+  * every dynamic write is stamped; `RefreshPolicy` bounds its validity
+    window and `refresh()` re-materializes it from the master.
+
+Inside jit-compiled steps the raw functional ops (core.dual_plane,
+core.ternary) are used directly; AugmentedStore is the engine/trainer-level
+owner that tracks modes, validity and capacity accounting.
+"""
+from __future__ import annotations
+
+import enum
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import dual_plane as dp
+from repro.core import ternary
+from repro.core.retention import RefreshPolicy
+
+
+class Mode(enum.Enum):
+    NORMAL = "normal"
+    AUGMENTED_DUAL = "augmented_dual"
+    AUGMENTED_TERNARY = "augmented_ternary"
+
+
+class FILOViolation(RuntimeError):
+    """Static-plane access while dynamic data is live (paper SS.II-B)."""
+
+
+class RetentionExpired(RuntimeError):
+    """Dynamic plane read past its retention window without refresh."""
+
+
+BITS_PER_VALUE = {
+    Mode.NORMAL: 16.0,
+    Mode.AUGMENTED_DUAL: 4.0,     # two int4 values per byte
+    Mode.AUGMENTED_TERNARY: 1.6,  # base-3, 5 trits/byte
+}
+
+
+class AugmentedStore:
+    def __init__(self, shape, *, retention_steps: int = 4,
+                 ternary_fmt: str = "base3"):
+        self.shape = tuple(shape)
+        self.mode = Mode.NORMAL
+        self.ternary_fmt = ternary_fmt
+        self._dense: Optional[jax.Array] = jnp.zeros(self.shape, jnp.bfloat16)
+        self._dual: Optional[dp.DualPlane] = None
+        self._tern_packed = None
+        self._tern_scale = None
+        self._dynamic_live = False
+        self._static_written = False
+        self._step = 0
+        self.policy = RefreshPolicy(retention_steps=retention_steps)
+        self.stats = {"refreshes": 0, "filo_faults": 0, "mode_switches": 0}
+
+    # -- mode switching (the WL/SL reconfiguration of the paper) ------------
+
+    def set_mode(self, mode: Mode) -> None:
+        if mode == self.mode:
+            return
+        if self._dynamic_live:
+            raise FILOViolation(
+                "mode switch while dynamic plane is live; drain first")
+        self.stats["mode_switches"] += 1
+        if mode == Mode.NORMAL:
+            self._dense = self.read_static()
+            self._dual = None
+            self._tern_packed = None
+        elif mode == Mode.AUGMENTED_DUAL:
+            master = self._materialize_master()
+            self._dual = dp.write_static(dp.alloc(self.shape), master)
+            self._dense = None
+            self._tern_packed = None
+        elif mode == Mode.AUGMENTED_TERNARY:
+            master = self._materialize_master()
+            t, scale = ternary.ternarize(master)
+            if self.ternary_fmt == "base3":
+                self._tern_packed = ternary.pack_ternary_base3(t)
+            else:
+                self._tern_packed = ternary.pack_ternary_2bit(t)
+            self._tern_scale = scale
+            self._dense = None
+            self._dual = None
+        self.mode = mode
+        self._static_written = True
+
+    def _materialize_master(self) -> jax.Array:
+        if self._dense is not None:
+            return self._dense
+        return self.read_static()
+
+    # -- static plane --------------------------------------------------------
+
+    def write_static(self, x: jax.Array, *, force: bool = False) -> None:
+        self._guard_filo(force)
+        if self.mode == Mode.NORMAL:
+            self._dense = x.astype(jnp.bfloat16)
+        elif self.mode == Mode.AUGMENTED_DUAL:
+            base = self._dual if self._dual is not None else dp.alloc(self.shape)
+            self._dual = dp.write_static(base, x)  # zeroes the dynamic nibble
+        else:
+            t, scale = ternary.ternarize(x)
+            if self.ternary_fmt == "base3":
+                self._tern_packed = ternary.pack_ternary_base3(t)
+            else:
+                self._tern_packed = ternary.pack_ternary_2bit(t)
+            self._tern_scale = scale
+        self._static_written = True
+        self._dynamic_live = False
+
+    def read_static(self, *, force: bool = False) -> jax.Array:
+        if self.mode == Mode.AUGMENTED_DUAL:
+            # the SRAM read path runs through the dynamic node (paper fig. 1)
+            self._guard_filo(force)
+        if self.mode == Mode.NORMAL:
+            return self._dense
+        if self.mode == Mode.AUGMENTED_DUAL:
+            return dp.read_static(self._dual)
+        k = self.shape[0]
+        if self.ternary_fmt == "base3":
+            t = ternary.unpack_ternary_base3(self._tern_packed, k)
+        else:
+            t = ternary.unpack_ternary_2bit(self._tern_packed, k)
+        return ternary.ternary_dequant(t, self._tern_scale)
+
+    def _guard_filo(self, force: bool) -> None:
+        if self._dynamic_live:
+            if not force:
+                self.stats["filo_faults"] += 1
+                raise FILOViolation(
+                    "static access while dynamic plane live (FILO: drain the "
+                    "dynamic plane first, or pass force=True to clobber it)")
+            # the physics: the access destroys the dynamic bit
+            if self._dual is not None:
+                hi = jnp.bitwise_and(self._dual.buf, jnp.uint8(0xF0))
+                self._dual = dp.DualPlane(hi, self._dual.static_scale,
+                                          self._dual.dynamic_scale)
+            self._dynamic_live = False
+
+    # -- dynamic plane (AUGMENTED_DUAL only) ---------------------------------
+
+    def push_dynamic(self, x: jax.Array, *, stochastic=False, key=None) -> None:
+        if self.mode != Mode.AUGMENTED_DUAL:
+            raise RuntimeError("dynamic plane exists only in AUGMENTED_DUAL")
+        self._dual = dp.write_dynamic(self._dual, x, stochastic=stochastic,
+                                      key=key)
+        self._dynamic_live = True
+        self.policy.stamp(self._step)
+
+    def pop_dynamic(self) -> jax.Array:
+        """Read and drain the dynamic plane (the last-out of FILO)."""
+        if not self._dynamic_live:
+            raise RuntimeError("no live dynamic data")
+        if self.policy.needs_refresh(self._step):
+            raise RetentionExpired(
+                f"dynamic plane expired at step {self.policy.expires_at()}, "
+                f"now {self._step}; refresh() from master first")
+        out = dp.read_dynamic(self._dual)
+        self._dynamic_live = False
+        return out
+
+    def peek_dynamic(self) -> jax.Array:
+        if self.policy.needs_refresh(self._step):
+            raise RetentionExpired("dynamic plane expired")
+        return dp.read_dynamic(self._dual)
+
+    def refresh(self, master: jax.Array) -> None:
+        """DRAM-style refresh: re-write the dynamic plane from its master."""
+        if self.mode != Mode.AUGMENTED_DUAL or not self._dynamic_live:
+            return
+        self._dual = dp.write_dynamic(self._dual, master)
+        self.policy.stamp(self._step)
+        self.stats["refreshes"] += 1
+
+    # -- clock / accounting ---------------------------------------------------
+
+    def tick(self, n: int = 1) -> None:
+        self._step += n
+
+    @property
+    def dynamic_live(self) -> bool:
+        return self._dynamic_live
+
+    def bits_per_value(self) -> float:
+        if self.mode == Mode.AUGMENTED_TERNARY and self.ternary_fmt == "2bit":
+            return 2.0
+        return BITS_PER_VALUE[self.mode]
+
+    def capacity_factor(self) -> float:
+        """Storage augmentation vs NORMAL mode (values per physical bit)."""
+        return BITS_PER_VALUE[Mode.NORMAL] / self.bits_per_value()
+
+    def physical_bytes(self) -> int:
+        import numpy as np
+        n = int(np.prod(self.shape))
+        if self.mode == Mode.NORMAL:
+            return 2 * n
+        if self.mode == Mode.AUGMENTED_DUAL:
+            return n  # one byte holds static+dynamic for one logical index
+        per = 5 if self.ternary_fmt == "base3" else 4
+        return (n + per - 1) // per

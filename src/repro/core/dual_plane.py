@@ -1,0 +1,86 @@
+"""Dual-plane storage — the 8T dual-bit augmented cell, TPU-native.
+
+One physical uint8 buffer stores two logical int4 tensors:
+  * the STATIC plane (high nibble) — written rarely, long-lived.  In the
+    paper this is the SRAM bit (nodes Vx/Vy); here it holds e.g. int4
+    weights.
+  * the DYNAMIC plane (low nibble) — streamed, short-lived, lossy.  In the
+    paper this is the DRAM bit on node Vz; here it holds e.g. streamed
+    activations or KV entries.
+
+The paper's central hazard is preserved: the SRAM access path runs through
+the dynamic node, so a static-plane (re)write CLOBBERS the dynamic plane.
+`write_static` therefore zeroes the low nibble, and the `AugmentedStore`
+ledger (core/amc.py) enforces the FILO discipline around it.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+class DualPlane(NamedTuple):
+    """The physical buffer plus per-plane scales ("reference voltages")."""
+    buf: jax.Array           # uint8, shape S
+    static_scale: jax.Array  # broadcastable to S
+    dynamic_scale: jax.Array # broadcastable to S
+
+    @property
+    def shape(self):
+        return self.buf.shape
+
+
+def alloc(shape, static_scale=None, dynamic_scale=None) -> DualPlane:
+    one = jnp.ones((), jnp.float32)
+    return DualPlane(
+        buf=jnp.zeros(shape, jnp.uint8),
+        static_scale=one if static_scale is None else static_scale,
+        dynamic_scale=one if dynamic_scale is None else dynamic_scale,
+    )
+
+
+def write_static(dp: DualPlane, x: jax.Array, axis=0) -> DualPlane:
+    """Quantize `x` to int4 and write the static plane.
+
+    DESTROYS the dynamic plane (low nibble zeroed) — the SRAM write drives
+    BL/BLB through the dynamic node, exactly as in the paper.  Callers must
+    go through AugmentedStore, which enforces the FILO ledger.
+    """
+    q, scale = quant.quantize_int4(x, axis=axis)
+    buf = quant.pack_int4_pair(q, jnp.zeros_like(q))
+    return DualPlane(buf=buf, static_scale=scale,
+                     dynamic_scale=dp.dynamic_scale)
+
+
+def write_dynamic(dp: DualPlane, x: jax.Array, axis=-1,
+                  stochastic: bool = False, key=None) -> DualPlane:
+    """Quantize `x` to int4 and write the dynamic plane, preserving static."""
+    q, scale = quant.quantize_int4(x, axis=axis, stochastic=stochastic,
+                                   key=key)
+    hi = jnp.bitwise_and(dp.buf, jnp.uint8(0xF0))
+    lo = jnp.bitwise_and(q.astype(jnp.uint8), jnp.uint8(0x0F))
+    return DualPlane(buf=jnp.bitwise_or(hi, lo),
+                     static_scale=dp.static_scale, dynamic_scale=scale)
+
+
+def read_static(dp: DualPlane, dtype=jnp.bfloat16) -> jax.Array:
+    return quant.dequantize(quant.unpack_int4_hi(dp.buf), dp.static_scale,
+                            dtype)
+
+
+def read_dynamic(dp: DualPlane, dtype=jnp.bfloat16) -> jax.Array:
+    return quant.dequantize(quant.unpack_int4_lo(dp.buf), dp.dynamic_scale,
+                            dtype)
+
+
+def read_static_q(dp: DualPlane) -> jax.Array:
+    """Raw int4 (as int8) static plane — for kernels that compute packed."""
+    return quant.unpack_int4_hi(dp.buf)
+
+
+def read_dynamic_q(dp: DualPlane) -> jax.Array:
+    return quant.unpack_int4_lo(dp.buf)

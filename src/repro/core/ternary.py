@@ -1,0 +1,129 @@
+"""Ternary storage — the 7T augmented cell, TPU-native.
+
+The paper's 7T cell stores one trit {-1, 0, +1} per cell in Augmented mode
+(vs. two 6T cells per trit conventionally). Here a trit costs 1.6 bits
+(base-3 packing, 5 trits/byte) or 2 bits (shift packing, 4 trits/byte)
+instead of 16 bits (bf16 Normal mode): a 10x / 8x capacity augmentation.
+
+Ternarization follows TWN (Li & Liu 2016), which the paper's TNN references
+build on: w_t = scale * sign(w) * 1{|w| > Delta}, Delta = 0.7 * E|w|,
+per-output-channel scale. `ternarize_ste` provides the straight-through
+estimator used for error-aware training (paper SS.IV: error-aware training
+relaxes retention requirements).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+_POW3 = (1, 3, 9, 27, 81)  # 3^0..3^4 ; 5 trits/byte since 3^5 = 243 <= 255
+TRITS_PER_BYTE_B3 = 5
+TRITS_PER_BYTE_2B = 4
+
+
+# ---------------------------------------------------------------------------
+# Ternarization (TWN)
+# ---------------------------------------------------------------------------
+
+def ternarize(w: jax.Array, axis=0):
+    """TWN ternarization. Returns (t in {-1,0,1} int8, scale per channel).
+
+    `axis` is the reduction axis (input dim for a (in, out) weight); the
+    scale is per remaining (output) channel.
+    """
+    delta = 0.7 * jnp.mean(jnp.abs(w), axis=axis, keepdims=True)
+    mask = (jnp.abs(w) > delta)
+    t = jnp.sign(w) * mask
+    # optimal scale: mean |w| over the kept entries
+    denom = jnp.maximum(jnp.sum(mask, axis=axis, keepdims=True), 1)
+    scale = jnp.sum(jnp.abs(w) * mask, axis=axis, keepdims=True) / denom
+    return t.astype(jnp.int8), scale.astype(jnp.float32)
+
+
+def ternary_dequant(t: jax.Array, scale: jax.Array,
+                    dtype=jnp.bfloat16) -> jax.Array:
+    return (t.astype(jnp.float32) * scale).astype(dtype)
+
+
+@jax.custom_vjp
+def ternarize_ste(w: jax.Array) -> jax.Array:
+    """Forward: dequantized ternary weights. Backward: identity (STE)."""
+    t, scale = ternarize(w)
+    return ternary_dequant(t, scale, dtype=w.dtype)
+
+
+def _ste_fwd(w):
+    return ternarize_ste(w), None
+
+
+def _ste_bwd(_, g):
+    return (g,)
+
+
+ternarize_ste.defvjp(_ste_fwd, _ste_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Base-3 packing: 5 trits per byte (1.6 bits/trit) — densest form.
+# ---------------------------------------------------------------------------
+
+def pack_ternary_base3(t: jax.Array) -> jax.Array:
+    """Pack trits in {-1,0,1} along the FIRST axis, 5 per byte.
+
+    t: (K, ...) int8 with K % 5 == 0  ->  (K//5, ...) uint8.
+    First-axis packing keeps the (in, out) weight layout contiguous in the
+    output dimension, which is what the matmul kernel tiles over.
+    """
+    k = t.shape[0]
+    if k % TRITS_PER_BYTE_B3:
+        raise ValueError(f"leading dim {k} not a multiple of 5")
+    u = (t + 1).astype(jnp.uint8)  # {-1,0,1} -> {0,1,2}
+    u = u.reshape((k // TRITS_PER_BYTE_B3, TRITS_PER_BYTE_B3) + t.shape[1:])
+    out = jnp.zeros(u.shape[:1] + u.shape[2:], dtype=jnp.uint8)
+    for i, p in enumerate(_POW3):
+        out = out + u[:, i] * jnp.uint8(p)
+    return out
+
+
+def unpack_ternary_base3(packed: jax.Array, k: int) -> jax.Array:
+    """Inverse of pack_ternary_base3: (K//5, ...) uint8 -> (K, ...) int8."""
+    rem = packed.astype(jnp.int32)
+    digs = []
+    for _ in range(TRITS_PER_BYTE_B3):
+        digs.append((rem % 3).astype(jnp.int8) - 1)
+        rem = rem // 3
+    u = jnp.stack(digs, axis=1)  # (K//5, 5, ...)
+    return u.reshape((k,) + packed.shape[1:])
+
+
+# ---------------------------------------------------------------------------
+# 2-bit packing: 4 trits per byte — cheaper unpack (shift/mask only),
+# preferred inside MXU-adjacent kernels where the base-3 divmod chain
+# would serialize the VPU.
+# ---------------------------------------------------------------------------
+
+def pack_ternary_2bit(t: jax.Array) -> jax.Array:
+    """Pack trits along the FIRST axis, 4 per byte, 2 bits each ({0,1,2})."""
+    k = t.shape[0]
+    if k % TRITS_PER_BYTE_2B:
+        raise ValueError(f"leading dim {k} not a multiple of 4")
+    u = (t + 1).astype(jnp.uint8)
+    u = u.reshape((k // TRITS_PER_BYTE_2B, TRITS_PER_BYTE_2B) + t.shape[1:])
+    out = jnp.zeros(u.shape[:1] + u.shape[2:], dtype=jnp.uint8)
+    for i in range(TRITS_PER_BYTE_2B):
+        out = jnp.bitwise_or(out, jnp.left_shift(u[:, i], 2 * i))
+    return out
+
+
+def unpack_ternary_2bit(packed: jax.Array, k: int) -> jax.Array:
+    digs = []
+    for i in range(TRITS_PER_BYTE_2B):
+        d = jnp.bitwise_and(jnp.right_shift(packed, 2 * i), jnp.uint8(0x3))
+        digs.append(d.astype(jnp.int8) - 1)
+    u = jnp.stack(digs, axis=1)
+    return u.reshape((k,) + packed.shape[1:])
+
+
+def bits_per_value(fmt: str) -> float:
+    return {"base3": 1.6, "2bit": 2.0, "bf16": 16.0, "int8": 8.0,
+            "int4": 4.0}[fmt]

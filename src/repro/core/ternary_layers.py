@@ -1,0 +1,73 @@
+"""Ternary (error-aware-trained) layers — the 7T cell's end application.
+
+The paper motivates the 7T ternary cell with TNN accelerators and notes
+(SS.IV) that error-aware training of the network lets the application
+tolerate the augmented storage.  `ternary_dense` is that co-design: the
+forward pass uses the ternarized weights (what the augmented memory will
+actually hold at serving time), the backward pass flows straight-through to
+the fp master, so the network learns to be accurate *under* the augmented
+representation.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ternary
+
+
+class TernaryDenseParams(NamedTuple):
+    w: jax.Array  # fp32/bf16 master weights (in_dim, out_dim)
+    b: jax.Array | None
+
+
+def init_ternary_dense(key, in_dim: int, out_dim: int, bias: bool = True,
+                       dtype=jnp.float32) -> TernaryDenseParams:
+    w = jax.random.normal(key, (in_dim, out_dim), dtype) / jnp.sqrt(in_dim)
+    b = jnp.zeros((out_dim,), dtype) if bias else None
+    return TernaryDenseParams(w, b)
+
+
+def ternary_dense(params: TernaryDenseParams, x: jax.Array,
+                  train: bool = True) -> jax.Array:
+    """y = x @ ternarize(w) + b, with STE gradients to the master in train."""
+    if train:
+        wq = ternary.ternarize_ste(params.w)
+    else:
+        t, scale = ternary.ternarize(params.w)
+        wq = ternary.ternary_dequant(t, scale, dtype=params.w.dtype)
+    y = x @ wq.astype(x.dtype)
+    if params.b is not None:
+        y = y + params.b.astype(x.dtype)
+    return y
+
+
+class FrozenTernaryDense(NamedTuple):
+    """Serving-time form: weights live packed in augmented memory."""
+    packed: jax.Array    # uint8 (in_dim//5, out_dim) base-3 packed
+    scale: jax.Array     # (1, out_dim)
+    b: jax.Array | None
+    in_dim: int
+
+
+def freeze_ternary_dense(params: TernaryDenseParams,
+                         fmt: str = "base3") -> FrozenTernaryDense:
+    t, scale = ternary.ternarize(params.w)
+    pack = (ternary.pack_ternary_base3 if fmt == "base3"
+            else ternary.pack_ternary_2bit)
+    return FrozenTernaryDense(pack(t), scale, params.b, params.w.shape[0])
+
+
+def frozen_ternary_dense_ref(fr: FrozenTernaryDense, x: jax.Array,
+                             fmt: str = "base3") -> jax.Array:
+    """Pure-jnp serving path (the kernels/ternary_matmul oracle uses this)."""
+    unpack = (ternary.unpack_ternary_base3 if fmt == "base3"
+              else ternary.unpack_ternary_2bit)
+    t = unpack(fr.packed, fr.in_dim)
+    w = ternary.ternary_dequant(t, fr.scale, dtype=x.dtype)
+    y = x @ w
+    if fr.b is not None:
+        y = y + fr.b.astype(x.dtype)
+    return y

@@ -1,0 +1,3 @@
+from repro.data.pipeline import PrefetchIterator, SyntheticLM
+
+__all__ = ["PrefetchIterator", "SyntheticLM"]

@@ -1,0 +1,6 @@
+from repro.distributed.sharding import Rules, constrain
+from repro.distributed.fault import (SimulatedFailure, StragglerMonitor,
+                                     Supervisor)
+
+__all__ = ["Rules", "constrain", "SimulatedFailure", "StragglerMonitor",
+           "Supervisor"]

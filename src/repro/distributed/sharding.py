@@ -1,0 +1,130 @@
+"""Logical-axis sharding rules (MaxText-style), resolved per (config, mesh).
+
+Every parameter/activation dimension carries a LOGICAL axis name; `Rules`
+maps logical names to physical mesh axes, degrading gracefully (replicate)
+when a dimension does not divide the mesh axis — e.g. minicpm's 36 heads and
+whisper's 6 heads cannot be tensor-parallel 16 ways, so `heads` resolves to
+None for those archs and the FFN still gets TP via `mlp`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+# Logical axis vocabulary. Values are the *preferred* physical axes;
+# Rules.resolve() drops entries that don't divide.
+DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
+    "batch": ("pod", "data"),     # pure DP
+    "seq": (),                    # unsharded by default
+    "seq_sp": ("model",),         # sequence parallelism (MoE dispatch, cache)
+    "embed": ("data",),           # FSDP: weight d_model dim over data axis
+    "heads": ("model",),          # Megatron TP
+    "kv_heads": ("model",),
+    "mlp": ("model",),            # d_ff TP
+    "experts": ("model",),        # EP
+    "vocab": ("model",),
+    "lru": ("model",),            # RG-LRU width / SSM inner dim
+    "cache_seq": ("model",),      # decode KV cache sequence sharding (SP)
+    "cache_batch": ("pod", "data"),
+    "frames": (),                 # encoder frames / vision patches
+    "replicated": (),
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Rules:
+    mesh: Mesh
+    sizes: dict          # logical axis -> dim size it must divide (0=any)
+    table: dict
+
+    @staticmethod
+    def make(mesh: Mesh, cfg=None, shape=None,
+             overrides: Optional[dict] = None) -> "Rules":
+        sizes = {}
+        if cfg is not None:
+            sizes = {
+                "heads": cfg.n_heads,
+                "kv_heads": cfg.n_kv_heads,
+                "mlp": cfg.d_ff,
+                "embed": cfg.d_model,
+                "vocab": cfg.vocab_padded,
+                "experts": cfg.moe.n_experts if cfg.moe else 0,
+                "lru": (cfg.hybrid.lru_width if cfg.hybrid
+                        else (cfg.ssm.expand * cfg.d_model if cfg.ssm else 0)),
+            }
+            if cfg.moe and cfg.moe.sharding == "tp":
+                # experts don't divide the model axis -> TP the expert FFN
+                sizes["experts"] = 1  # force replication of the expert axis
+        if shape is not None:
+            sizes["batch"] = shape.global_batch
+            sizes["cache_batch"] = shape.global_batch
+            sizes["seq_sp"] = shape.seq_len
+            sizes["cache_seq"] = shape.seq_len
+        if cfg is not None:
+            tp = mesh.shape.get("model", 1)
+            if cfg.n_kv_heads and tp > 1 and cfg.n_kv_heads % tp == 0:
+                # KV heads take the model axis -> the cache seq dim must
+                # not double-claim it (SP on the cache is the fallback for
+                # kv_heads < tp only)
+                sizes["cache_seq"] = 1
+        table = dict(DEFAULT_RULES)
+        if shape is not None and shape.kind != "train" and cfg is not None:
+            # Inference profile: no optimizer state -> FSDP weight sharding
+            # buys nothing and costs an all-gather per layer per step; keep
+            # weights TP-sharded only (beyond-paper optimization, see
+            # EXPERIMENTS.md SSPerf cell C iteration 2) — unless the
+            # TP-sharded weights alone would blow the 16 GiB HBM budget
+            # (grok-1: 316B*2B/16 = 39.5 GiB -> keep FSDP for serving).
+            tp = mesh.shape.get("model", 1)
+            if cfg.param_count() * 2 / tp < 8 * 1024**3:
+                table["embed"] = ()
+        if overrides:
+            table.update(overrides)
+        return Rules(mesh, sizes, table)
+
+    def resolve(self, logical: Optional[str]) -> Optional[Tuple[str, ...]]:
+        """Logical axis -> tuple of mesh axes (or None = replicated)."""
+        if logical is None:
+            return None
+        axes = [a for a in self.table.get(logical, ()) if a in self.mesh.shape]
+        if not axes:
+            return None
+        total = 1
+        for a in axes:
+            total *= self.mesh.shape[a]
+        need = self.sizes.get(logical, 0)
+        if need and need % total != 0:
+            # try progressively smaller prefixes before replicating
+            for cut in range(len(axes) - 1, 0, -1):
+                t = 1
+                for a in axes[:cut]:
+                    t *= self.mesh.shape[a]
+                if need % t == 0:
+                    return tuple(axes[:cut])
+            return None
+        return tuple(axes) if axes else None
+
+    def pspec(self, *logical_axes) -> P:
+        return P(*[self.resolve(a) for a in logical_axes])
+
+    def sharding(self, *logical_axes) -> NamedSharding:
+        return NamedSharding(self.mesh, self.pspec(*logical_axes))
+
+
+def constrain(x: jax.Array, rules: Optional[Rules], *logical_axes) -> jax.Array:
+    """with_sharding_constraint by logical axes (no-op without rules)."""
+    if rules is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, rules.sharding(*logical_axes))
+
+
+def tree_pspecs(abstract_tree, rules: Rules):
+    """Map a tree of PSpec leaves (configs side) to PartitionSpecs."""
+    from repro.models.params import PSpec  # local import to avoid cycle
+    return jax.tree.map(
+        lambda l: rules.pspec(*l.axes) if isinstance(l, PSpec) else P(),
+        abstract_tree, is_leaf=lambda l: isinstance(l, PSpec))

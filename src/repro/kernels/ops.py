@@ -1,0 +1,58 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode — the kernel
+body runs in Python for correctness validation; on TPU they compile to
+Mosaic. `interpret=None` auto-detects.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.dual_plane_matmul import dual_plane_matmul_pallas
+from repro.kernels.packed_kv_attention import packed_kv_attention_pallas
+from repro.kernels.ternary_matmul import ternary_matmul_pallas
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret",
+                                             "use_ref"))
+def ternary_matmul(x, w_packed, scale, *, bm=128, bk=512, bn=256,
+                   interpret=None, use_ref=False):
+    """y = x @ unpack(w_packed) * scale — weights stay 2 bits/value in HBM."""
+    if use_ref:
+        return ref.ternary_matmul_ref(x, w_packed, scale)
+    return ternary_matmul_pallas(x, w_packed, scale, bm=bm, bk=bk, bn=bn,
+                                 interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bm", "bk", "bn", "interpret",
+                                             "use_ref"))
+def dual_plane_matmul(x, buf, hi_scale, lo_scale, *, bm=128, bk=256, bn=256,
+                      interpret=None, use_ref=False):
+    """(y_hi, y_lo) = x @ both int4 planes of ONE uint8 buffer."""
+    if use_ref:
+        return ref.dual_plane_matmul_ref(x, buf, hi_scale, lo_scale)
+    return dual_plane_matmul_pallas(x, buf, hi_scale, lo_scale, bm=bm,
+                                    bk=bk, bn=bn,
+                                    interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bs", "interpret", "use_ref"))
+def packed_kv_attention(q, k_packed, v_packed, k_scale, v_scale, lengths, *,
+                        bs=512, interpret=None, use_ref=False):
+    """Flash-decode over an int4-packed KV cache (never dequantized in HBM)."""
+    if use_ref:
+        return ref.packed_kv_attention_ref(q, k_packed, v_packed, k_scale,
+                                           v_scale, lengths)
+    return packed_kv_attention_pallas(q, k_packed, v_packed, k_scale,
+                                      v_scale, lengths, bs=bs,
+                                      interpret=_auto_interpret(interpret))

@@ -1,0 +1,117 @@
+"""Pallas TPU kernel: flash-decode attention over an int4-packed KV cache
+(the serving engine's augmented dynamic plane).
+
+Single-token GQA decode: q (B, KV, Hg, D) attends to a packed cache
+k/v (B, S, KV, D//2) uint8 + per-(token, head) scales (B, S, KV).
+
+The kernel never materializes the dequantized cache in HBM:
+  * packed K blocks stream HBM->VMEM; scores = (q . k_int) * k_scale —
+    the dequant scale is applied to score COLUMNS, not to K elements
+    (D-fold cheaper than dequantizing K);
+  * online softmax (running max m, denominator l, accumulator acc in VMEM
+    scratch across sequence blocks — the innermost grid dim);
+  * V blocks likewise stay int4: acc += (p * v_scale) @ v_int.
+
+Memory term: S*D bytes/2 per head instead of S*D*2 (bf16) — 4x less HBM
+traffic for the decode bottleneck, which is exactly the paper's augmented
+capacity claim applied to the KV working set.
+
+Grid: (B, KV, S//bs); block (bs, D//2) packed KV in VMEM — with bs = 512,
+D = 128: 32 KiB packed KV + scratch (Hg x D acc, Hg stats) « VMEM.
+
+The causal/validity mask is handled via the `length` operand (number of
+valid cache slots per batch row); invalid columns get -inf scores.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BS = 512
+NEG_INF = -1e30
+
+
+def _unpack_int4_pairs(packed: jax.Array) -> jax.Array:
+    """(bs, D//2) uint8 -> (bs, D) bf16 int4 values (interleaved pairs)."""
+    hi = jnp.right_shift(packed.astype(jnp.int8), 4)
+    lo = jnp.right_shift(
+        jnp.left_shift(packed.astype(jnp.uint8), 4).astype(jnp.int8), 4)
+    w = jnp.stack([hi, lo], axis=-1)        # (bs, D//2, 2)
+    return w.reshape(packed.shape[0], -1).astype(jnp.bfloat16)
+
+
+def _kv_attn_kernel(q_ref, k_ref, v_ref, ks_ref, vs_ref, len_ref, o_ref,
+                    acc_ref, m_ref, l_ref, *, bs: int, scale: float):
+    s_step = pl.program_id(2)
+
+    @pl.when(s_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0]                          # (Hg, D) bf16
+    k_int = _unpack_int4_pairs(k_ref[0, 0])  # (bs, D)
+    v_int = _unpack_int4_pairs(v_ref[0, 0])
+    k_scale = ks_ref[0, 0].astype(jnp.float32)  # (bs,)
+    v_scale = vs_ref[0, 0].astype(jnp.float32)
+
+    # scores with column-wise dequant
+    s = jnp.dot(q, k_int.T, preferred_element_type=jnp.float32)  # (Hg, bs)
+    s = s * (k_scale * scale)[None, :]
+    # validity mask (ring caches rely on softmax permutation invariance)
+    valid = (s_step * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+             ) < len_ref[0]
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]                      # (Hg, 1)
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new)                   # (Hg, bs)
+    l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+    pv = (p * v_scale[None, :]).astype(jnp.bfloat16)
+    acc_ref[...] = (acc_ref[...] * alpha
+                    + jnp.dot(pv, v_int, preferred_element_type=jnp.float32))
+    m_ref[...] = m_new
+
+    @pl.when(s_step == pl.num_programs(2) - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).astype(o_ref.dtype)
+
+
+def packed_kv_attention_pallas(q: jax.Array, k_packed: jax.Array,
+                               v_packed: jax.Array, k_scale: jax.Array,
+                               v_scale: jax.Array, lengths: jax.Array, *,
+                               bs: int = DEFAULT_BS,
+                               interpret: bool = False) -> jax.Array:
+    """q: (B, KV, Hg, D) bf16; k/v_packed: (B, KV, S, D//2) uint8;
+    scales: (B, KV, S) bf16; lengths: (B,) int32 (valid slots per row).
+    Returns (B, KV, Hg, D) bf16."""
+    B, KV, Hg, D = q.shape
+    S = k_packed.shape[2]
+    bs = min(bs, S)
+    assert S % bs == 0, (S, bs)
+    scale = 1.0 / (D ** 0.5)
+    grid = (B, KV, S // bs)
+    return pl.pallas_call(
+        functools.partial(_kv_attn_kernel, bs=bs, scale=scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Hg, D), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, bs, D // 2), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs, D // 2), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, bs), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1, 1, bs), lambda b, h, s: (b, h, s)),
+            pl.BlockSpec((1,), lambda b, h, s: (b,)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, Hg, D), lambda b, h, s: (b, h, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, Hg, D), jnp.bfloat16),
+        scratch_shapes=[pltpu.VMEM((Hg, D), jnp.float32),
+                        pltpu.VMEM((Hg, 1), jnp.float32),
+                        pltpu.VMEM((Hg, 1), jnp.float32)],
+        interpret=interpret,
+    )(q, k_packed, v_packed, k_scale, v_scale, lengths)

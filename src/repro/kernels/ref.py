@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every kernel (the ground truth the Pallas kernels
+are swept against in tests/test_kernels_*.py)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant, ternary
+
+
+def ternary_matmul_ref(x: jax.Array, w_packed: jax.Array,
+                       scale: jax.Array, out_dtype=jnp.bfloat16) -> jax.Array:
+    """x (M,K) @ unpack(w_packed (K//4,N)) * scale (1,N)."""
+    K = x.shape[1]
+    t = ternary.unpack_ternary_2bit(w_packed, K)          # (K, N) int8
+    acc = jnp.dot(x.astype(jnp.float32), t.astype(jnp.float32))
+    return (acc * scale).astype(out_dtype)
+
+
+def dual_plane_matmul_ref(x: jax.Array, buf: jax.Array, hi_scale: jax.Array,
+                          lo_scale: jax.Array, out_dtype=jnp.bfloat16):
+    hi = quant.unpack_int4_hi(buf).astype(jnp.float32)
+    lo = quant.unpack_int4_lo(buf).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    return ((xf @ hi * hi_scale).astype(out_dtype),
+            (xf @ lo * lo_scale).astype(out_dtype))
+
+
+def _unpack_pairs_ref(packed: jax.Array) -> jax.Array:
+    hi = quant.unpack_int4_hi(packed)
+    lo = quant.unpack_int4_lo(packed)
+    w = jnp.stack([hi, lo], axis=-1)
+    return w.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
+
+
+def packed_kv_attention_ref(q, k_packed, v_packed, k_scale, v_scale,
+                            lengths) -> jax.Array:
+    """Layouts as the kernel: q (B,KV,Hg,D); kv (B,KV,S,D//2) uint8;
+    scales (B,KV,S); lengths (B,). fp32 softmax, exact."""
+    B, KV, Hg, D = q.shape
+    S = k_packed.shape[2]
+    k = (_unpack_pairs_ref(k_packed).astype(jnp.float32)
+         * k_scale.astype(jnp.float32)[..., None])         # (B,KV,S,D)
+    v = (_unpack_pairs_ref(v_packed).astype(jnp.float32)
+         * v_scale.astype(jnp.float32)[..., None])
+    s = jnp.einsum("bkhd,bksd->bkhs", q.astype(jnp.float32), k) / (D ** 0.5)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]       # (B,S)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkhs,bksd->bkhd", p, v)
+    return o.astype(jnp.bfloat16)

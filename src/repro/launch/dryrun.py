@@ -1,0 +1,250 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell with
+ShapeDtypeStruct inputs (no allocation), then extract the roofline terms
+from the compiled artifact.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch granite-3-2b \
+      --shape train_4k [--multi-pod] [--out results/dryrun]
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+"""
+# The VERY FIRST lines, before any other import (jax locks device count on
+# first init):
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCHS, SHAPES, cell_applicable, get_arch,
+                           get_shape, input_specs)
+from repro.distributed.sharding import Rules
+from repro.launch import mesh as mesh_lib
+from repro.models import model as M
+from repro.models.params import to_shape_dtype
+from repro.optim import adamw
+from repro.train import step as step_lib
+
+COLLECTIVE_RE = re.compile(
+    r"=\s*(\S+?)\[([0-9,]*)\][^=]*?\b"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)",
+)
+
+DTYPE_BYTES = {"f64": 8, "f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4,
+               "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1, "s64": 8,
+               "u64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1}
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum per-device result bytes of every collective op in the HLO."""
+    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
+           "all-to-all": 0, "collective-permute": 0}
+    counts = dict.fromkeys(out, 0)
+    for m in COLLECTIVE_RE.finditer(hlo_text):
+        dt, dims, kind = m.group(1), m.group(2), m.group(3)
+        if dt not in DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        out[kind] += n * DTYPE_BYTES[dt]
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+def build_cell(arch: str, shape_name: str, mesh, settings=None):
+    """Returns (jitted_fn, example_args_shapedtypes) for one cell."""
+    cfg = get_arch(arch)
+    shape = get_shape(shape_name)
+    rules = Rules.make(mesh, cfg, shape)
+    if settings is None:
+        n = cfg.param_count()
+        # accum=4 for the largest models: balances FSDP weight-gather
+        # traffic (proportional to microbatch count) against activation
+        # memory — see EXPERIMENTS.md SSPerf cell B
+        accum = 4 if n > 1e11 else (2 if n > 8e9 else 1)
+        settings = step_lib.TrainSettings(
+            optimizer="amc_adamw" if n > 5e10 else "adamw",
+            grad_accum=accum, q_chunk=1024)
+    ap = M.abstract_params(cfg)
+    p_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           step_lib.param_pspecs(ap, rules),
+                           is_leaf=lambda x: isinstance(x, P))
+    b_specs = input_specs(cfg, shape)
+    b_shard = {k: NamedSharding(mesh, v)
+               for k, v in step_lib.batch_pspecs(cfg, shape, rules).items()}
+    p_abs = to_shape_dtype(ap)
+
+    if shape.kind == "train":
+        oa = step_lib.opt_abstract(ap, settings.optimizer)
+        o_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               step_lib.param_pspecs(oa, rules),
+                               is_leaf=lambda x: isinstance(x, P))
+        o_abs = to_shape_dtype(oa)
+        train_step = step_lib.make_train_step(cfg, settings, rules)
+        state_shard = step_lib.TrainState(
+            p_shard, o_shard, NamedSharding(mesh, P()))
+        state_abs = step_lib.TrainState(
+            p_abs, o_abs, jax.ShapeDtypeStruct((), jnp.int32))
+        fn = jax.jit(train_step,
+                     in_shardings=(state_shard, b_shard),
+                     out_shardings=(state_shard, NamedSharding(mesh, P())),
+                     donate_argnums=(0,))
+        return fn, (state_abs, b_specs)
+
+    if shape.kind == "prefill":
+        prefill = step_lib.make_prefill_step(cfg, settings, rules)
+        c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                               step_lib.cache_pspecs(cfg, shape, rules),
+                               is_leaf=lambda x: isinstance(x, P))
+        logits_shard = NamedSharding(
+            mesh, P(rules.resolve("batch"), None, rules.resolve("vocab")))
+        fn = jax.jit(prefill,
+                     in_shardings=(p_shard, b_shard),
+                     out_shardings=(logits_shard, None))
+        return fn, (p_abs, b_specs)
+
+    # decode
+    decode = step_lib.make_decode_step(cfg, rules)
+    ca = M.abstract_cache(cfg, shape)
+    c_shard = jax.tree.map(lambda s: NamedSharding(mesh, s),
+                           step_lib.param_pspecs(ca, rules),
+                           is_leaf=lambda x: isinstance(x, P))
+    c_abs = to_shape_dtype(ca)
+    logits_shard = NamedSharding(
+        mesh, P(rules.resolve("batch"), None, rules.resolve("vocab")))
+    fn = jax.jit(decode,
+                 in_shardings=(p_shard, c_shard, b_shard),
+                 out_shardings=(logits_shard, c_shard),
+                 donate_argnums=(1,))
+    return fn, (p_abs, c_abs, b_specs)
+
+
+def analyze(compiled, lowered, cfg, shape, mesh) -> dict:
+    from repro.launch.hlo_analysis import analyze_hlo
+    n_dev = mesh.devices.size
+    ma = compiled.memory_analysis()
+    hlo = compiled.as_text()
+    # trip-count-aware analysis (XLA's cost_analysis counts loop bodies once)
+    h = analyze_hlo(hlo)
+    coll = {"bytes": h["collective_bytes"],
+            "counts": h["collective_counts"],
+            "total_bytes": h["collective_total_bytes"]}
+    flops_dev = float(h["flops"])
+    bytes_dev = float(h["bytes_accessed"])
+    bytes_fused_dev = float(h["bytes_fused"])
+    compute_s = flops_dev / mesh_lib.PEAK_BF16_FLOPS
+    memory_s = bytes_dev / mesh_lib.HBM_BW
+    memory_fused_s = bytes_fused_dev / mesh_lib.HBM_BW
+    coll_s = coll["total_bytes"] / mesh_lib.ICI_LINK_BW
+    # MODEL_FLOPS: 6*N*D train / 2*N*D fwd on active non-embedding params
+    model_flops_dev = cfg.model_flops(shape) / n_dev
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": coll_s}
+    dominant = max(terms, key=terms.get)
+    mem_gib = (ma.argument_size_in_bytes + ma.output_size_in_bytes
+               + ma.temp_size_in_bytes) / 2**30
+    return {
+        "arch": cfg.name, "shape": shape.name,
+        "mesh": dict(mesh.shape), "n_devices": int(n_dev),
+        "flops_per_device": flops_dev,
+        "bytes_per_device": bytes_dev,
+        "bytes_fused_per_device": bytes_fused_dev,
+        "collectives": coll,
+        "compute_s": compute_s, "memory_s": memory_s,
+        "memory_fused_s": memory_fused_s,
+        "collective_s": coll_s, "dominant": dominant,
+        "bytes_by_op": h.get("bytes_by_op", {}),
+        "model_flops_per_device": model_flops_dev,
+        "useful_flops_ratio": (model_flops_dev / flops_dev
+                               if flops_dev else 0.0),
+        "roofline_fraction": (compute_s / max(terms.values())
+                              if max(terms.values()) > 0 else 0.0),
+        "memory": {
+            "argument_bytes": ma.argument_size_in_bytes,
+            "output_bytes": ma.output_size_in_bytes,
+            "temp_bytes": ma.temp_size_in_bytes,
+            "total_gib_per_device": mem_gib,
+            "fits_16gib": bool(mem_gib < 16.0),
+        },
+    }
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, out_dir: str,
+             settings=None) -> dict:
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    cfg, shape = get_arch(arch), get_shape(shape_name)
+    ok, reason = cell_applicable(cfg, shape)
+    tag = f"{arch}_{shape_name}_{'multipod' if multi_pod else 'pod'}"
+    if not ok:
+        rec = {"arch": arch, "shape": shape_name, "skipped": True,
+               "reason": reason}
+    else:
+        t0 = time.time()
+        fn, args = build_cell(arch, shape_name, mesh, settings)
+        lowered = fn.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec = analyze(compiled, lowered, cfg, shape, mesh)
+        rec.update({"skipped": False, "lower_s": t1 - t0,
+                    "compile_s": t2 - t1})
+        print(compiled.memory_analysis())
+    os.makedirs(out_dir, exist_ok=True)
+    with open(os.path.join(out_dir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a, s))
+    else:
+        cells.append((args.arch, args.shape))
+
+    failures = []
+    for a, s in cells:
+        try:
+            rec = run_cell(a, s, args.multi_pod, args.out)
+            status = ("SKIP " + rec.get("reason", "")[:40] if rec.get("skipped")
+                      else f"ok dom={rec['dominant']} "
+                           f"comp={rec['compute_s']:.3e}s "
+                           f"mem={rec['memory_s']:.3e}s "
+                           f"coll={rec['collective_s']:.3e}s "
+                           f"hbm={rec['memory']['total_gib_per_device']:.2f}GiB")
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((a, s, str(e)[:200]))
+            status = "FAIL " + str(e)[:120]
+        print(f"[dryrun] {a:24s} {s:12s} {status}", flush=True)
+    if failures:
+        print(f"{len(failures)} FAILURES:")
+        for f in failures:
+            print(" ", f)
+        raise SystemExit(1)
+    print("all cells passed")
+
+
+if __name__ == "__main__":
+    main()

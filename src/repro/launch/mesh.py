@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips.
+Multi-pod:  (2, 16, 16) = ("pod", "data", "model") — 512 chips; the "pod"
+axis carries pure data parallelism (and, optionally, the microbatch
+pipeline of distributed/pipeline.py), with gradient all-reduce across the
+slow inter-pod links — which is where gradient compression applies.
+
+A FUNCTION, not a module constant: importing this module never touches
+jax device state.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> jax.sharding.Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh() -> jax.sharding.Mesh:
+    """Whatever devices exist (CPU smoke tests: 1 device)."""
+    n = len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))
+
+
+# TPU v5e-class hardware constants for the roofline (per chip)
+PEAK_BF16_FLOPS = 197e12        # FLOP/s
+HBM_BW = 819e9                  # bytes/s
+ICI_LINK_BW = 50e9              # bytes/s per link
+HBM_BYTES = 16 * 1024**3        # capacity

@@ -1,0 +1,103 @@
+"""Generate the EXPERIMENTS.md dry-run + roofline tables from the per-cell
+JSON records written by launch/dryrun.py.
+
+  PYTHONPATH=src python -m repro.launch.report --out results/dryrun
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load_records(out_dir: str) -> list[dict]:
+    recs = []
+    for fn in sorted(glob.glob(os.path.join(out_dir, "*.json"))):
+        with open(fn) as f:
+            r = json.load(f)
+        r["_file"] = os.path.basename(fn)
+        r["_multipod"] = fn.endswith("_multipod.json")
+        recs.append(r)
+    return recs
+
+
+def _fmt_s(x: float) -> str:
+    if x == 0:
+        return "0"
+    if x < 1e-3:
+        return f"{x*1e6:.1f}us"
+    if x < 1:
+        return f"{x*1e3:.1f}ms"
+    return f"{x:.2f}s"
+
+
+def dryrun_table(recs: list[dict], multipod: bool) -> str:
+    rows = ["| arch | shape | status | HBM/dev | AG | AR | RS | A2A | CP | coll bytes/dev |",
+            "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["_multipod"] != multipod:
+            continue
+        if r.get("skipped"):
+            rows.append(f"| {r['arch']} | {r['shape']} | SKIP: "
+                        f"{r['reason'][:46]} | – | – | – | – | – | – | – |")
+            continue
+        c = r["collectives"]["counts"]
+        g = lambda k: int(c.get(k, 0))
+        m = r["memory"]
+        fits = "" if m["fits_16gib"] else " ⚠"
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | ok | "
+            f"{m['total_gib_per_device']:.2f}GiB{fits} | "
+            f"{g('all-gather')} | {g('all-reduce')} | {g('reduce-scatter')} | "
+            f"{g('all-to-all')} | {g('collective-permute')} | "
+            f"{r['collectives']['total_bytes']/2**30:.2f}GiB |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs: list[dict]) -> str:
+    rows = ["| arch | shape | compute | memory | memory(fused) | collective "
+            "| dominant | MODEL/HLO flops | roofline frac |",
+            "|---|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["_multipod"] or r.get("skipped"):
+            continue
+        terms = {"compute": r["compute_s"], "memory": r["memory_s"],
+                 "collective": r["collective_s"]}
+        dom = max(terms, key=terms.get)
+        frac = r["compute_s"] / max(max(terms.values()), 1e-12)
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt_s(r['compute_s'])} | "
+            f"{_fmt_s(r['memory_s'])} | {_fmt_s(r.get('memory_fused_s', 0))} | "
+            f"{_fmt_s(r['collective_s'])} | {dom} | "
+            f"{r['useful_flops_ratio']:.2f} | {frac:.2f} |")
+    return "\n".join(rows)
+
+
+def summarize(out_dir: str) -> str:
+    recs = load_records(out_dir)
+    n_ok = sum(1 for r in recs if not r.get("skipped"))
+    n_skip = sum(1 for r in recs if r.get("skipped"))
+    parts = [
+        f"Records: {len(recs)} ({n_ok} compiled, {n_skip} recorded skips)",
+        "",
+        "### Single-pod (16x16 = 256 chips) dry-run",
+        "",
+        dryrun_table(recs, multipod=False),
+        "",
+        "### Multi-pod (2x16x16 = 512 chips) dry-run",
+        "",
+        dryrun_table(recs, multipod=True),
+        "",
+        "### Roofline terms (single-pod, per device, per step)",
+        "",
+        roofline_table(recs),
+    ]
+    return "\n".join(parts)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    print(summarize(args.out))

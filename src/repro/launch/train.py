@@ -1,0 +1,61 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen1.5-0.5b \
+      --steps 50 --batch 8 --seq 128 [--reduced] [--optimizer amc_adamw]
+
+On this CPU container use --reduced (small same-family config). On a real
+pod, omit it and pass --mesh pod|multipod.
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.launch import mesh as mesh_lib
+from repro.train import TrainSettings
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--optimizer", default="adamw",
+                    choices=["adamw", "amc_adamw"])
+    ap.add_argument("--schedule", default="cosine", choices=["cosine", "wsd"])
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--mesh", default="local",
+                    choices=["local", "pod", "multipod"])
+    args = ap.parse_args()
+
+    cfg = get_arch(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    mesh = (mesh_lib.make_local_mesh() if args.mesh == "local" else
+            mesh_lib.make_production_mesh(multi_pod=args.mesh == "multipod"))
+    shape = ShapeConfig("train", args.seq, args.batch, "train")
+    settings = TrainSettings(optimizer=args.optimizer, lr=args.lr,
+                             grad_accum=args.grad_accum,
+                             q_chunk=min(1024, args.seq))
+    tcfg = TrainerConfig(total_steps=args.steps, ckpt_dir=args.ckpt_dir,
+                         schedule=args.schedule,
+                         warmup=max(2, args.steps // 10),
+                         ckpt_every=max(5, args.steps // 5))
+    tr = Trainer(cfg, shape, mesh, settings, tcfg)
+    losses = tr.train()
+    print(f"[train] {cfg.name}: step {tr.current_step()} "
+          f"loss {losses[0]:.4f} -> {losses[-1]:.4f}")
+    tr.close()
+
+
+if __name__ == "__main__":
+    main()

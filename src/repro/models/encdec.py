@@ -1,0 +1,144 @@
+"""Whisper-style encoder-decoder backbone.
+
+The conv/mel frontend is a STUB per the assignment: `input_specs` provides
+precomputed frame embeddings (B, n_frames, frame_dim). Positions are
+sinusoidal (deviation from whisper's learned decoder positions, recorded in
+DESIGN.md) so parameters stay independent of sequence length.
+
+AMC note: the cross-attention KV (computed once per utterance at prefill)
+is the STATIC plane; the decoder self-attention KV is the DYNAMIC plane —
+the cleanest FILO instance in the model zoo (paper SS.II-B).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.params import PSpec
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    e = cfg.encdec
+    n, ne, d, V = cfg.n_layers, e.n_encoder_layers, cfg.d_model, cfg.vocab_padded
+    return {
+        "embed": PSpec((V, d), ("vocab", "embed")),
+        "final_norm": PSpec((d,), (None,), init="zeros"),
+        "enc_final_norm": PSpec((d,), (None,), init="zeros"),
+        "frame_proj": PSpec((e.frame_dim, d), (None, "embed")),
+        "encoder": {"attn": T.attn_pspecs(cfg, ne),
+                    "mlp": T.mlp_pspecs(cfg, ne)},
+        "layers": {"attn": T.attn_pspecs(cfg, n),
+                   "cross": T.attn_pspecs(cfg, n),
+                   "mlp": T.mlp_pspecs(cfg, n)},
+        "head": PSpec((d, V), ("embed", "vocab")),
+    }
+
+
+def encode(cfg: ModelConfig, params: dict, frames: jax.Array,
+           rules=None) -> jax.Array:
+    """frames (B, F, frame_dim) -> encoder states (B, F, d)."""
+    from repro.distributed.sharding import constrain
+    B, F, _ = frames.shape
+    x = (frames @ params["frame_proj"]).astype(jnp.bfloat16)
+    x = constrain(x, rules, "batch", None, None)
+    x = x + L.sinusoidal_positions(jnp.arange(F), cfg.d_model)[None].astype(x.dtype)
+    positions = jnp.arange(F)
+
+    def body(x, lp):
+        x = constrain(x, rules, "batch", None, None)
+        a, _ = T.attn_block(cfg, lp["attn"], x, positions, causal=False,
+                            q_chunk=min(F, 1024) if F % 1024 == 0 or F < 1024 else F)
+        x = x + a
+        x = x + T.mlp_block(cfg, lp["mlp"], x)
+        return constrain(x, rules, "batch", None, None), None
+
+    x, _ = jax.lax.scan(jax.checkpoint(body), x, params["encoder"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def cross_block(cfg: ModelConfig, p: dict, x: jax.Array,
+                enc_k: jax.Array, enc_v: jax.Array) -> jax.Array:
+    """Cross-attention with precomputed encoder K/V (the static plane)."""
+    B, S, _ = x.shape
+    H, hd = cfg.n_heads, cfg.hd
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, S, H, hd)
+    o = L.attention(q, enc_k, enc_v, causal=False,
+                    q_chunk=1024 if S % 1024 == 0 else S)
+    return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype)
+
+
+def _enc_kv(cfg: ModelConfig, p: dict, enc: jax.Array):
+    B, F, _ = enc.shape
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return ((enc @ p["wk"]).reshape(B, F, KV, hd),
+            (enc @ p["wv"]).reshape(B, F, KV, hd))
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array,
+            frames: jax.Array, *, rules=None, return_cache=False,
+            remat_policy="dots", q_chunk=1024):
+    """Teacher-forced decoder over encoder states. Returns logits [,cache]."""
+    from repro.distributed.sharding import constrain
+    enc = encode(cfg, params, frames, rules)
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = x + L.sinusoidal_positions(jnp.arange(S), cfg.d_model)[None].astype(x.dtype)
+    x = constrain(x, rules, "batch", "seq_sp", None)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        x = constrain(x, rules, "batch", "seq_sp", None)
+        a, kv = T.attn_block(cfg, lp["attn"], x, positions, q_chunk=q_chunk)
+        x = constrain(x + a, rules, "batch", "seq_sp", None)
+        ek, ev = _enc_kv(cfg, lp["cross"], enc)
+        x = x + cross_block(cfg, lp["cross"], x, ek, ev)
+        x = x + T.mlp_block(cfg, lp["mlp"], x)
+        return constrain(x, rules, "batch", "seq_sp", None), ((kv, (ek, ev)) if return_cache else None)
+
+    x, kvs = jax.lax.scan(T._remat(body, remat_policy), x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(x, params["head"], cfg.vocab)
+    if return_cache:
+        (selfkv, crosskv) = kvs
+        cache = T._pack_prefill_cache(cfg, selfkv)
+        cache["cross_k"], cache["cross_v"] = crosskv  # static plane: bf16
+        return logits, cache
+    return logits
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, positions: jax.Array, *, rules=None):
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = x + L.sinusoidal_positions(positions.astype(jnp.float32),
+                                   cfg.d_model)[:, None].astype(x.dtype)
+    cache = dict(cache)
+    cross_k, cross_v = cache.pop("cross_k"), cache.pop("cross_v")
+
+    def body(x, scanned):
+        lp, cl, ck, cv = scanned
+        a, new_cache = T.attn_block_decode(cfg, lp["attn"], x, cl, positions)
+        x = x + a
+        x = x + cross_block(cfg, lp["cross"], x, ck, cv)
+        x = x + T.mlp_block(cfg, lp["mlp"], x)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(
+        body, x, (params["layers"], cache, cross_k, cross_v))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(x, params["head"], cfg.vocab)
+    new_cache["cross_k"], new_cache["cross_v"] = cross_k, cross_v
+    return logits, new_cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    e = cfg.encdec
+    n, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    c = T.abstract_cache(cfg, batch, seq)
+    ax = (None, "cache_batch", "frames", "kv_heads", None)
+    c["cross_k"] = PSpec((n, batch, e.n_frames, KV, hd), ax)
+    c["cross_v"] = PSpec((n, batch, e.n_frames, KV, hd), ax)
+    return c

@@ -1,0 +1,283 @@
+"""RecurrentGemma-style hybrid: RG-LRU recurrent blocks + local sliding-
+window attention, pattern (rec, rec, attn) — 38 layers = 12 macro-blocks
+of 3 + 2 trailing recurrent layers (DESIGN.md SS8).
+
+RG-LRU (diagonal-gated variant, gates per channel from the branch input):
+    r_t = sigmoid(w_r * x_t + b_r)            recurrence gate
+    i_t = sigmoid(w_i * x_t + b_i)            input gate
+    log a_t = -8 * softplus(lam) * r_t        per-channel decay
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+computed over the sequence with an associative scan (first-order linear
+recurrence), O(S log S) depth — the sub-quadratic path that makes
+long_500k decode feasible (O(1) per token, bounded state).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import transformer as T
+from repro.models.params import PSpec
+
+
+def _layout(cfg: ModelConfig):
+    npat = len(cfg.hybrid.pattern)          # 3
+    nb = cfg.n_layers // npat               # 12 macro-blocks
+    tail = cfg.n_layers - nb * npat         # 2 trailing rec layers
+    return nb, tail
+
+
+def rec_pspecs(cfg: ModelConfig, n: int) -> dict:
+    d, w = cfg.d_model, cfg.hybrid.lru_width
+    return {
+        "norm": PSpec((n, d), (None, None), init="zeros"),
+        "proj_x": PSpec((n, d, w), (None, "embed", "lru")),
+        "proj_gate": PSpec((n, d, w), (None, "embed", "lru")),
+        "conv": PSpec((n, 4, w), (None, None, "lru")),
+        "w_r": PSpec((n, w), (None, "lru"), init="zeros"),
+        "b_r": PSpec((n, w), (None, "lru"), init="zeros"),
+        "w_i": PSpec((n, w), (None, "lru"), init="zeros"),
+        "b_i": PSpec((n, w), (None, "lru"), init="zeros"),
+        "lam": PSpec((n, w), (None, "lru"), init="ones"),
+        "out": PSpec((n, w, d), (None, "lru", "embed")),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    nb, tail = _layout(cfg)
+    d, V = cfg.d_model, cfg.vocab_padded
+    blocks = {
+        "rec_a": rec_pspecs(cfg, nb), "rec_a_mlp": T.mlp_pspecs(cfg, nb),
+        "rec_b": rec_pspecs(cfg, nb), "rec_b_mlp": T.mlp_pspecs(cfg, nb),
+        "attn": T.attn_pspecs(cfg, nb), "attn_mlp": T.mlp_pspecs(cfg, nb),
+    }
+    params = {
+        "embed": PSpec((V, d), ("vocab", "embed")),
+        "final_norm": PSpec((d,), (None,), init="zeros"),
+        "blocks": blocks,
+        "tail": {"rec": rec_pspecs(cfg, tail),
+                 "mlp": T.mlp_pspecs(cfg, tail)},
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = PSpec((d, V), ("embed", "vocab"))
+    return params
+
+
+def _lru_gates(p, x):
+    r = jax.nn.sigmoid(x.astype(jnp.float32) * p["w_r"] + p["b_r"])
+    i = jax.nn.sigmoid(x.astype(jnp.float32) * p["w_i"] + p["b_i"])
+    log_a = -8.0 * jax.nn.softplus(p["lam"].astype(jnp.float32)) * r
+    a = jnp.exp(log_a)
+    gated_in = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-9)) * (i * x.astype(jnp.float32))
+    return a, gated_in
+
+
+def rec_block(cfg: ModelConfig, p: dict, x: jax.Array, h0=None,
+              conv0=None, return_state: bool = False):
+    """Full-sequence RG-LRU block. x: (B,S,d).
+
+    With return_state=True also returns (h_final, conv_tail) for prefill ->
+    decode handoff.
+    """
+    B, S, d = x.shape
+    hN = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    xb = hN @ p["proj_x"]                         # (B,S,w)
+    gate = jax.nn.gelu((hN @ p["proj_gate"]), approximate=True)
+    # causal depthwise conv width 4 (shifted adds)
+    conv = jnp.zeros_like(xb)
+    for i in range(4):
+        shift = 3 - i
+        xi = jnp.pad(xb, ((0, 0), (shift, 0), (0, 0)))[:, :S]
+        conv = conv + xi * p["conv"][i]
+    a, gin = _lru_gates(p, conv)                  # (B,S,w) fp32
+    # first-order linear recurrence via associative scan over S
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+    if h0 is not None:
+        gin = gin.at[:, 0].add(a[:, 0] * h0)
+    aa, hh = jax.lax.associative_scan(combine, (a, gin), axis=1)
+    y = (hh.astype(x.dtype) * gate) @ p["out"]
+    if return_state:
+        return y.astype(x.dtype), hh[:, -1], xb[:, S - 3:]
+    return y.astype(x.dtype)
+
+
+def _ring_from_full(k: jax.Array, W: int) -> jax.Array:
+    """Full-seq keys (B,S,KV,hd) -> ring cache (B,W,KV,hd), slot = pos % W."""
+    S = k.shape[1]
+    if S <= W:
+        pad = [(0, 0), (0, W - S)] + [(0, 0)] * (k.ndim - 2)
+        return jnp.pad(k, pad)
+    last = k[:, S - W:]
+    slots = (jnp.arange(S - W, S) % W)
+    return jnp.zeros((k.shape[0], W) + k.shape[2:], k.dtype).at[:, slots].set(last)
+
+
+def rec_step(cfg: ModelConfig, p: dict, x: jax.Array, h: jax.Array,
+             conv_s: jax.Array):
+    """O(1) decode step. x: (B,d); h: (B,w) fp32; conv_s: (B,3,w)."""
+    hN = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    xb = hN @ p["proj_x"]
+    gate = jax.nn.gelu(hN @ p["proj_gate"], approximate=True)
+    full = jnp.concatenate([conv_s, xb[:, None]], axis=1)  # (B,4,w)
+    conv = jnp.einsum("bkw,kw->bw", full, p["conv"])
+    new_conv = full[:, 1:]
+    a, gin = _lru_gates(p, conv)
+    h = a * h + gin
+    y = (h.astype(x.dtype) * gate) @ p["out"]
+    return y.astype(x.dtype), h, new_conv
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            rules=None, return_cache=False, remat_policy="dots",
+            q_chunk=1024):
+    from repro.distributed.sharding import constrain
+    B, S = tokens.shape
+    W = cfg.hybrid.window
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = constrain(x, rules, "batch", "seq_sp", None)
+    positions = jnp.arange(S)
+
+    def block_body(x, bp):
+        x = constrain(x, rules, "batch", "seq_sp", None)
+        st = {}
+        if return_cache:
+            y, ha, ca = rec_block(cfg, bp["rec_a"], x, return_state=True)
+            st["h_a"], st["conv_a"] = ha, ca
+        else:
+            y = rec_block(cfg, bp["rec_a"], x)
+        x = x + y
+        x = x + T.mlp_block(cfg, bp["rec_a_mlp"], x)
+        if return_cache:
+            y, hb, cb = rec_block(cfg, bp["rec_b"], x, return_state=True)
+            st["h_b"], st["conv_b"] = hb, cb
+        else:
+            y = rec_block(cfg, bp["rec_b"], x)
+        x = x + y
+        x = x + T.mlp_block(cfg, bp["rec_b_mlp"], x)
+        x = constrain(x, rules, "batch", "seq_sp", None)
+        a, kv = T.attn_block(cfg, bp["attn"], x, positions, window=W,
+                             q_chunk=q_chunk)
+        x = constrain(x + a, rules, "batch", "seq_sp", None)
+        x = x + T.mlp_block(cfg, bp["attn_mlp"], x)
+        if return_cache:
+            k, v = kv
+            Wc = min(W, k.shape[1])
+            kvs = {"k": _ring_from_full(k, W), "v": _ring_from_full(v, W)}
+            mode = cfg.amc.kv_mode
+            if mode != "normal":
+                pack = L.pack_kv_int4 if mode == "int4" else L.pack_kv_int8
+                kvs["k"], kvs["k_scale"] = pack(kvs["k"])
+                kvs["v"], kvs["v_scale"] = pack(kvs["v"])
+            st.update(kvs)
+        return x, (st if return_cache else None)
+
+    def tail_body(x, tp):
+        x = constrain(x, rules, "batch", "seq_sp", None)
+        if return_cache:
+            y, h, c = rec_block(cfg, tp["rec"], x, return_state=True)
+            x = x + y
+            x = x + T.mlp_block(cfg, tp["mlp"], x)
+            return x, {"h": h, "conv": c}
+        x = x + rec_block(cfg, tp["rec"], x)
+        x = x + T.mlp_block(cfg, tp["mlp"], x)
+        return x, None
+
+    x, block_st = jax.lax.scan(T._remat(block_body, remat_policy), x,
+                               params["blocks"])
+    x, tail_st = jax.lax.scan(T._remat(tail_body, remat_policy), x,
+                              params["tail"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = L.lm_head(x, head, cfg.vocab)
+    if return_cache:
+        return logits, {"blocks": block_st, "tail": tail_st}
+    return logits
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, positions: jax.Array, *, rules=None):
+    nb, tail = _layout(cfg)
+    W = cfg.hybrid.window
+    x = L.embed_lookup(params["embed"], tokens[:, 0]).astype(jnp.bfloat16)
+
+    def block_body(x, scanned):
+        bp, st = scanned
+        y, ha, ca = rec_step(cfg, bp["rec_a"], x, st["h_a"], st["conv_a"])
+        x = x + y
+        x = x + T.mlp_block(cfg, bp["rec_a_mlp"], x[:, None])[:, 0]
+        y, hb, cb = rec_step(cfg, bp["rec_b"], x, st["h_b"], st["conv_b"])
+        x = x + y
+        x = x + T.mlp_block(cfg, bp["rec_b_mlp"], x[:, None])[:, 0]
+        a, new_kv = T.attn_block_decode(
+            cfg, bp["attn"], x[:, None],
+            {k: st[k] for k in st if k.startswith(("k", "v"))},
+            positions, window=W)
+        x = x + a[:, 0]
+        x = x + T.mlp_block(cfg, bp["attn_mlp"], x[:, None])[:, 0]
+        new_st = dict(new_kv)
+        new_st.update({"h_a": ha, "conv_a": ca, "h_b": hb, "conv_b": cb})
+        return x, new_st
+
+    def tail_body(x, scanned):
+        tp, st = scanned
+        y, h, c = rec_step(cfg, tp["rec"], x, st["h"], st["conv"])
+        x = x + y
+        x = x + T.mlp_block(cfg, tp["mlp"], x[:, None])[:, 0]
+        return x, {"h": h, "conv": c}
+
+    x, new_block_st = jax.lax.scan(block_body, x,
+                                   (params["blocks"], cache["blocks"]))
+    x, new_tail_st = jax.lax.scan(tail_body, x,
+                                  (params["tail"], cache["tail"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = L.lm_head(x[:, None], head, cfg.vocab)
+    return logits, {"blocks": new_block_st, "tail": new_tail_st}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    nb, tail = _layout(cfg)
+    w = cfg.hybrid.lru_width
+    W = cfg.hybrid.window
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    mode = cfg.amc.kv_mode
+    bax = "cache_batch"
+    kv_ax = (None, bax, "cache_seq", "kv_heads", None)
+    blocks = {
+        "h_a": PSpec((nb, batch, w), (None, bax, "lru"), dtype="f32",
+                     init="zeros"),
+        "conv_a": PSpec((nb, batch, 3, w), (None, bax, None, "lru"),
+                        init="zeros"),
+        "h_b": PSpec((nb, batch, w), (None, bax, "lru"), dtype="f32",
+                     init="zeros"),
+        "conv_b": PSpec((nb, batch, 3, w), (None, bax, None, "lru"),
+                        init="zeros"),
+    }
+    if mode == "normal":
+        blocks["k"] = PSpec((nb, batch, W, KV, hd), kv_ax)
+        blocks["v"] = PSpec((nb, batch, W, KV, hd), kv_ax)
+    else:
+        dt = "u8" if mode == "int4" else "i8"
+        ds = hd // 2 if mode == "int4" else hd
+        blocks["k"] = PSpec((nb, batch, W, KV, ds), kv_ax, dtype=dt)
+        blocks["v"] = PSpec((nb, batch, W, KV, ds), kv_ax, dtype=dt)
+        blocks["k_scale"] = PSpec((nb, batch, W, KV, 1), kv_ax)
+        blocks["v_scale"] = PSpec((nb, batch, W, KV, 1), kv_ax)
+    tail_c = {
+        "h": PSpec((tail, batch, w), (None, bax, "lru"), dtype="f32",
+                   init="zeros"),
+        "conv": PSpec((tail, batch, 3, w), (None, bax, None, "lru"),
+                      init="zeros"),
+    }
+    return {"blocks": blocks, "tail": tail_c}

@@ -1,0 +1,191 @@
+"""Shared neural net layers: norms, RoPE, GQA attention (chunked flash
+pattern for long sequences, single-token decode against dense or
+AMC-packed KV), MLPs, embeddings.
+
+All attention math accumulates in fp32 and is exact (online chunking only
+bounds live memory, it never approximates the softmax).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + w.astype(jnp.float32))).astype(x.dtype)
+
+
+def sinusoidal_positions(positions: jax.Array, dim: int,
+                         base: float = 10000.0) -> jax.Array:
+    """positions (...,) -> (..., dim) sinusoidal embedding (whisper-style)."""
+    half = dim // 2
+    freqs = jnp.exp(-jnp.log(base) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array,
+               theta: float = 10000.0) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,). Rotate-half RoPE."""
+    if theta <= 0:
+        return x
+    d = x.shape[-1]
+    half = d // 2
+    freqs = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    if positions.ndim == 1:
+        positions = positions[None, :]
+    ang = positions.astype(jnp.float32)[:, :, None, None] * freqs  # (B,S,1,half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [xf1 * cos - xf2 * sin, xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
+    """q: (B,Sq,KV,Hg,D), k: (B,Sk,KV,D) -> (B,KV,Hg,Sq,Sk) fp32."""
+    return jnp.einsum("bqkhd,bskd->bkhqs", q, k,
+                      preferred_element_type=jnp.float32)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              causal: bool = True,
+              window: Optional[int] = None,
+              q_chunk: int = 1024,
+              q_offset: int = 0) -> jax.Array:
+    """Exact attention, chunked over the query axis to bound live memory.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KV, D) with H % KV == 0 (GQA).
+    Returns (B, Sq, H, D). Scores/softmax in fp32.
+    """
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    Hg = H // KV
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, Sq, KV, Hg, D)
+
+    def one_chunk(qc: jax.Array, start) -> jax.Array:
+        s = _gqa_scores(qc, k) * scale               # (B,KV,Hg,Cq,Sk)
+        if causal or window is not None:
+            cq = qc.shape[1]
+            qpos = start + jnp.arange(cq) + q_offset
+            kpos = jnp.arange(Sk)
+            m = jnp.ones((cq, Sk), bool)
+            if causal:
+                m &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                m &= kpos[None, :] > qpos[:, None] - window
+            s = jnp.where(m[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bkhqs,bskd->bqkhd", p.astype(v.dtype), v)
+        return o.reshape(B, qc.shape[1], H, D)
+
+    if Sq <= q_chunk:
+        return one_chunk(qg, 0)
+    n = Sq // q_chunk
+    assert Sq % q_chunk == 0, (Sq, q_chunk)
+    qs = qg.reshape(B, n, q_chunk, KV, Hg, D)
+
+    def body(_, i):
+        qc = jax.lax.dynamic_index_in_dim(qs, i, axis=1, keepdims=False)
+        return None, one_chunk(qc, i * q_chunk)
+
+    _, out = jax.lax.scan(body, None, jnp.arange(n))
+    # (n, B, Cq, H, D) -> (B, Sq, H, D)
+    return jnp.moveaxis(out, 0, 1).reshape(B, Sq, H, D)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     positions: jax.Array, *,
+                     window: Optional[int] = None) -> jax.Array:
+    """Single-token attention against a (possibly ring) cache.
+
+    q: (B, 1, H, D); caches: (B, S, KV, D); positions: (B,) index of the
+    token being generated (== number of valid cache slots - 1).
+    Ring caches rely on softmax permutation-invariance: slot order is
+    irrelevant, only the validity mask matters.
+    """
+    B, _, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    Hg = H // KV
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, 1, KV, Hg, D)
+    s = _gqa_scores(qg, k_cache) * scale             # (B,KV,Hg,1,S)
+    slot = jnp.arange(S)
+    if window is None:
+        valid = slot[None, :] <= positions[:, None]
+    else:
+        # ring buffer of size S == window: slot i valid once written
+        valid = slot[None, :] <= jnp.minimum(positions[:, None], S - 1)
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkhqs,bskd->bqkhd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, D)
+
+
+def mlp(x, w_gate, w_up, w_down, act: str):
+    if act == "swiglu":
+        h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    else:
+        h = jax.nn.gelu(x @ w_up, approximate=True)
+    return h @ w_down
+
+
+def embed_lookup(table: jax.Array, tokens: jax.Array) -> jax.Array:
+    """Vocab-sharded embedding gather (XLA SPMD lowers to mask+all-reduce)."""
+    return jnp.take(table, tokens, axis=0)
+
+
+def lm_head(x: jax.Array, head_w: jax.Array, vocab_real: int) -> jax.Array:
+    """x: (B,S,d) @ (d,V) -> masked logits (padded vocab slots -> -inf)."""
+    logits = (x @ head_w).astype(jnp.float32)
+    V = head_w.shape[-1]
+    if vocab_real < V:
+        col = jax.lax.broadcasted_iota(jnp.int32, (1, 1, V), 2)
+        logits = jnp.where(col < vocab_real, logits, -1e30)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# KV cache update + AMC packing (the dynamic plane of the serving engine)
+# ---------------------------------------------------------------------------
+
+def update_cache_line(cache: jax.Array, new: jax.Array,
+                      positions: jax.Array) -> jax.Array:
+    """cache: (B, S, ...); new: (B, 1, ...); positions: (B,)."""
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+    return jax.vmap(upd)(cache, new, positions)
+
+
+def pack_kv_int4(kv: jax.Array):
+    """kv: (..., D) bf16 -> (uint8 (..., D//2), scale (..., 1))."""
+    q, scale = quant.quantize_int4(kv, axis=-1)
+    hi, lo = q[..., 0::2], q[..., 1::2]
+    return quant.pack_int4_pair(hi, lo), scale.astype(jnp.bfloat16)
+
+
+def unpack_kv_int4(packed: jax.Array, scale: jax.Array,
+                   dtype=jnp.bfloat16) -> jax.Array:
+    hi = quant.unpack_int4_hi(packed)
+    lo = quant.unpack_int4_lo(packed)
+    q = jnp.stack([hi, lo], axis=-1).reshape(*packed.shape[:-1],
+                                             packed.shape[-1] * 2)
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)
+
+
+def pack_kv_int8(kv: jax.Array):
+    q, scale = quant.quantize_int8(kv, axis=-1)
+    return q, scale.astype(jnp.bfloat16)
+
+
+def unpack_kv_int8(q: jax.Array, scale: jax.Array,
+                   dtype=jnp.bfloat16) -> jax.Array:
+    return (q.astype(jnp.float32) * scale.astype(jnp.float32)).astype(dtype)

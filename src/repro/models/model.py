@@ -1,0 +1,71 @@
+"""Family dispatcher: one uniform interface over the 10-arch zoo.
+
+  abstract_params(cfg)                -> PSpec tree
+  forward(cfg, params, batch, ...)    -> logits  (train / prefill)
+  abstract_cache(cfg, shape)          -> PSpec tree for decode state
+  decode_step(cfg, params, cache, batch) -> (logits, new_cache)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.models import encdec, hybrid, ssm, transformer, vision
+from repro.models.params import PSpec
+
+
+def _family_mod(cfg: ModelConfig):
+    return {"dense": transformer, "moe": transformer, "audio": encdec,
+            "vlm": vision, "ssm": ssm, "hybrid": hybrid}[cfg.family]
+
+
+def abstract_params(cfg: ModelConfig):
+    return _family_mod(cfg).abstract_params(cfg)
+
+
+def forward(cfg: ModelConfig, params, batch: dict, *, rules=None,
+            return_cache=False, remat_policy="dots", q_chunk=1024):
+    """batch: {"tokens": (B,S)} plus frames/patches for audio/vlm."""
+    mod = _family_mod(cfg)
+    kw = dict(rules=rules, return_cache=return_cache,
+              remat_policy=remat_policy, q_chunk=q_chunk)
+    if cfg.family == "audio":
+        return mod.forward(cfg, params, batch["tokens"], batch["frames"], **kw)
+    if cfg.family == "vlm":
+        return mod.forward(cfg, params, batch["tokens"], batch["patches"], **kw)
+    return mod.forward(cfg, params, batch["tokens"], **kw)
+
+
+def abstract_cache(cfg: ModelConfig, shape: ShapeConfig):
+    return _family_mod(cfg).abstract_cache(cfg, shape.global_batch,
+                                           shape.seq_len)
+
+
+def decode_step(cfg: ModelConfig, params, cache, batch: dict, *, rules=None):
+    return _family_mod(cfg).decode_step(cfg, params, cache, batch["tokens"],
+                                        batch["positions"], rules=rules)
+
+
+def loss_fn(cfg: ModelConfig, params, batch: dict, *, rules=None,
+            remat_policy="dots", q_chunk=1024):
+    """Next-token cross-entropy, vocab-sharding-friendly.
+
+    Computed as lse(logits) - <logits, one_hot(target)>: both terms reduce
+    over the (model-sharded) vocab dim locally and all-reduce only (B, S)
+    stats — never gathers the full logits (which would be ~40 GiB/device at
+    train_4k scale).
+    """
+    from repro.distributed.sharding import constrain
+    logits = forward(cfg, params, batch, rules=rules,
+                     remat_policy=remat_policy, q_chunk=q_chunk)
+    targets = batch["targets"]
+    logits = logits.astype(jnp.float32)
+    if rules is not None:
+        logits = constrain(logits, rules, "batch", None, "vocab")
+    lse = jax.nn.logsumexp(logits, axis=-1)                     # (B,S)
+    oh = jax.nn.one_hot(targets, logits.shape[-1], dtype=logits.dtype)
+    if rules is not None:
+        oh = constrain(oh, rules, "batch", None, "vocab")
+    tgt = jnp.einsum("bsv,bsv->bs", logits, oh)
+    return (lse - tgt).mean()

@@ -1,0 +1,134 @@
+"""Mixture-of-Experts FFN with GShard-style capacity dispatch.
+
+Two sharding modes (DESIGN.md SS4):
+  * "ep": experts sharded over the model axis (qwen3-moe: 128/16 = 8 per
+    device). Tokens are grouped, dispatch/combine einsums move them between
+    group-sharded and expert-sharded layouts — XLA SPMD inserts the
+    all-to-alls (this is the EP dispatch of real systems).
+  * "tp": expert count doesn't divide the axis (grok-1: 8 experts on a
+    16-way axis), so the expert hidden dim is sharded instead and the
+    expert axis stays replicated.
+
+Top-k routing with per-(group, expert) capacity C = ceil(Sg*k*cf/E); tokens
+over capacity are dropped (standard GShard semantics). Router logits in
+fp32; top-k probabilities renormalized.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import PSpec
+
+
+def moe_pspecs(cfg: ModelConfig, n: int) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.moe.n_experts
+    ea = "experts"
+    # EP: experts ride the model axis -> the hidden dim must not also claim
+    # it. TP: experts replicated (via Rules sizes), hidden dim rides it.
+    fa = "mlp" if cfg.moe.sharding == "tp" else None
+    p = {"norm": PSpec((n, d), (None, None), init="zeros"),
+         "router": PSpec((n, d, E), (None, "embed", None)),
+         "w_up": PSpec((n, E, d, f), (None, ea, "embed", fa)),
+         "w_down": PSpec((n, E, f, d), (None, ea, fa, "embed"))}
+    if cfg.act == "swiglu":
+        p["w_gate"] = PSpec((n, E, d, f), (None, ea, "embed", fa))
+    return p
+
+
+def _best_axes(n: int, mesh, preferred):
+    """Largest prefix of `preferred` mesh axes whose product divides n."""
+    if mesh is None:
+        return None
+    axes = [a for a in preferred if a in mesh.shape]
+    while axes:
+        t = 1
+        for a in axes:
+            t *= mesh.shape[a]
+        if n % t == 0:
+            return tuple(axes)
+        axes.pop()
+    return None
+
+
+def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array, rules=None,
+            group_size: int = 512) -> jax.Array:
+    """x: (B, S, d) pre-normed -> (B, S, d)."""
+    moe = cfg.moe
+    B, S, d = x.shape
+    E, k, cf = moe.n_experts, moe.top_k, moe.capacity_factor
+    T = B * S
+    sg = min(group_size, T)
+    G = T // sg
+    assert T % sg == 0, (T, sg)
+    C = max(1, math.ceil(sg * k * cf / E))
+
+    xs = x.reshape(G, sg, d)
+    mesh = rules.mesh if rules is not None else None
+    # Groups ride ("pod","data") ONLY: with experts on the model axis, the
+    # dispatch einsum then needs no model-axis resharding of the (G,Sg,E,C)
+    # dispatch tensor (it becomes a local slice) and the combine reduces
+    # over local experts with a single all-reduce — the canonical GShard
+    # pattern. Including "model" here all-gathers disp/comb per layer
+    # (measured 2.6 TiB/device/step on qwen3 train_4k; SSPerf cell A).
+    g_axes = _best_axes(G, mesh, ("pod", "data"))
+    if mesh is not None:
+        xs = jax.lax.with_sharding_constraint(
+            xs, jax.sharding.NamedSharding(mesh, P(g_axes, None, None)))
+
+    # --- routing (fp32) ---
+    # NOTE (SSPerf cell A, iteration 3 — REFUTED): pinning the routing
+    # tensors (logits/mask/disp/comb) to group sharding doubled collective
+    # bytes (6.1s -> 11.8s); the partitioner's own intermediate layouts win.
+    logits = xs.astype(jnp.float32) @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                 # (G,Sg,E)
+    top_p, top_i = jax.lax.top_k(probs, k)                  # (G,Sg,k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    sel = jax.nn.one_hot(top_i, E, dtype=jnp.float32)       # (G,Sg,k,E)
+    mask = sel.sum(axis=2)                                  # (G,Sg,E) 0/1
+    gates = (sel * top_p[..., None]).sum(axis=2)            # (G,Sg,E)
+
+    # position-in-expert within each group; drop tokens over capacity
+    pos = jnp.cumsum(mask, axis=1) - 1.0                    # (G,Sg,E)
+    keep = (pos < C) * mask
+    disp = jax.nn.one_hot(pos.astype(jnp.int32), C,
+                          dtype=jnp.bfloat16) * keep[..., None]  # (G,Sg,E,C)
+    comb = disp * gates[..., None].astype(jnp.bfloat16)
+
+    # --- dispatch: group-sharded tokens -> expert-sharded slots (a2a) ---
+    xe = jnp.einsum("gsec,gsd->egcd", disp, xs)             # (E,G,C,d)
+    e_ax = rules.resolve("experts") if rules is not None else None
+    g2 = _best_axes(G, mesh, ("pod", "data")) if mesh is not None else None
+
+    def cst(t, spec):
+        if mesh is None:
+            return t
+        return jax.lax.with_sharding_constraint(
+            t, jax.sharding.NamedSharding(mesh, spec))
+
+    # In EP mode experts ride the model axis; in TP mode (experts
+    # indivisible) the expert hidden dim rides it instead.
+    f_ax = None if e_ax is not None else (rules.resolve("mlp")
+                                          if rules is not None else None)
+    xe = cst(xe, P(e_ax, g2, None, None))
+
+    # --- expert FFN (batched over E) ---
+    if cfg.act == "swiglu":
+        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["w_gate"]))
+        h = h * jnp.einsum("egcd,edf->egcf", xe, p["w_up"])
+    else:
+        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xe, p["w_up"]),
+                        approximate=True)
+    h = cst(h, P(e_ax, g2, None, f_ax))
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w_down"])       # (E,G,C,d)
+    ye = cst(ye, P(e_ax, g2, None, None))
+
+    # --- combine: expert-sharded slots -> group-sharded tokens (a2a) ---
+    out = jnp.einsum("egcd,gsec->gsd", ye, comb)
+    out = cst(out, P(g_axes, None, None))
+    return out.reshape(B, S, d).astype(x.dtype)

@@ -1,0 +1,248 @@
+"""Mamba-2 (SSD — state-space duality) blocks, attention-free.
+
+Chunked dual-form SSD following Dao & Gu 2024: quadratic attention-like
+compute within chunks, linear state recurrence across chunks (lax.scan).
+Projections are kept separate (z/x/B/C/dt) rather than fused so each output
+dim can carry its own sharding axis (the fused dim 2*din+2GN+H doesn't
+divide a 16-way axis). Gates on dt are per-head; conv is causal depthwise
+width-4 implemented as shifted adds.
+
+AMC note (DESIGN.md SS5): weights take ternary/dual-plane augmented storage;
+there is NO KV cache (the paper's packed-KV plane is inapplicable), and the
+recurrent state is accumulated into, so it must stay high-precision.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.params import PSpec
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    din = s.expand * cfg.d_model
+    H = din // s.head_dim
+    return din, H, s.head_dim, s.n_groups, s.state_dim, s.conv_dim
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    n, d, V = cfg.n_layers, cfg.d_model, cfg.vocab_padded
+    din, H, P_, G, N, K = _dims(cfg)
+    layer = {
+        "norm": PSpec((n, d), (None, None), init="zeros"),
+        "z_proj": PSpec((n, d, din), (None, "embed", "lru")),
+        "x_proj": PSpec((n, d, din), (None, "embed", "lru")),
+        "b_proj": PSpec((n, d, G * N), (None, "embed", None)),
+        "c_proj": PSpec((n, d, G * N), (None, "embed", None)),
+        "dt_proj": PSpec((n, d, H), (None, "embed", None)),
+        "conv_x": PSpec((n, K, din), (None, None, "lru")),
+        "conv_b": PSpec((n, K, G * N), (None, None, None)),
+        "conv_c": PSpec((n, K, G * N), (None, None, None)),
+        "a_log": PSpec((n, H), (None, None), init="zeros"),
+        "d_skip": PSpec((n, H), (None, None), init="ones"),
+        "dt_bias": PSpec((n, H), (None, None), init="zeros"),
+        "gate_norm": PSpec((n, din), (None, "lru"), init="zeros"),
+        "out_proj": PSpec((n, din, d), (None, "lru", "embed")),
+    }
+    params = {
+        "embed": PSpec((V, d), ("vocab", "embed")),
+        "final_norm": PSpec((d,), (None,), init="zeros"),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = PSpec((d, V), ("embed", "vocab"))
+    return params
+
+
+def _causal_conv(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (B,S,C), w: (K,C) depthwise causal conv via shifted adds."""
+    K = w.shape[0]
+    out = jnp.zeros_like(x)
+    for i in range(K):
+        shift = K - 1 - i
+        xi = jnp.pad(x, ((0, 0), (shift, 0), (0, 0)))[:, :x.shape[1]]
+        out = out + xi * w[i]
+    return out
+
+
+def _segsum_decay(a_cum: jax.Array) -> jax.Array:
+    """a_cum (..., L) -> lower-tri decay matrix exp(a_cum[t]-a_cum[s]) t>=s."""
+    Lm = a_cum[..., :, None] - a_cum[..., None, :]
+    Ln = a_cum.shape[-1]
+    tri = jnp.tril(jnp.ones((Ln, Ln), bool))
+    return jnp.where(tri, jnp.exp(Lm), 0.0)
+
+
+def ssd_chunked(x: jax.Array, a: jax.Array, b: jax.Array, c: jax.Array,
+                chunk: int, h0=None):
+    """SSD scan. x:(B,S,H,P) (dt-weighted), a:(B,S,H) log-decay,
+    b,c:(B,S,H,N) (already head-expanded). Returns y:(B,S,H,P), h_final.
+    Recurrence: h_t = e^{a_t} h_{t-1} + b_t (x) x_t ; y_t = c_t . h_t."""
+    B, S, H, P_ = x.shape
+    N = b.shape[-1]
+    nc = S // chunk
+    assert S % chunk == 0, (S, chunk)
+    r = lambda t: t.reshape((B, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+    xr, ar, br, cr = r(x), r(a), r(b), r(c)          # (nc, B, L, ...)
+    a_cum = jnp.cumsum(ar.astype(jnp.float32), axis=2)  # (nc,B,L,H)
+
+    if h0 is None:
+        h0 = jnp.zeros((B, H, N, P_), jnp.float32)
+
+    def chunk_step(h, inp):
+        xc, ac_cum, bc, cc = inp                     # (B,L,...), fp32 decays
+        # intra-chunk (dual quadratic form)
+        decay = _segsum_decay(ac_cum.swapaxes(1, 2))  # (B,H,L,L)
+        scores = jnp.einsum("blhn,bshn->bhls", cc, bc,
+                            preferred_element_type=jnp.float32) * decay
+        y = jnp.einsum("bhls,bshp->blhp", scores.astype(xc.dtype), xc)
+        # inter-chunk contribution from the carried state
+        in_decay = jnp.exp(ac_cum)                   # (B,L,H)
+        y = y + jnp.einsum("blhn,bhnp,blh->blhp", cc.astype(jnp.float32), h,
+                           in_decay).astype(y.dtype)
+        # state update
+        out_decay = jnp.exp(ac_cum[:, -1:, :] - ac_cum)  # (B,L,H)
+        states = jnp.einsum("blhn,blh,blhp->bhnp", bc.astype(jnp.float32),
+                            out_decay, xc.astype(jnp.float32))
+        h = jnp.exp(ac_cum[:, -1])[:, :, None, None] * h + states
+        return h, y
+
+    h, ys = jax.lax.scan(chunk_step, h0, (xr, a_cum, br, cr))
+    y = ys.swapaxes(0, 1).reshape(B, S, H, P_)
+    return y, h
+
+
+def _head_expand(t: jax.Array, H: int) -> jax.Array:
+    """(B,S,G,N) -> (B,S,H,N) by repeating groups."""
+    G = t.shape[2]
+    return jnp.repeat(t, H // G, axis=2)
+
+
+def block(cfg: ModelConfig, p: dict, x: jax.Array, h0=None, conv0=None,
+          return_state=False):
+    """One mamba2 block over a full sequence. x: (B,S,d).
+
+    With return_state=True also returns (ssd_state, conv_state) so a
+    prefill can hand off to O(1) decode.
+    """
+    din, H, P_, G, N, K = _dims(cfg)
+    B, S, d = x.shape
+    hN = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    z = hN @ p["z_proj"]
+    xi = hN @ p["x_proj"]
+    bi = hN @ p["b_proj"]
+    ci = hN @ p["c_proj"]
+    conv_tail = jnp.concatenate([xi, bi, ci], -1)[:, S - (K - 1):]
+    dt = jax.nn.softplus((hN @ p["dt_proj"]).astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))  # (B,S,H)
+    xi = jax.nn.silu(_causal_conv(xi, p["conv_x"]))
+    bi = jax.nn.silu(_causal_conv(bi, p["conv_b"]))
+    ci = jax.nn.silu(_causal_conv(ci, p["conv_c"]))
+    xh = xi.reshape(B, S, H, P_)
+    bh = _head_expand(bi.reshape(B, S, G, N), H)
+    ch = _head_expand(ci.reshape(B, S, G, N), H)
+    A = -jnp.exp(p["a_log"].astype(jnp.float32))              # (H,)
+    a = dt * A                                                 # (B,S,H)
+    xw = (xh * dt[..., None]).astype(xh.dtype)
+    y, h_fin = ssd_chunked(xw, a, bh, ch, cfg.ssm.chunk, h0)
+    y = y + p["d_skip"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, din)
+    y = L.rms_norm(y * jax.nn.silu(z), p["gate_norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"]).astype(x.dtype)
+    if return_state:
+        return out, h_fin, conv_tail
+    return out
+
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            rules=None, return_cache=False, remat_policy="dots",
+            q_chunk=None):
+    from repro.distributed.sharding import constrain
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = constrain(x, rules, "batch", "seq_sp", None)
+
+    def body(x, lp):
+        x = constrain(x, rules, "batch", "seq_sp", None)
+        if return_cache:
+            out, h_fin, conv_tail = block(cfg, lp, x, return_state=True)
+            return constrain(x + out, rules, "batch", "seq_sp", None), (h_fin, conv_tail)
+        return constrain(x + block(cfg, lp, x), rules, "batch", "seq_sp",
+                         None), None
+
+    from repro.models.transformer import _remat
+    x, states = jax.lax.scan(_remat(body, remat_policy), x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = L.lm_head(x, head, cfg.vocab)
+    if return_cache:
+        h_fin, conv_tail = states
+        return logits, {"ssd_state": h_fin, "conv_state": conv_tail}
+    return logits
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, positions: jax.Array, *, rules=None):
+    """O(1) decode: state update, no KV cache (attention-free)."""
+    din, H, P_, G, N, K = _dims(cfg)
+    B = tokens.shape[0]
+    x = L.embed_lookup(params["embed"], tokens[:, 0]).astype(jnp.bfloat16)
+
+    def body(x, scanned):
+        lp, h, conv_s = scanned                     # h:(B,H,N,P) conv:(B,K-1,C)
+        hN = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+        z = hN @ lp["z_proj"]
+        xi = hN @ lp["x_proj"]
+        bi = hN @ lp["b_proj"]
+        ci = hN @ lp["c_proj"]
+        dt = jax.nn.softplus((hN @ lp["dt_proj"]).astype(jnp.float32)
+                             + lp["dt_bias"].astype(jnp.float32))   # (B,H)
+        # conv over ring state
+        full = jnp.concatenate([conv_s,
+                                jnp.concatenate([xi, bi, ci], -1)[:, None]], 1)
+        w = jnp.concatenate([lp["conv_x"], lp["conv_b"], lp["conv_c"]], -1)
+        conv_out = jnp.einsum("bkc,kc->bc", full, w)
+        new_conv = full[:, 1:]
+        xi = jax.nn.silu(conv_out[:, :din])
+        bi = jax.nn.silu(conv_out[:, din:din + G * N])
+        ci = jax.nn.silu(conv_out[:, din + G * N:])
+        xh = xi.reshape(B, H, P_)
+        bh = jnp.repeat(bi.reshape(B, G, N), H // G, axis=1)
+        ch = jnp.repeat(ci.reshape(B, G, N), H // G, axis=1)
+        A = -jnp.exp(lp["a_log"].astype(jnp.float32))
+        a = jnp.exp(dt * A)                                          # (B,H)
+        upd = jnp.einsum("bhn,bhp->bhnp", bh.astype(jnp.float32),
+                         (xh * dt[..., None]).astype(jnp.float32))
+        h = a[:, :, None, None] * h + upd
+        y = jnp.einsum("bhn,bhnp->bhp", ch.astype(jnp.float32), h)
+        y = y + lp["d_skip"].astype(jnp.float32)[None, :, None] * xh
+        y = y.reshape(B, din)
+        y = L.rms_norm(y * jax.nn.silu(z), lp["gate_norm"], cfg.norm_eps)
+        out = (y @ lp["out_proj"]).astype(x.dtype)
+        return x + out, (h, new_conv)
+
+    x, (hs, convs) = jax.lax.scan(
+        body, x, (params["layers"], cache["ssd_state"], cache["conv_state"]))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = L.lm_head(x[:, None], head, cfg.vocab)
+    return logits, {"ssd_state": hs, "conv_state": convs}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    din, H, P_, G, N, K = _dims(cfg)
+    n = cfg.n_layers
+    return {
+        "ssd_state": PSpec((n, batch, H, N, P_),
+                           (None, "cache_batch", None, None, None),
+                           dtype="f32", init="zeros"),
+        "conv_state": PSpec((n, batch, K - 1, din + 2 * G * N),
+                            (None, "cache_batch", None, "lru"), init="zeros"),
+    }

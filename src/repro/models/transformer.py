@@ -1,0 +1,258 @@
+"""Decoder-only transformer (dense and MoE): llama/qwen/granite/grok family.
+
+Layers are stacked along a leading L dim and `lax.scan`ned (MaxText-style)
+so HLO size and compile time stay bounded at 512 devices. Each layer body
+is `jax.checkpoint`ed (remat) for training.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models.params import PSpec
+
+
+# ---------------------------------------------------------------------------
+# Parameter declaration
+# ---------------------------------------------------------------------------
+
+def attn_pspecs(cfg: ModelConfig, n: int, qk_norm: bool = False) -> dict:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    p = {
+        "norm": PSpec((n, d), (None, None), init="zeros"),
+        "wq": PSpec((n, d, H * hd), (None, "embed", "heads")),
+        "wk": PSpec((n, d, KV * hd), (None, "embed", "kv_heads")),
+        "wv": PSpec((n, d, KV * hd), (None, "embed", "kv_heads")),
+        "wo": PSpec((n, H * hd, d), (None, "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = PSpec((n, H * hd), (None, "heads"), init="zeros")
+        p["bk"] = PSpec((n, KV * hd), (None, "kv_heads"), init="zeros")
+        p["bv"] = PSpec((n, KV * hd), (None, "kv_heads"), init="zeros")
+    if qk_norm:
+        p["q_norm"] = PSpec((n, hd), (None, None), init="zeros")
+        p["k_norm"] = PSpec((n, hd), (None, None), init="zeros")
+    return p
+
+
+def mlp_pspecs(cfg: ModelConfig, n: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    p = {"norm": PSpec((n, d), (None, None), init="zeros"),
+         "w_up": PSpec((n, d, f), (None, "embed", "mlp")),
+         "w_down": PSpec((n, f, d), (None, "mlp", "embed"))}
+    if cfg.act == "swiglu":
+        p["w_gate"] = PSpec((n, d, f), (None, "embed", "mlp"))
+    return p
+
+
+def abstract_params(cfg: ModelConfig) -> dict:
+    n, d, V = cfg.n_layers, cfg.d_model, cfg.vocab_padded
+    qk_norm = cfg.family == "moe" and cfg.moe.n_experts >= 64  # qwen3-style
+    layer = {"attn": attn_pspecs(cfg, n, qk_norm)}
+    if cfg.moe is not None:
+        layer["moe"] = moe_mod.moe_pspecs(cfg, n)
+    else:
+        layer["mlp"] = mlp_pspecs(cfg, n)
+    params = {
+        "embed": PSpec((V, d), ("vocab", "embed")),
+        "final_norm": PSpec((d,), (None,), init="zeros"),
+        "layers": layer,
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = PSpec((d, V), ("embed", "vocab"))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    B, S, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    q = h @ p["wq"]
+    k = h @ p["wk"]
+    v = h @ p["wv"]
+    if "bq" in p:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    if "q_norm" in p:
+        q = L.rms_norm(q, p["q_norm"], cfg.norm_eps)
+        k = L.rms_norm(k, p["k_norm"], cfg.norm_eps)
+    q = L.apply_rope(q, positions, cfg.rope_theta)
+    k = L.apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_block(cfg: ModelConfig, p: dict, x: jax.Array, positions,
+               causal=True, window=None, q_chunk=1024):
+    """Full-sequence attention block. Returns (out, (k, v)) for cache fill."""
+    B, S, _ = x.shape
+    q, k, v = _project_qkv(cfg, p, x, positions)
+    o = L.attention(q, k, v, causal=causal, window=window, q_chunk=q_chunk)
+    return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype), (k, v)
+
+
+def attn_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
+                      cache_layer: dict, positions: jax.Array,
+                      window=None):
+    """Single-token attention against (possibly packed) KV cache."""
+    B = x.shape[0]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions[:, None])
+    kv_mode = cfg.amc.kv_mode
+    slot = positions % window if window is not None else positions
+    if kv_mode == "normal":
+        k_cache = L.update_cache_line(cache_layer["k"], k_new, slot)
+        v_cache = L.update_cache_line(cache_layer["v"], v_new, slot)
+        new_cache = {"k": k_cache, "v": v_cache}
+        kd, vd = k_cache, v_cache
+    elif kv_mode == "int4":
+        kp, ks = L.pack_kv_int4(k_new)
+        vp, vs = L.pack_kv_int4(v_new)
+        k_cache = L.update_cache_line(cache_layer["k"], kp, slot)
+        v_cache = L.update_cache_line(cache_layer["v"], vp, slot)
+        k_scale = L.update_cache_line(cache_layer["k_scale"], ks, slot)
+        v_scale = L.update_cache_line(cache_layer["v_scale"], vs, slot)
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "k_scale": k_scale, "v_scale": v_scale}
+        kd = L.unpack_kv_int4(k_cache, k_scale)
+        vd = L.unpack_kv_int4(v_cache, v_scale)
+    else:  # int8
+        kp, ks = L.pack_kv_int8(k_new)
+        vp, vs = L.pack_kv_int8(v_new)
+        k_cache = L.update_cache_line(cache_layer["k"], kp, slot)
+        v_cache = L.update_cache_line(cache_layer["v"], vp, slot)
+        k_scale = L.update_cache_line(cache_layer["k_scale"], ks, slot)
+        v_scale = L.update_cache_line(cache_layer["v_scale"], vs, slot)
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "k_scale": k_scale, "v_scale": v_scale}
+        kd = L.unpack_kv_int8(k_cache, k_scale)
+        vd = L.unpack_kv_int8(v_cache, v_scale)
+    o = L.decode_attention(q, kd, vd, positions, window=window)
+    return (o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype), new_cache
+
+
+def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array):
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    out = L.mlp(h, p.get("w_gate"), p["w_up"], p["w_down"], cfg.act)
+    return out.astype(x.dtype)
+
+
+def ffn_dispatch(cfg: ModelConfig, layer_p: dict, x: jax.Array, rules=None):
+    if cfg.moe is not None:
+        h = L.rms_norm(x, layer_p["moe"]["norm"], cfg.norm_eps)
+        return moe_mod.moe_ffn(cfg, layer_p["moe"], h, rules)
+    return mlp_block(cfg, layer_p["mlp"], x)
+
+
+# ---------------------------------------------------------------------------
+# Full forward (train / prefill) and decode
+# ---------------------------------------------------------------------------
+
+def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
+            rules=None, return_cache: bool = False,
+            remat_policy: str = "dots", q_chunk: int = 1024):
+    """tokens (B, S) -> logits (B, S, V) [+ prefill cache]."""
+    from repro.distributed.sharding import constrain
+    B, S = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    # Sequence parallelism: the residual stream (and thus the scan carry
+    # saved per layer for backward) is sharded along seq over the model
+    # axis; attention/MLP entry gathers it, exit re-scatters (Megatron-SP).
+    x = constrain(x, rules, "batch", "seq_sp", None)
+    positions = jnp.arange(S)
+
+    def body(x, lp):
+        x = constrain(x, rules, "batch", "seq_sp", None)
+        a, kv = attn_block(cfg, lp["attn"], x, positions, q_chunk=q_chunk)
+        x = constrain(x + a, rules, "batch", "seq_sp", None)
+        x = x + ffn_dispatch(cfg, lp, x, rules)
+        x = constrain(x, rules, "batch", "seq_sp", None)
+        return x, (kv if return_cache else None)
+
+    body_fn = _remat(body, remat_policy)
+    x, kvs = jax.lax.scan(body_fn, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = L.lm_head(x, head, cfg.vocab)
+    if return_cache:
+        return logits, _pack_prefill_cache(cfg, kvs)
+    return logits
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    pol = {"dots": jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+           "nothing": jax.checkpoint_policies.nothing_saveable,
+           "everything": jax.checkpoint_policies.everything_saveable,
+           }[policy]
+    return jax.checkpoint(fn, policy=pol)
+
+
+def _pack_prefill_cache(cfg: ModelConfig, kvs):
+    """Stacked per-layer (k, v) from prefill -> decode cache layout.
+
+    k/v arrive as (L, B, S, KV, hd). AMC kv modes pack them (the dynamic
+    plane of the serving engine: 4x / 2x capacity augmentation).
+    """
+    k, v = kvs
+    mode = cfg.amc.kv_mode
+    if mode == "normal":
+        return {"k": k, "v": v}
+    pack = L.pack_kv_int4 if mode == "int4" else L.pack_kv_int8
+    kp, ks = pack(k)
+    vp, vs = pack(v)
+    return {"k": kp, "v": vp, "k_scale": ks, "v_scale": vs}
+
+
+def decode_step(cfg: ModelConfig, params: dict, cache: dict,
+                tokens: jax.Array, positions: jax.Array, *, rules=None):
+    """One decode step. tokens (B,1), positions (B,). Returns logits, cache."""
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+
+    from repro.distributed.sharding import constrain
+
+    def body(x, scanned):
+        lp, cache_layer = scanned
+        x = constrain(x, rules, "batch", None, None)
+        a, new_cache = attn_block_decode(cfg, lp["attn"], x, cache_layer,
+                                         positions)
+        x = constrain(x + a, rules, "batch", None, None)
+        x = x + ffn_dispatch(cfg, lp, x, rules)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = L.lm_head(x, head, cfg.vocab)
+    return logits, new_cache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
+    """PSpec tree for the decode KV cache (dense/MoE transformer)."""
+    n, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
+    mode = cfg.amc.kv_mode
+    ax = (None, "cache_batch", "cache_seq", "kv_heads", None)
+    if mode == "normal":
+        return {"k": PSpec((n, batch, seq, KV, hd), ax),
+                "v": PSpec((n, batch, seq, KV, hd), ax)}
+    dt = "u8" if mode == "int4" else "i8"
+    d_store = hd // 2 if mode == "int4" else hd
+    return {"k": PSpec((n, batch, seq, KV, d_store), ax, dtype=dt),
+            "v": PSpec((n, batch, seq, KV, d_store), ax, dtype=dt),
+            "k_scale": PSpec((n, batch, seq, KV, 1), ax),
+            "v_scale": PSpec((n, batch, seq, KV, 1), ax)}

@@ -1,0 +1,8 @@
+from repro.optim.adamw import (AdamState, AMCAdamState, adamw_init,
+                               adamw_update, amc_adamw_init,
+                               amc_adamw_update, make_optimizer)
+from repro.optim.schedule import SCHEDULES, cosine, wsd
+
+__all__ = ["AdamState", "AMCAdamState", "adamw_init", "adamw_update",
+           "amc_adamw_init", "amc_adamw_update", "make_optimizer",
+           "SCHEDULES", "cosine", "wsd"]

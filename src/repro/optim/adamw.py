@@ -1,0 +1,127 @@
+"""AdamW, plus AMC-Adam: Adam whose moment buffers live in augmented
+(int8-quantized, dynamic-plane) storage.
+
+AMC-Adam is the optimizer-state instance of the paper's capacity
+augmentation: m and v are DYNAMIC data (rewritten every step, tolerant of
+quantization noise), so they take the augmented plane — 1 byte/param each
+instead of 4, with per-row scales as the "reference voltage" and the
+every-step rewrite acting as the DRAM-style refresh. Cuts optimizer HBM
+from 8 to ~2 bytes/param, which is what lets grok-1-314b train on a single
+256-chip pod (DESIGN.md SS4). Moments keep the parameter's shape (int8),
+so they inherit the parameter's sharding unchanged.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamState(NamedTuple):
+    step: jax.Array
+    m: dict
+    v: dict
+
+
+def adamw_init(params) -> AdamState:
+    z = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamState(step=jnp.zeros((), jnp.int32),
+                     m=jax.tree.map(z, params),
+                     v=jax.tree.map(z, params))
+
+
+def _split3(out):
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), pick(1), pick(2)
+
+
+def adamw_update(grads, state: AdamState, params, *, lr, b1=0.9, b2=0.95,
+                 eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        new_p = (p.astype(jnp.float32)
+                 - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                         + weight_decay * p.astype(jnp.float32)))
+        return new_p.astype(p.dtype), m, v
+
+    out = jax.tree.map(upd, grads, state.m, state.v, params)
+    new_p, new_m, new_v = _split3(out)
+    return new_p, AdamState(step=step, m=new_m, v=new_v)
+
+
+# ---------------------------------------------------------------------------
+# AMC-Adam: int8 row-quantized moments (augmented dynamic plane)
+# ---------------------------------------------------------------------------
+
+class AMCAdamState(NamedTuple):
+    step: jax.Array
+    m_q: dict      # int8, param-shaped
+    m_scale: dict  # f32, shape[:-1] + (1,)
+    v_q: dict      # int8, sqrt-space for dynamic range
+    v_scale: dict
+
+
+def _q_write(x: jax.Array):
+    """Per-row symmetric int8 write to the augmented plane."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=-1, keepdims=True) / 127.0,
+                        1e-12)
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _q_read(q: jax.Array, scale: jax.Array) -> jax.Array:
+    """Sense amplifier: dequantize the plane."""
+    return q.astype(jnp.float32) * scale
+
+
+def amc_adamw_init(params) -> AMCAdamState:
+    zq = lambda p: jnp.zeros(p.shape, jnp.int8)
+    zs = lambda p: jnp.zeros(p.shape[:-1] + (1,), jnp.float32)
+    return AMCAdamState(step=jnp.zeros((), jnp.int32),
+                        m_q=jax.tree.map(zq, params),
+                        m_scale=jax.tree.map(zs, params),
+                        v_q=jax.tree.map(zq, params),
+                        v_scale=jax.tree.map(zs, params))
+
+
+def amc_adamw_update(grads, state: AMCAdamState, params, *, lr, b1=0.9,
+                     b2=0.95, eps=1e-8, weight_decay=0.1):
+    step = state.step + 1
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, mq, ms, vq, vs, p):
+        g = g.astype(jnp.float32)
+        m = _q_read(mq, ms)                    # sense the dynamic plane
+        v = _q_read(vq, vs) ** 2               # v stored in sqrt-space
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        new_p = (p.astype(jnp.float32)
+                 - lr * ((m / bc1) / (jnp.sqrt(v / bc2) + eps)
+                         + weight_decay * p.astype(jnp.float32)))
+        mq2, ms2 = _q_write(m)                 # refresh (re-write) the plane
+        vq2, vs2 = _q_write(jnp.sqrt(v))
+        return new_p.astype(p.dtype), mq2, ms2, vq2, vs2
+
+    out = jax.tree.map(upd, grads, state.m_q, state.m_scale, state.v_q,
+                       state.v_scale, params)
+    pick = lambda i: jax.tree.map(lambda t: t[i], out,
+                                  is_leaf=lambda x: isinstance(x, tuple))
+    return pick(0), AMCAdamState(step=step, m_q=pick(1), m_scale=pick(2),
+                                 v_q=pick(3), v_scale=pick(4))
+
+
+def make_optimizer(kind: str):
+    if kind == "adamw":
+        return adamw_init, adamw_update
+    if kind == "amc_adamw":
+        return amc_adamw_init, amc_adamw_update
+    raise KeyError(kind)

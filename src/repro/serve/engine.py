@@ -1,0 +1,131 @@
+"""Batched serving engine with AMC-augmented KV storage.
+
+Prefill fills the cache (packed int4/int8 when cfg.amc.kv_mode says so —
+the dynamic plane), decode steps run against it. Implements continuous
+batching at the slot level: finished sequences release their cache rows to
+new requests (positions are per-row, the validity mask handles ragged
+lengths). The FILO discipline of the paper maps cleanly: per slot, static
+context (weights / cross-KV) is written once, the per-step KV stream is
+dynamic and drained (attended) before the slot is re-written.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import Rules
+from repro.models import model as M
+from repro.models.params import init_params, to_shape_dtype
+from repro.train import step as step_lib
+
+
+@dataclasses.dataclass(eq=False)
+class Request:
+    prompt: np.ndarray            # (plen,) int32
+    max_new_tokens: int = 16
+    id: int = 0
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, mesh, *, max_batch: int = 8,
+                 max_seq: int = 256, params=None, seed: int = 0):
+        self.cfg, self.mesh = cfg, mesh
+        self.max_batch, self.max_seq = max_batch, max_seq
+        shape = ShapeConfig("serve", max_seq, max_batch, "decode")
+        self.rules = Rules.make(mesh, cfg, shape)
+        ap = M.abstract_params(cfg)
+        with jax.set_mesh(mesh):
+            if params is None:
+                params = init_params(ap, jax.random.PRNGKey(seed))
+            self.params = params
+            ca = M.abstract_cache(cfg, shape)
+            self.cache = jax.tree.map(
+                lambda l: jnp.zeros(l.shape, l.jdtype), ca,
+                is_leaf=lambda x: hasattr(x, "jdtype"))
+        self._decode = jax.jit(
+            lambda p, c, b: M.decode_step(cfg, p, c, b, rules=self.rules),
+            donate_argnums=(1,))
+        # slot bookkeeping (host side)
+        self.positions = np.zeros(max_batch, np.int64)
+        self.remaining = np.zeros(max_batch, np.int64)
+        self.active = np.zeros(max_batch, bool)
+        self.slot_req: list[Optional[Request]] = [None] * max_batch
+        self.outputs: dict[int, list[int]] = {}
+
+    # -- continuous batching --------------------------------------------------
+
+    def add_request(self, req: Request):
+        """Claim a free slot; prefill it. Returns the slot or None."""
+        free = np.where(~self.active)[0]
+        if len(free) == 0:
+            return None
+        slot = int(free[0])
+        self.active[slot] = True
+        self.slot_req[slot] = req
+        self.positions[slot] = 0
+        self.remaining[slot] = req.max_new_tokens
+        self.outputs[req.id] = []
+        # feed prompt[:-1] through decode steps for this slot (simple
+        # warmup prefill; the last prompt token is fed by the first
+        # batched decode step, whose argmax is the first generated token)
+        for t in req.prompt[:-1]:
+            self._step_slot(slot, int(t))
+        return slot
+
+    def _step_slot(self, slot: int, token: int) -> int:
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        tokens[slot, 0] = token
+        pos = np.asarray(self.positions, np.int32)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(pos)}
+        with jax.set_mesh(self.mesh):
+            logits, self.cache = self._decode(self.params, self.cache, batch)
+        self.positions[slot] += 1
+        return int(jnp.argmax(logits[slot, -1]))
+
+    def step_all(self, last_tokens: dict[int, int]) -> dict[int, int]:
+        """One batched decode step for every active slot."""
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for s in range(self.max_batch):
+            if self.active[s]:
+                tokens[s, 0] = last_tokens.get(s, 0)
+        batch = {"tokens": jnp.asarray(tokens),
+                 "positions": jnp.asarray(self.positions, np.int32)}
+        with jax.set_mesh(self.mesh):
+            logits, self.cache = self._decode(self.params, self.cache, batch)
+        out = {}
+        arg = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+        for s in range(self.max_batch):
+            if not self.active[s]:
+                continue
+            self.positions[s] += 1
+            nxt = int(arg[s])
+            req = self.slot_req[s]
+            self.outputs[req.id].append(nxt)
+            self.remaining[s] -= 1
+            if self.remaining[s] <= 0 or self.positions[s] >= self.max_seq - 1:
+                self.active[s] = False   # release slot (continuous batching)
+                self.slot_req[s] = None
+            else:
+                out[s] = nxt
+        return out
+
+    def generate(self, requests: list[Request]) -> dict[int, list[int]]:
+        """Run all requests to completion with slot-level batching."""
+        pending = list(requests)
+        last: dict[int, int] = {}
+        while pending or self.active.any():
+            while pending:
+                slot = self.add_request(pending[0])
+                if slot is None:
+                    break
+                req = pending.pop(0)
+                last[slot] = int(req.prompt[-1]) if len(req.prompt) else 0
+            last = self.step_all(last)
+        return self.outputs

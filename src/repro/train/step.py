@@ -1,0 +1,151 @@
+"""Sharded train/prefill/decode steps and their sharding-spec builders.
+
+These are the functions the launcher jits with explicit in/out shardings;
+the dry-run lowers exactly these (so the roofline reads from the real
+production program, not a proxy).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.distributed.sharding import Rules
+from repro.models import model as M
+from repro.models.params import PSpec, is_pspec, to_shape_dtype
+from repro.optim import adamw
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainSettings:
+    optimizer: str = "adamw"        # adamw | amc_adamw
+    lr: float = 3e-4
+    weight_decay: float = 0.1
+    remat_policy: str = "nothing"   # none | dots | nothing (full remat)
+    q_chunk: int = 1024
+    grad_accum: int = 1
+
+
+# ---------------------------------------------------------------------------
+# Spec builders
+# ---------------------------------------------------------------------------
+
+def param_pspecs(abstract, rules: Rules):
+    return jax.tree.map(lambda l: rules.pspec(*l.axes), abstract,
+                        is_leaf=is_pspec)
+
+
+def param_shardings(abstract, rules: Rules):
+    return jax.tree.map(lambda s: NamedSharding(rules.mesh, s),
+                        param_pspecs(abstract, rules),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def opt_abstract(abstract_params, kind: str):
+    """PSpec tree for the optimizer state, mirroring param sharding."""
+    if kind == "adamw":
+        f32 = lambda l: PSpec(l.shape, l.axes, dtype="f32", init="zeros")
+        return adamw.AdamState(
+            step=PSpec((), (), dtype="i32", init="zeros"),
+            m=jax.tree.map(f32, abstract_params, is_leaf=is_pspec),
+            v=jax.tree.map(f32, abstract_params, is_leaf=is_pspec))
+    q = lambda l: PSpec(l.shape, l.axes, dtype="i8", init="zeros")
+    s = lambda l: PSpec(l.shape[:-1] + (1,), l.axes[:-1] + (None,),
+                        dtype="f32", init="zeros")
+    return adamw.AMCAdamState(
+        step=PSpec((), (), dtype="i32", init="zeros"),
+        m_q=jax.tree.map(q, abstract_params, is_leaf=is_pspec),
+        m_scale=jax.tree.map(s, abstract_params, is_leaf=is_pspec),
+        v_q=jax.tree.map(q, abstract_params, is_leaf=is_pspec),
+        v_scale=jax.tree.map(s, abstract_params, is_leaf=is_pspec))
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules: Rules):
+    specs = {}
+    b = rules.resolve("batch")
+    if shape.kind == "train":
+        specs["tokens"] = P(b, None)
+        specs["targets"] = P(b, None)
+    elif shape.kind == "prefill":
+        specs["tokens"] = P(b, None)
+    else:
+        specs["tokens"] = P(b, None)
+        specs["positions"] = P(b)
+    if cfg.encdec is not None:
+        specs["frames"] = P(b, None, None)
+    if cfg.vision is not None:
+        specs["patches"] = P(b, None, None)
+    return specs
+
+
+def cache_pspecs(cfg: ModelConfig, shape: ShapeConfig, rules: Rules):
+    return param_pspecs(M.abstract_cache(cfg, shape), rules)
+
+
+# ---------------------------------------------------------------------------
+# Steps
+# ---------------------------------------------------------------------------
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: object
+    step: jax.Array
+
+
+def make_train_step(cfg: ModelConfig, settings: TrainSettings, rules: Rules,
+                    lr_fn=None):
+    _, opt_update = adamw.make_optimizer(settings.optimizer)
+
+    def loss(p, b):
+        return M.loss_fn(cfg, p, b, rules=rules,
+                         remat_policy=settings.remat_policy,
+                         q_chunk=settings.q_chunk)
+
+    def train_step(state: TrainState, batch: dict):
+        n = settings.grad_accum
+        if n <= 1:
+            lval, grads = jax.value_and_grad(loss)(state.params, batch)
+        else:
+            # Gradient microbatching: bounds live activation memory to one
+            # microbatch; grads accumulate in fp32 (scan carry, aliased).
+            micro = jax.tree.map(
+                lambda t: t.reshape((n, t.shape[0] // n) + t.shape[1:]),
+                batch)
+
+            def mb(carry, mbatch):
+                gacc, lacc = carry
+                l, g = jax.value_and_grad(loss)(state.params, mbatch)
+                gacc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), gacc, g)
+                return (gacc, lacc + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), state.params)
+            (gsum, lsum), _ = jax.lax.scan(mb, (zeros, jnp.zeros((), jnp.float32)),
+                                           micro)
+            grads = jax.tree.map(lambda g: g / n, gsum)
+            lval = lsum / n
+        lr = settings.lr if lr_fn is None else lr_fn(state.step)
+        new_p, new_opt = opt_update(grads, state.opt, state.params, lr=lr,
+                                    weight_decay=settings.weight_decay)
+        return TrainState(new_p, new_opt, state.step + 1), lval
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, settings: TrainSettings, rules: Rules):
+    def prefill_step(params, batch):
+        return M.forward(cfg, params, batch, rules=rules, return_cache=True,
+                         remat_policy="none", q_chunk=settings.q_chunk)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules: Rules):
+    def decode_step(params, cache, batch):
+        return M.decode_step(cfg, params, cache, batch, rules=rules)
+    return decode_step

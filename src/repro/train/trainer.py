@@ -1,0 +1,148 @@
+"""Trainer: jitted sharded steps + checkpointing + fault tolerance.
+
+Composes: train step (train/step.py), synthetic data pipeline (prefetch +
+checkpointable position), async atomic checkpoints, auto-resume, simulated
+failure injection (Supervisor) and straggler monitoring — the host-side
+half of the multi-pod deployment story.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import checkpoint as ckpt_lib
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.data import PrefetchIterator, SyntheticLM
+from repro.distributed.fault import StragglerMonitor, Supervisor
+from repro.distributed.sharding import Rules
+from repro.models import model as M
+from repro.models.params import init_params, to_shape_dtype
+from repro.optim import adamw, SCHEDULES
+from repro.train import step as step_lib
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    ckpt_every: int = 20
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    log_every: int = 10
+    schedule: str = "cosine"       # cosine | wsd
+    warmup: int = 10
+    seed: int = 0
+    keep_ckpts: int = 3
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, shape: ShapeConfig, mesh,
+                 settings: step_lib.TrainSettings,
+                 tcfg: TrainerConfig,
+                 failure_injector: Optional[Callable[[int], None]] = None):
+        self.cfg, self.shape, self.mesh = cfg, shape, mesh
+        self.settings, self.tcfg = settings, tcfg
+        self.rules = Rules.make(mesh, cfg, shape)
+        lr_fn = lambda step: SCHEDULES[tcfg.schedule](
+            step, peak_lr=settings.lr, warmup=tcfg.warmup,
+            total=tcfg.total_steps)
+        self._step_fn = step_lib.make_train_step(cfg, settings, self.rules,
+                                                 lr_fn=lr_fn)
+        ap = M.abstract_params(cfg)
+        self.param_shardings = step_lib.param_shardings(ap, self.rules)
+        oa = step_lib.opt_abstract(ap, settings.optimizer)
+        self.opt_shardings = step_lib.param_shardings(oa, self.rules)
+        self.state_shardings = step_lib.TrainState(
+            self.param_shardings, self.opt_shardings,
+            NamedSharding(mesh, P()))
+        b_pspecs = step_lib.batch_pspecs(cfg, shape, self.rules)
+        self.batch_shardings = {k: NamedSharding(mesh, v)
+                                for k, v in b_pspecs.items()}
+        self.jit_step = jax.jit(
+            self._step_fn,
+            in_shardings=(self.state_shardings, self.batch_shardings),
+            out_shardings=(self.state_shardings, NamedSharding(mesh, P())),
+            donate_argnums=(0,))
+
+        opt_init, _ = adamw.make_optimizer(settings.optimizer)
+        with jax.set_mesh(mesh):
+            params = init_params(ap, jax.random.PRNGKey(tcfg.seed))
+            params = jax.tree.map(jax.device_put, params,
+                                  self.param_shardings)
+            self.state = step_lib.TrainState(
+                params, opt_init(params), jnp.zeros((), jnp.int32))
+        self.data = PrefetchIterator(
+            SyntheticLM(cfg.vocab, shape.seq_len, shape.global_batch,
+                        seed=tcfg.seed),
+            put_fn=lambda b: {k: jax.device_put(jnp.asarray(v),
+                                                self.batch_shardings[k])
+                              for k, v in b.items()})
+        self.ckpt = ckpt_lib.AsyncCheckpointer(tcfg.ckpt_dir,
+                                               keep=tcfg.keep_ckpts)
+        self.straggler = StragglerMonitor()
+        self.supervisor = Supervisor(self._restore_latest)
+        self.failure_injector = failure_injector
+        self.losses: list = []
+        self._maybe_resume()
+
+    # -- checkpoint/restore --------------------------------------------------
+
+    def _save(self, step: int) -> None:
+        self.ckpt.save(step, self.state,
+                       extra={"data": self.data.state_dict(),
+                              "losses": [float(l) for l in self.losses]})
+
+    def _maybe_resume(self) -> None:
+        latest = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+        if latest is not None:
+            self._restore(latest)
+
+    def _restore_latest(self) -> int:
+        self.ckpt.wait()
+        latest = ckpt_lib.latest_step(self.tcfg.ckpt_dir)
+        if latest is None:
+            raise RuntimeError("failure before any checkpoint")
+        self._restore(latest)
+        return latest
+
+    def _restore(self, step: int) -> None:
+        self.state, extra = ckpt_lib.restore(
+            self.tcfg.ckpt_dir, step, self.state,
+            shardings=self.state_shardings)
+        self.data.load_state_dict(extra["data"])
+        self.losses = list(extra.get("losses", []))
+
+    # -- loop -----------------------------------------------------------------
+
+    def current_step(self) -> int:
+        return int(self.state.step)
+
+    def train(self, n_steps: Optional[int] = None) -> list:
+        target = (self.tcfg.total_steps if n_steps is None
+                  else self.current_step() + n_steps)
+        with jax.set_mesh(self.mesh):
+            while self.current_step() < target:
+                step = self.current_step()
+
+                def one():
+                    if self.failure_injector is not None:
+                        self.failure_injector(step)
+                    batch = next(self.data)
+                    t0 = time.time()
+                    self.state, loss = self.jit_step(self.state, batch)
+                    loss = float(loss)
+                    self.straggler.record(step, time.time() - t0)
+                    self.losses.append(loss)
+                    if (step + 1) % self.tcfg.ckpt_every == 0:
+                        self._save(step + 1)
+
+                self.supervisor.run_step(one)
+        self.ckpt.wait()
+        return self.losses
+
+    def close(self):
+        self.data.close()
+        self.ckpt.wait()

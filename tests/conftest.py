@@ -1,0 +1,9 @@
+import os
+
+# Smoke tests and benches must see the real device count (1 CPU device) —
+# the 512-device override lives ONLY inside launch/dryrun.py.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import jax  # noqa: E402
+
+jax.config.update("jax_threefry_partitionable", True)

@@ -1,0 +1,144 @@
+"""Per-kernel allclose vs the ref.py oracles, swept over shapes, dtypes and
+block sizes (interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import quant, ternary
+from repro.kernels import ops, ref
+
+
+def _rel_err(a, b):
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ternary matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [(128, 512, 256), (256, 1024, 128),
+                                   (128, 2048, 512), (384, 512, 384)])
+def test_ternary_matmul_shapes(M, K, N):
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    t, scale = ternary.ternarize(w)
+    wp = ternary.pack_ternary_2bit(t)
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, K), jnp.bfloat16)
+    y = ops.ternary_matmul(x, wp, scale, bm=128, bk=512, bn=128)
+    r = ref.ternary_matmul_ref(x, wp, scale)
+    assert _rel_err(y, r) < 0.02
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(64, 256, 64), (128, 512, 256),
+                                      (128, 1024, 128)])
+def test_ternary_matmul_blocks(bm, bk, bn):
+    M, K, N = 256, 1024, 256
+    w = jax.random.normal(jax.random.PRNGKey(2), (K, N))
+    t, scale = ternary.ternarize(w)
+    wp = ternary.pack_ternary_2bit(t)
+    x = jax.random.normal(jax.random.PRNGKey(3), (M, K), jnp.bfloat16)
+    y = ops.ternary_matmul(x, wp, scale, bm=bm, bk=bk, bn=bn)
+    r = ref.ternary_matmul_ref(x, wp, scale)
+    assert _rel_err(y, r) < 0.02
+
+
+def test_ternary_matmul_fp32_activations():
+    M, K, N = 128, 512, 128
+    w = jax.random.normal(jax.random.PRNGKey(4), (K, N))
+    t, scale = ternary.ternarize(w)
+    wp = ternary.pack_ternary_2bit(t)
+    x = jax.random.normal(jax.random.PRNGKey(5), (M, K), jnp.float32)
+    y = ops.ternary_matmul(x.astype(jnp.bfloat16), wp, scale)
+    r = ref.ternary_matmul_ref(x.astype(jnp.bfloat16), wp, scale)
+    assert _rel_err(y, r) < 0.02
+
+
+# ---------------------------------------------------------------------------
+# dual-plane matmul
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("M,K,N", [(128, 256, 256), (256, 512, 128),
+                                   (128, 1024, 256)])
+def test_dual_plane_matmul_shapes(M, K, N):
+    k = jax.random.PRNGKey(0)
+    w_hi = jax.random.normal(k, (K, N))
+    w_lo = jax.random.normal(jax.random.fold_in(k, 1), (K, N))
+    qh, sh = quant.quantize_int4(w_hi, axis=0)
+    ql, sl = quant.quantize_int4(w_lo, axis=0)
+    buf = quant.pack_int4_pair(qh, ql)
+    x = jax.random.normal(jax.random.fold_in(k, 2), (M, K), jnp.bfloat16)
+    yh, yl = ops.dual_plane_matmul(x, buf, sh, sl, bm=128, bk=256, bn=128)
+    rh, rl = ref.dual_plane_matmul_ref(x, buf, sh, sl)
+    assert _rel_err(yh, rh) < 0.02
+    assert _rel_err(yl, rl) < 0.02
+
+
+def test_dual_plane_one_buffer_two_results_differ():
+    """The two planes must really be independent data."""
+    K, N = 256, 128
+    k = jax.random.PRNGKey(7)
+    qh, sh = quant.quantize_int4(jax.random.normal(k, (K, N)), axis=0)
+    ql, sl = quant.quantize_int4(
+        jax.random.normal(jax.random.fold_in(k, 1), (K, N)), axis=0)
+    buf = quant.pack_int4_pair(qh, ql)
+    x = jax.random.normal(jax.random.fold_in(k, 2), (128, K), jnp.bfloat16)
+    yh, yl = ops.dual_plane_matmul(x, buf, sh, sl)
+    assert not np.allclose(np.asarray(yh, np.float32),
+                           np.asarray(yl, np.float32), atol=0.1)
+
+
+# ---------------------------------------------------------------------------
+# packed-KV decode attention
+# ---------------------------------------------------------------------------
+
+def _make_kv(key, B, KV, S, D):
+    kf = jax.random.normal(key, (B, KV, S, D))
+    vf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D))
+    kq, ks = quant.quantize_int4(kf, axis=-1)
+    vq, vs = quant.quantize_int4(vf, axis=-1)
+    kp = quant.pack_int4_pair(kq[..., 0::2], kq[..., 1::2])
+    vp = quant.pack_int4_pair(vq[..., 0::2], vq[..., 1::2])
+    return kp, vp, ks[..., 0].astype(jnp.bfloat16), vs[..., 0].astype(jnp.bfloat16)
+
+
+@pytest.mark.parametrize("B,KV,Hg,D,S", [(2, 4, 4, 64, 512),
+                                         (1, 8, 2, 128, 1024),
+                                         (4, 2, 8, 64, 256)])
+def test_packed_kv_attention_shapes(B, KV, Hg, D, S):
+    key = jax.random.PRNGKey(0)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kp, vp, ks, vs = _make_kv(jax.random.fold_in(key, 9), B, KV, S, D)
+    lengths = jnp.asarray(
+        np.random.default_rng(0).integers(1, S + 1, size=(B,)), jnp.int32)
+    o = ops.packed_kv_attention(q, kp, vp, ks, vs, lengths, bs=128)
+    r = ref.packed_kv_attention_ref(q, kp, vp, ks, vs, lengths)
+    assert _rel_err(o, r) < 0.03
+
+
+def test_packed_kv_attention_block_sweep():
+    B, KV, Hg, D, S = 2, 2, 4, 64, 512
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kp, vp, ks, vs = _make_kv(jax.random.fold_in(key, 4), B, KV, S, D)
+    lengths = jnp.array([300, 512], jnp.int32)
+    r = ref.packed_kv_attention_ref(q, kp, vp, ks, vs, lengths)
+    for bs in (64, 128, 256, 512):
+        o = ops.packed_kv_attention(q, kp, vp, ks, vs, lengths, bs=bs)
+        assert _rel_err(o, r) < 0.03, bs
+
+
+def test_packed_kv_attention_respects_length_mask():
+    """Tokens beyond `length` must not affect the output."""
+    B, KV, Hg, D, S = 1, 2, 2, 64, 256
+    key = jax.random.PRNGKey(5)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kp, vp, ks, vs = _make_kv(jax.random.fold_in(key, 6), B, KV, S, D)
+    lengths = jnp.array([100], jnp.int32)
+    o1 = ops.packed_kv_attention(q, kp, vp, ks, vs, lengths, bs=64)
+    # scramble the masked region
+    kp2 = kp.at[:, :, 100:].set(255)
+    vp2 = vp.at[:, :, 100:].set(255)
+    o2 = ops.packed_kv_attention(q, kp2, vp2, ks, vs, lengths, bs=64)
+    assert np.allclose(np.asarray(o1, np.float32), np.asarray(o2, np.float32))

@@ -1,0 +1,171 @@
+"""System behaviour tests: attention semantics, MoE dispatch invariants,
+RoPE/window correctness, loss masking of the padded vocab."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.configs import get_arch
+from repro.models import layers as L
+from repro.models import moe as moe_mod
+from repro.models import model as M
+from repro.models.params import init_params
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+def _naive_attention(q, k, v, causal=True, window=None):
+    B, S, H, D = q.shape
+    KV = k.shape[2]
+    qg = q.reshape(B, S, KV, H // KV, D)
+    s = jnp.einsum("bqkhd,bskd->bkhqs", qg, k).astype(jnp.float32)
+    s = s / (D ** 0.5)
+    i = jnp.arange(S)[:, None]
+    j = jnp.arange(S)[None, :]
+    m = jnp.ones((S, S), bool)
+    if causal:
+        m &= j <= i
+    if window is not None:
+        m &= j > i - window
+    s = jnp.where(m[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkhqs,bskd->bqkhd", p.astype(v.dtype), v)
+    return o.reshape(B, S, H, D)
+
+
+@pytest.mark.parametrize("S,chunk,window", [(64, 16, None), (64, 64, None),
+                                            (64, 16, 24), (128, 32, 32)])
+def test_chunked_attention_matches_naive(S, chunk, window):
+    key = jax.random.PRNGKey(0)
+    B, H, KV, D = 2, 4, 2, 16
+    q = jax.random.normal(key, (B, S, H, D), jnp.float32)
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D))
+    out = L.attention(q, k, v, causal=True, window=window, q_chunk=chunk)
+    ref = _naive_attention(q, k, v, causal=True, window=window)
+    assert np.allclose(np.asarray(out), np.asarray(ref), atol=2e-3)
+
+
+def test_decode_attention_ring_permutation_invariance():
+    """Ring caches shuffle token order; softmax must not care."""
+    key = jax.random.PRNGKey(3)
+    B, H, KV, D, S = 1, 2, 2, 16, 8
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D))
+    pos = jnp.array([S - 1])
+    o1 = L.decode_attention(q, k, v, pos)
+    perm = jax.random.permutation(jax.random.fold_in(key, 3), S)
+    o2 = L.decode_attention(q, k[:, perm], v[:, perm], pos)
+    assert np.allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+@given(st.integers(1, 63))
+@settings(max_examples=10, deadline=None)
+def test_decode_attention_mask_property(valid_len):
+    """Cache beyond `positions` must not influence the output."""
+    key = jax.random.PRNGKey(4)
+    B, H, KV, D, S = 1, 2, 1, 8, 64
+    q = jax.random.normal(key, (B, 1, H, D))
+    k = jax.random.normal(jax.random.fold_in(key, 1), (B, S, KV, D))
+    v = jax.random.normal(jax.random.fold_in(key, 2), (B, S, KV, D))
+    pos = jnp.array([valid_len - 1])
+    o1 = L.decode_attention(q, k, v, pos)
+    k2 = k.at[:, valid_len:].set(99.0)
+    v2 = v.at[:, valid_len:].set(-99.0)
+    o2 = L.decode_attention(q, k2, v2, pos)
+    assert np.allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+def test_rope_relative_property():
+    """RoPE: <q_i, k_j> depends only on (i - j)."""
+    D = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, D))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, D))
+
+    def dot_at(qi, kj):
+        qr = L.apply_rope(q, jnp.array([qi]))
+        kr = L.apply_rope(k, jnp.array([kj]))
+        return float(jnp.sum(qr * kr))
+
+    assert abs(dot_at(5, 3) - dot_at(12, 10)) < 1e-3
+    assert abs(dot_at(5, 3) - dot_at(5, 4)) > 1e-4  # position-dependent
+
+
+# ---------------------------------------------------------------------------
+# MoE dispatch invariants
+# ---------------------------------------------------------------------------
+
+def _moe_setup(E=8, k=2, d=16, f=32):
+    base = get_arch("qwen3-moe-30b-a3b").reduced()
+    cfg = dataclasses.replace(
+        base, d_model=d, d_ff=f,
+        moe=dataclasses.replace(base.moe, n_experts=E, top_k=k))
+    p = init_params(moe_mod.moe_pspecs(cfg, 1), jax.random.PRNGKey(0))
+    p = jax.tree.map(lambda t: t[0], p)  # drop layer dim
+    return cfg, p
+
+
+def test_moe_identity_when_experts_equal():
+    """If all experts share weights, output == single-expert FFN (combine
+    weights sum to 1 after top-k renorm and no token is dropped)."""
+    cfg, p = _moe_setup(E=4, k=2)
+    for name in ("w_gate", "w_up", "w_down"):
+        p[name] = jnp.broadcast_to(p[name][:1], p[name].shape)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 8, cfg.d_model),
+                          jnp.float32) * 0.1
+    cfg_big_cap = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=8.0))
+    out = moe_mod.moe_ffn(cfg_big_cap, p, x)
+    w_gate, w_up, w_down = p["w_gate"][0], p["w_up"][0], p["w_down"][0]
+    expect = (jax.nn.silu(x @ w_gate) * (x @ w_up)) @ w_down
+    assert np.allclose(np.asarray(out, np.float32),
+                       np.asarray(expect, np.float32), atol=3e-2)
+
+
+def test_moe_capacity_drops_tokens():
+    cfg, p = _moe_setup(E=4, k=1)
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=0.26, top_k=1))
+    # steer every token to expert 0 by biasing the router
+    p["router"] = jnp.zeros_like(p["router"]).at[:, 0].set(10.0)
+    x = jax.random.normal(jax.random.PRNGKey(2), (1, 16, cfg.d_model))
+    out = moe_mod.moe_ffn(cfg, p, x)
+    # capacity ~ ceil(16*1*0.26/4) = 2 of 16 tokens survive
+    nonzero = np.abs(np.asarray(out, np.float32)).sum(-1) > 1e-6
+    assert 1 <= nonzero.sum() <= 4, nonzero.sum()
+
+
+# ---------------------------------------------------------------------------
+# loss / vocab padding
+# ---------------------------------------------------------------------------
+
+def test_padded_vocab_never_predicted():
+    cfg = get_arch("granite-3-2b").reduced()
+    assert cfg.vocab_padded % 256 == 0
+    big = get_arch("granite-3-2b")
+    assert big.vocab_padded == 49408 and big.vocab == 49155
+    params = init_params(M.abstract_params(cfg), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, 8), 0, cfg.vocab)
+    logits = M.forward(cfg, params, {"tokens": toks}, q_chunk=8)
+    pad_logits = np.asarray(logits[..., cfg.vocab:], np.float32)
+    if pad_logits.size:
+        assert (pad_logits <= -1e29).all()
+
+
+def test_loss_is_finite_and_positive():
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    params = init_params(M.abstract_params(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 16
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
+                                          cfg.vocab),
+             "targets": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                                           cfg.vocab)}
+    loss = M.loss_fn(cfg, params, batch, q_chunk=8)
+    assert np.isfinite(float(loss)) and float(loss) > 0
+    assert float(loss) < np.log(cfg.vocab_padded) + 1.0
