@@ -73,6 +73,65 @@ def bench_decode_kv_modes():
             f"cache_bytes={cache_bytes} tok_per_s={B/(us/1e6):.0f}")
 
 
-def run_all():
+def bench_serve_prefill_decode() -> dict:
+    """Serving hot path on the reduced config: prefill tokens/sec with
+    single-dispatch chunked prefill (vs the P-dispatch per-token loop),
+    decode steps/sec through `step_all`, and the modeled HBM traffic of
+    the packed cache. Returns the BENCH_serve.json payload."""
+    from benchmarks.kernels_bench import serve_hbm_model
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve import Request, ServeEngine
+
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    chunk, plen, new_tokens = 16, 33, 8
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=64,
+                      prefill_chunk=chunk)
+    rng = np.random.default_rng(0)
+
+    def mk(i):
+        return Request(prompt=rng.integers(0, cfg.vocab, size=(plen,))
+                       .astype(np.int32), max_new_tokens=new_tokens, id=i)
+
+    # warmup (compiles the prefill and decode dispatch shapes)
+    eng.add_request(mk(0))
+    eng.step_all()
+
+    d0, t0 = eng.dispatch_count, time.perf_counter()
+    eng.add_request(mk(1))
+    prefill_s = time.perf_counter() - t0
+    prefill_dispatches = eng.dispatch_count - d0
+    prefill_tokens = plen - 1
+    row("serve_prefill", prefill_s * 1e6,
+        f"tokens={prefill_tokens} dispatches={prefill_dispatches} "
+        f"chunk={chunk} tok_per_s={prefill_tokens/prefill_s:.0f} "
+        f"per_token_path_dispatches={prefill_tokens}")
+
+    emitted0 = sum(len(v) for v in eng.outputs.values())
+    n, t0 = 0, time.perf_counter()
+    while eng.active.any():
+        eng.step_all()
+        n += 1
+    decode_s = time.perf_counter() - t0
+    emitted = sum(len(v) for v in eng.outputs.values()) - emitted0
+    row("serve_decode", decode_s / max(n, 1) * 1e6,
+        f"steps={n} steps_per_s={n/decode_s:.1f} "
+        f"tok_per_s={emitted/decode_s:.0f}")
+
+    return {
+        "config": {"arch": "qwen1.5-0.5b(reduced)", "prefill_chunk": chunk,
+                   "max_batch": 2, "max_seq": 64, "kv_mode": cfg.amc.kv_mode},
+        "prefill": {"tokens": prefill_tokens,
+                    "dispatches": prefill_dispatches,
+                    "per_token_path_dispatches": prefill_tokens,
+                    "tokens_per_s": prefill_tokens / prefill_s},
+        "decode": {"steps": n, "steps_per_s": n / decode_s,
+                   "tokens_per_s": emitted / decode_s},
+        "hbm_model": serve_hbm_model(),
+    }
+
+
+def run_all() -> dict:
+    """Runs every e2e bench; returns the BENCH_serve.json payload."""
     bench_train_step()
     bench_decode_kv_modes()
+    return bench_serve_prefill_decode()

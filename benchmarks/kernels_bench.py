@@ -58,12 +58,15 @@ def bench_packed_kv_attention():
     key = jax.random.PRNGKey(0)
     q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
     kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (B, KV, S, D))
     kq, ks = quant.quantize_int4(kf, axis=-1)
+    vq, vs = quant.quantize_int4(vf, axis=-1)
     kp = quant.pack_int4_pair(kq[..., 0::2], kq[..., 1::2])
-    vp, vs = kp, ks[..., 0].astype(jnp.bfloat16)
-    ks2 = vs
+    vp = quant.pack_int4_pair(vq[..., 0::2], vq[..., 1::2])
+    ks2 = ks[..., 0].astype(jnp.bfloat16)
+    vs2 = vs[..., 0].astype(jnp.bfloat16)
     lengths = jnp.full((B,), S, jnp.int32)
-    us = _time_us(jax.jit(ref.packed_kv_attention_ref), q, kp, vp, ks2, vs,
+    us = _time_us(jax.jit(ref.packed_kv_attention_ref), q, kp, vp, ks2, vs2,
                   lengths, n=3)
     cache_packed = 2 * B * KV * S * (D // 2 + 2)
     cache_bf16 = 2 * B * KV * S * D * 2
@@ -74,7 +77,69 @@ def bench_packed_kv_attention():
         f"vs_bf16_us={cache_bf16/HBM_BW*1e6:.1f}")
 
 
+def bench_quantize_pack_kv():
+    """Fused bf16 -> packed int4 + scales (one pass) vs the unfused
+    quantize-then-pack pipeline whose int8 intermediate round-trips HBM."""
+    B, S, KV, D = 8, 4096, 8, 128
+    kv = jax.random.normal(jax.random.PRNGKey(0), (B, S, KV, D),
+                           jnp.bfloat16)
+    us = _time_us(jax.jit(ref.quantize_pack_kv_ref), kv, n=5)
+    N = B * S * KV
+    bytes_fused = N * D * 2 + N * (D // 2) + N * 4          # in + packed + scale
+    bytes_unfused = bytes_fused + 2 * N * D                  # + int8 roundtrip
+    row("quantize_pack_kv_ref_cpu", us,
+        f"B{B}xS{S}xKV{KV}xD{D} hbm_bytes={bytes_fused} "
+        f"vs_unfused={bytes_unfused} "
+        f"traffic_ratio={bytes_unfused/bytes_fused:.2f}x "
+        f"tpu_roofline_us={bytes_fused/HBM_BW*1e6:.1f}")
+
+
+def bench_length_skipping():
+    """Grid work ∝ length: the attention kernel's block-visit counter on a
+    ragged batch, vs the blocks a length-blind kernel would touch."""
+    from repro.kernels import ops
+    B, KV, Hg, D, S, bs = 4, 2, 4, 64, 1024, 128
+    key = jax.random.PRNGKey(3)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D),
+                           jnp.bfloat16)
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (B, KV, S, D),
+                           jnp.bfloat16)
+    kp, ks = ops.quantize_pack_kv(kf)
+    vp, vs = ops.quantize_pack_kv(vf)
+    lengths = jnp.array([12, 100, 512, 1024], jnp.int32)
+
+    def run():
+        return ops.packed_kv_attention(q, kp, vp, ks[..., 0], vs[..., 0],
+                                       lengths, bs=bs, debug_visits=True)
+
+    _, visits = run()                      # warmup: trace + compile
+    us = _time_us(run, n=3)
+    visited = int(jax.block_until_ready(visits).sum())
+    total = B * KV * (S // bs)
+    row("packed_kv_attention_length_skip", us,
+        f"lengths={list(map(int, lengths))} bs={bs} "
+        f"blocks_visited={visited} blocks_total={total} "
+        f"grid_work_saved={1 - visited/total:.2%}")
+
+
+def serve_hbm_model(cfg=None, *, batch=8, seq=8192):
+    """Modeled per-decode-step KV HBM traffic: packed int4 vs bf16 cache.
+    This is the quantity the TPU roofline charges the decode loop."""
+    L_, KV, hd = ((cfg.n_layers, cfg.n_kv_heads, cfg.hd) if cfg is not None
+                  else (32, 8, 128))
+    rows = batch * seq * KV * L_
+    int4 = rows * (hd // 2 + 2) * 2          # K and V: packed + bf16 scale
+    bf16 = rows * hd * 2 * 2
+    return {"kv_int4_bytes": int4, "kv_bf16_bytes": bf16,
+            "traffic_ratio": bf16 / int4,
+            "decode_roofline_us_int4": int4 / HBM_BW * 1e6,
+            "decode_roofline_us_bf16": bf16 / HBM_BW * 1e6}
+
+
 def run_all():
     bench_ternary_matmul()
     bench_dual_plane_matmul()
     bench_packed_kv_attention()
+    bench_quantize_pack_kv()
+    bench_length_skipping()

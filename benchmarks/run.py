@@ -1,8 +1,13 @@
 """Benchmark harness — one section per paper table + kernel and e2e benches.
-Prints ``name,us_per_call,derived`` CSV (see DESIGN.md SS7 experiment index).
+Prints ``name,us_per_call,derived`` CSV (see DESIGN.md SS7 experiment index)
+and writes BENCH_serve.json (prefill/decode throughput + modeled HBM
+traffic for the packed cache) so the serving perf trajectory is tracked
+across PRs.
 """
 from __future__ import annotations
 
+import json
+import os
 import sys
 
 
@@ -14,7 +19,12 @@ def main() -> None:
     print("# -- pallas kernels (bytes/roofline; CPU ref wall-time) --")
     kernels_bench.run_all()
     print("# -- end-to-end (reduced configs, CPU) --")
-    e2e_bench.run_all()
+    serve = e2e_bench.run_all()
+    out = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(serve, f, indent=2)
+    print(f"# wrote {out}")
     print("# done")
 
 

@@ -88,5 +88,7 @@ def dual_plane_matmul_pallas(x: jax.Array, buf: jax.Array,
                    jax.ShapeDtypeStruct((M, N), out_dtype)],
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
                         pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, buf, hi_scale, lo_scale)

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.dual_plane_matmul import dual_plane_matmul_pallas
 from repro.kernels.packed_kv_attention import packed_kv_attention_pallas
+from repro.kernels.quantize_pack_kv import quantize_pack_kv_pallas
 from repro.kernels.ternary_matmul import ternary_matmul_pallas
 
 
@@ -46,13 +47,47 @@ def dual_plane_matmul(x, buf, hi_scale, lo_scale, *, bm=128, bk=256, bn=256,
                                     interpret=_auto_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("bs", "interpret", "use_ref"))
+@functools.partial(jax.jit, static_argnames=("bs", "debug_visits",
+                                             "interpret", "use_ref"))
 def packed_kv_attention(q, k_packed, v_packed, k_scale, v_scale, lengths, *,
-                        bs=512, interpret=None, use_ref=False):
-    """Flash-decode over an int4-packed KV cache (never dequantized in HBM)."""
+                        bs=512, debug_visits=False, interpret=None,
+                        use_ref=False):
+    """Flash-decode over an int4-packed KV cache (never dequantized in HBM).
+
+    `lengths` is scalar-prefetched: sequence blocks past a row's valid
+    length are skipped (no DMA, no compute). With `debug_visits` also
+    returns the per-(row, head) count of blocks actually processed."""
     if use_ref:
+        assert not debug_visits, "visit counting is a kernel-path feature"
         return ref.packed_kv_attention_ref(q, k_packed, v_packed, k_scale,
                                            v_scale, lengths)
     return packed_kv_attention_pallas(q, k_packed, v_packed, k_scale,
                                       v_scale, lengths, bs=bs,
+                                      debug_visits=debug_visits,
                                       interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("bn", "interpret", "use_ref"))
+def quantize_pack_kv(kv, *, bn=256, interpret=None, use_ref=False):
+    """Fused bf16 -> int4-packed cache rows + per-token scales, one pass.
+
+    kv: (..., D) with D even. Returns (packed (..., D//2) uint8,
+    scale (..., 1) bf16) — the same layout `models.layers.pack_kv_int4`
+    produces, with no dequantized/int8 intermediate in HBM."""
+    if use_ref:
+        p, s = ref.quantize_pack_kv_ref(kv)
+        return p, s.astype(jnp.bfloat16)
+    lead = kv.shape[:-1]
+    D = kv.shape[-1]
+    flat = kv.reshape(-1, D)
+    N = flat.shape[0]
+    bn_eff = min(bn, N)
+    pad = (-N) % bn_eff
+    if pad:
+        flat = jnp.concatenate(
+            [flat, jnp.zeros((pad, D), flat.dtype)], axis=0)
+    p, s = quantize_pack_kv_pallas(flat, bn=bn_eff,
+                                   interpret=_auto_interpret(interpret))
+    p = p[:N].reshape(*lead, D // 2)
+    s = s[:N].reshape(*lead, 1).astype(jnp.bfloat16)
+    return p, s

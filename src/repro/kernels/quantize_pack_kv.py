@@ -1,0 +1,68 @@
+"""Pallas TPU kernel: fused KV quantize-and-pack (the write driver of the
+serving engine's augmented dynamic plane).
+
+Prefill produces bf16 K/V chunks; the packed cache stores int4 nibbles +
+per-token scales. Doing quantize -> nibble-pack as one kernel means the
+bf16 chunk streams HBM->VMEM once and only packed bytes + scales go back —
+no dequantized or int8 intermediate ever lands in HBM (the paper's "write
+boosting": one array access per stored word, however many logical values
+it encodes).
+
+Per row (one token x head): scale = max|x| / 7, q = clip(round(x/scale)),
+even lanes -> high nibble, odd lanes -> low nibble (same convention as
+`quant.pack_int4_pair`, so the attention kernel's unpack is the inverse).
+
+Grid: (N // bn,) over flattened token-head rows — embarrassingly parallel
+(`dimension_semantics=("parallel",)`). Block (bn, D): with bn = 256,
+D = 128 the VMEM term is bn*D*2 (in) + bn*D/2 (packed) + bn*4 (scale)
+~ 81 KiB, far under budget; Mosaic double-buffers the row stream.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quant import INT4_MAX
+
+DEFAULT_BN = 256
+
+
+def _qpack_kernel(x_ref, p_ref, s_ref, *, bn: int, d: int):
+    # arithmetic stays in the input dtype (bf16 for KV) so the quantized
+    # values are bit-identical to quant.quantize_int4 / pack_kv_int4 —
+    # the engine's golden test depends on this parity
+    x = x_ref[...]                                        # (bn, D)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT4_MAX            # (bn, 1)
+    q = jnp.clip(jnp.round(x / scale), -INT4_MAX, INT4_MAX).astype(jnp.int8)
+    qr = q.reshape(bn, d // 2, 2)
+    hi = jnp.bitwise_and(qr[:, :, 0].astype(jnp.uint8), jnp.uint8(0x0F))
+    lo = jnp.bitwise_and(qr[:, :, 1].astype(jnp.uint8), jnp.uint8(0x0F))
+    p_ref[...] = jnp.bitwise_or(jnp.left_shift(hi, 4), lo)
+    s_ref[...] = scale.astype(s_ref.dtype)
+
+
+def quantize_pack_kv_pallas(kv: jax.Array, *, bn: int = DEFAULT_BN,
+                            interpret: bool = False):
+    """kv: (N, D) bf16/f32, D even. Returns (packed (N, D//2) uint8,
+    scale (N, 1) f32). N % bn == 0 (pad in the wrapper)."""
+    N, D = kv.shape
+    assert D % 2 == 0, D
+    bn = min(bn, N)
+    assert N % bn == 0, (N, bn)
+    return pl.pallas_call(
+        functools.partial(_qpack_kernel, bn=bn, d=D),
+        grid=(N // bn,),
+        in_specs=[pl.BlockSpec((bn, D), lambda i: (i, 0))],
+        out_specs=[pl.BlockSpec((bn, D // 2), lambda i: (i, 0)),
+                   pl.BlockSpec((bn, 1), lambda i: (i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((N, D // 2), jnp.uint8),
+                   jax.ShapeDtypeStruct((N, 1), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel",)),
+        interpret=interpret,
+    )(kv)

@@ -26,6 +26,15 @@ def dual_plane_matmul_ref(x: jax.Array, buf: jax.Array, hi_scale: jax.Array,
             (xf @ lo * lo_scale).astype(out_dtype))
 
 
+def quantize_pack_kv_ref(kv: jax.Array):
+    """kv (..., D) bf16 -> (packed (..., D//2) uint8, scale (..., 1) f32).
+    Same per-row int4 quantization + nibble interleave as
+    `models.layers.pack_kv_int4` (even lanes high, odd lanes low)."""
+    q, scale = quant.quantize_int4(kv, axis=-1)
+    packed = quant.pack_int4_pair(q[..., 0::2], q[..., 1::2])
+    return packed, scale.astype(jnp.float32)
+
+
 def _unpack_pairs_ref(packed: jax.Array) -> jax.Array:
     hi = quant.unpack_int4_hi(packed)
     lo = quant.unpack_int4_lo(packed)

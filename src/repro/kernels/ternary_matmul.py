@@ -33,12 +33,14 @@ DEFAULT_BN = 256
 
 
 def _unpack_2bit(wp: jax.Array, bk: int, bn: int) -> jax.Array:
-    """(bk//4, bn) uint8 -> (bk, bn) bf16 trits in {-1, 0, +1}."""
-    digs = []
-    for i in range(4):
-        d = jnp.bitwise_and(jnp.right_shift(wp, 2 * i), jnp.uint8(0x3))
-        digs.append(d.astype(jnp.int8) - 1)
-    w = jnp.stack(digs, axis=1)            # (bk//4, 4, bn)
+    """(bk//4, bn) uint8 -> (bk, bn) bf16 trits in {-1, 0, +1}.
+
+    One broadcast shift over a unit axis extracts all four 2-bit digits
+    at once (vs four serialized shift/mask rounds)."""
+    shifts = (jnp.arange(4, dtype=jnp.uint8) * 2)[None, :, None]
+    d = jnp.bitwise_and(jnp.right_shift(wp[:, None, :], shifts),
+                        jnp.uint8(0x3))            # (bk//4, 4, bn)
+    w = d.astype(jnp.int8) - 1
     return w.reshape(bk, bn).astype(jnp.bfloat16)
 
 
@@ -86,5 +88,7 @@ def ternary_matmul_pallas(x: jax.Array, w_packed: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
         out_shape=jax.ShapeDtypeStruct((M, N), out_dtype),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
         interpret=interpret,
     )(x, w_packed, scale)

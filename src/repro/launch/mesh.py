@@ -26,6 +26,16 @@ def make_local_mesh() -> jax.sharding.Mesh:
     return jax.make_mesh((n, 1), ("data", "model"))
 
 
+def mesh_context(mesh: jax.sharding.Mesh):
+    """`jax.set_mesh(mesh)` where available, else the Mesh's own context
+    manager (pre-0.5 jax has no `set_mesh`; entering the Mesh sets the
+    global mesh for sharding resolution the same way)."""
+    set_mesh = getattr(jax, "set_mesh", None)
+    if set_mesh is not None:
+        return set_mesh(mesh)
+    return mesh
+
+
 # TPU v5e-class hardware constants for the roofline (per chip)
 PEAK_BF16_FLOPS = 197e12        # FLOP/s
 HBM_BW = 819e9                  # bytes/s

@@ -130,6 +130,34 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return o.reshape(B, 1, H, D)
 
 
+def prefill_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                      starts: jax.Array, *,
+                      window: Optional[int] = None) -> jax.Array:
+    """Chunk-vs-cache attention for single-dispatch chunked prefill.
+
+    q: (B, C, H, D) — a chunk whose row-b token i sits at absolute
+    position starts[b] + i; caches: (B, S, KV, D), already containing the
+    chunk's own KV (written before this call). Token i attends to cache
+    slots [0, starts[b] + i] — prior chunks plus the causal prefix of its
+    own chunk — which is exact: during prefill, slot index == position.
+    """
+    B, C, H, D = q.shape
+    S, KV = k_cache.shape[1], k_cache.shape[2]
+    Hg = H // KV
+    scale = 1.0 / (D ** 0.5)
+    qg = q.reshape(B, C, KV, Hg, D)
+    s = _gqa_scores(qg, k_cache) * scale             # (B,KV,Hg,C,S)
+    qpos = starts[:, None] + jnp.arange(C)[None, :]  # (B, C)
+    kpos = jnp.arange(S)
+    m = kpos[None, None, :] <= qpos[:, :, None]      # (B, C, S)
+    if window is not None:
+        m &= kpos[None, None, :] > qpos[:, :, None] - window
+    s = jnp.where(m[:, None, None, :, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkhqs,bskd->bqkhd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, C, H, D)
+
+
 def mlp(x, w_gate, w_up, w_down, act: str):
     if act == "swiglu":
         h = jax.nn.silu(x @ w_gate) * (x @ w_up)
@@ -157,12 +185,28 @@ def lm_head(x: jax.Array, head_w: jax.Array, vocab_real: int) -> jax.Array:
 # KV cache update + AMC packing (the dynamic plane of the serving engine)
 # ---------------------------------------------------------------------------
 
+def update_cache_chunk(cache: jax.Array, new: jax.Array,
+                       starts: jax.Array,
+                       write_mask: Optional[jax.Array] = None) -> jax.Array:
+    """Scatter a per-row chunk into the cache.
+
+    cache: (B, S, ...); new: (B, C, ...); starts: (B,) first slot per row.
+    `write_mask` (B,) bool keeps masked-off rows bit-identical — prefill
+    of one slot must not spill garbage into its batch neighbours' caches.
+    """
+    def upd(c, n, p):
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+    updated = jax.vmap(upd)(cache, new, starts)
+    if write_mask is None:
+        return updated
+    mask = write_mask.reshape((-1,) + (1,) * (cache.ndim - 1))
+    return jnp.where(mask, updated, cache)
+
+
 def update_cache_line(cache: jax.Array, new: jax.Array,
                       positions: jax.Array) -> jax.Array:
     """cache: (B, S, ...); new: (B, 1, ...); positions: (B,)."""
-    def upd(c, n, p):
-        return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
-    return jax.vmap(upd)(cache, new, positions)
+    return update_cache_chunk(cache, new, positions)
 
 
 def pack_kv_int4(kv: jax.Array):

@@ -47,6 +47,26 @@ def decode_step(cfg: ModelConfig, params, cache, batch: dict, *, rules=None):
                                         batch["positions"], rules=rules)
 
 
+def supports_prefill(cfg: ModelConfig) -> bool:
+    """Whether the family has a chunked-prefill step (transformer-style
+    caches); others fall back to the per-token decode loop in serving."""
+    return hasattr(_family_mod(cfg), "prefill_chunk_step")
+
+
+def prefill_step(cfg: ModelConfig, params, cache, batch: dict, *,
+                 rules=None):
+    """Chunked prefill: batch = {"tokens" (B, C), "positions" (B,) start
+    of the chunk per row, "write_mask" (B,) rows being prefilled}.
+    Returns (logits (B, C, V), new_cache) in ONE device dispatch."""
+    mod = _family_mod(cfg)
+    fn = getattr(mod, "prefill_chunk_step", None)
+    if fn is None:
+        raise NotImplementedError(
+            f"family {cfg.family!r} has no chunked prefill")
+    return fn(cfg, params, cache, batch["tokens"], batch["positions"],
+              batch.get("write_mask"), rules=rules)
+
+
 def loss_fn(cfg: ModelConfig, params, batch: dict, *, rules=None,
             remat_policy="dots", q_chunk=1024):
     """Next-token cross-entropy, vocab-sharding-friendly.

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.kernels import ops as K
 from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models.params import PSpec
@@ -141,6 +142,52 @@ def attn_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
     return (o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype), new_cache
 
 
+def attn_block_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
+                       cache_layer: dict, starts: jax.Array,
+                       write_mask: Optional[jax.Array] = None):
+    """Chunked-prefill attention: a C-token chunk per row, written into the
+    (possibly packed) decode cache in ONE pass and attended exactly.
+
+    x: (B, C, d); starts: (B,) absolute position of each row's first chunk
+    token; write_mask: (B,) bool — rows not being prefilled keep their
+    cache bit-identical. int4 packing runs through the fused
+    `quantize_pack_kv` kernel (bf16 chunk -> packed rows + scales, no
+    dequantized intermediate), which is bit-exact with `pack_kv_int4`.
+    """
+    B, C, _ = x.shape
+    positions = starts[:, None] + jnp.arange(C)[None, :]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    kv_mode = cfg.amc.kv_mode
+
+    def put(cache, new):
+        return L.update_cache_chunk(cache, new, starts, write_mask)
+
+    if kv_mode == "normal":
+        k_cache = put(cache_layer["k"], k_new)
+        v_cache = put(cache_layer["v"], v_new)
+        new_cache = {"k": k_cache, "v": v_cache}
+        kd, vd = k_cache, v_cache
+    else:
+        if kv_mode == "int4":
+            kp, ks = K.quantize_pack_kv(k_new)
+            vp, vs = K.quantize_pack_kv(v_new)
+            unpack = L.unpack_kv_int4
+        else:  # int8
+            kp, ks = L.pack_kv_int8(k_new)
+            vp, vs = L.pack_kv_int8(v_new)
+            unpack = L.unpack_kv_int8
+        k_cache = put(cache_layer["k"], kp)
+        v_cache = put(cache_layer["v"], vp)
+        k_scale = put(cache_layer["k_scale"], ks)
+        v_scale = put(cache_layer["v_scale"], vs)
+        new_cache = {"k": k_cache, "v": v_cache,
+                     "k_scale": k_scale, "v_scale": v_scale}
+        kd = unpack(k_cache, k_scale)
+        vd = unpack(v_cache, v_scale)
+    o = L.prefill_attention(q, kd, vd, starts)
+    return (o.reshape(B, C, -1) @ p["wo"]).astype(x.dtype), new_cache
+
+
 def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array):
     h = L.rms_norm(x, p["norm"], cfg.norm_eps)
     out = L.mlp(h, p.get("w_gate"), p["w_up"], p["w_down"], cfg.act)
@@ -229,6 +276,36 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
         x = constrain(x, rules, "batch", None, None)
         a, new_cache = attn_block_decode(cfg, lp["attn"], x, cache_layer,
                                          positions)
+        x = constrain(x + a, rules, "batch", None, None)
+        x = x + ffn_dispatch(cfg, lp, x, rules)
+        return x, new_cache
+
+    x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = params.get("head")
+    if head is None:
+        head = params["embed"].T
+    logits = L.lm_head(x, head, cfg.vocab)
+    return logits, new_cache
+
+
+def prefill_chunk_step(cfg: ModelConfig, params: dict, cache: dict,
+                       tokens: jax.Array, starts: jax.Array,
+                       write_mask: Optional[jax.Array] = None, *,
+                       rules=None):
+    """One chunked-prefill dispatch: tokens (B, C) at absolute positions
+    starts (B,). Writes the chunk's (packed) KV into the decode cache and
+    returns (logits (B, C, V), new_cache). A P-token prompt costs
+    ceil(P / C) of these instead of P decode steps."""
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+
+    from repro.distributed.sharding import constrain
+
+    def body(x, scanned):
+        lp, cache_layer = scanned
+        x = constrain(x, rules, "batch", None, None)
+        a, new_cache = attn_block_prefill(cfg, lp["attn"], x, cache_layer,
+                                          starts, write_mask)
         x = constrain(x + a, rules, "batch", None, None)
         x = x + ffn_dispatch(cfg, lp, x, rules)
         return x, new_cache

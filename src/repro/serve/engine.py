@@ -7,6 +7,13 @@ new requests (positions are per-row, the validity mask handles ragged
 lengths). The FILO discipline of the paper maps cleanly: per slot, static
 context (weights / cross-KV) is written once, the per-step KV stream is
 dynamic and drained (attended) before the slot is re-written.
+
+Hot-path shape: a P-token prompt costs ceil(P / prefill_chunk) jitted
+dispatches (`prefill_chunk_step` scatters each chunk's packed KV straight
+into the slot's cache rows), not P full-batch decode steps; decode-side
+host bookkeeping (positions / remaining / active) is vectorized numpy, so
+`step_all` does no per-slot Python in the steady state beyond appending
+each generated token to its request's output list.
 """
 from __future__ import annotations
 
@@ -16,13 +23,12 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.distributed.sharding import Rules
+from repro.launch.mesh import mesh_context
 from repro.models import model as M
-from repro.models.params import init_params, to_shape_dtype
-from repro.train import step as step_lib
+from repro.models.params import init_params
 
 
 @dataclasses.dataclass(eq=False)
@@ -34,13 +40,15 @@ class Request:
 
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, *, max_batch: int = 8,
-                 max_seq: int = 256, params=None, seed: int = 0):
+                 max_seq: int = 256, prefill_chunk: int = 32, params=None,
+                 seed: int = 0):
         self.cfg, self.mesh = cfg, mesh
         self.max_batch, self.max_seq = max_batch, max_seq
+        self.prefill_chunk = min(prefill_chunk, max_seq)
         shape = ShapeConfig("serve", max_seq, max_batch, "decode")
         self.rules = Rules.make(mesh, cfg, shape)
         ap = M.abstract_params(cfg)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             if params is None:
                 params = init_params(ap, jax.random.PRNGKey(seed))
             self.params = params
@@ -51,19 +59,27 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, c, b: M.decode_step(cfg, p, c, b, rules=self.rules),
             donate_argnums=(1,))
-        # slot bookkeeping (host side)
-        self.positions = np.zeros(max_batch, np.int64)
-        self.remaining = np.zeros(max_batch, np.int64)
+        self._prefill = None
+        if M.supports_prefill(cfg):
+            self._prefill = jax.jit(
+                lambda p, c, b: M.prefill_step(cfg, p, c, b,
+                                               rules=self.rules),
+                donate_argnums=(1,))
+        # slot bookkeeping (host side, int32 once — dispatched as-is)
+        self.positions = np.zeros(max_batch, np.int32)
+        self.remaining = np.zeros(max_batch, np.int32)
         self.active = np.zeros(max_batch, bool)
+        self.last_token = np.zeros(max_batch, np.int32)
         self.slot_req: list[Optional[Request]] = [None] * max_batch
         self.outputs: dict[int, list[int]] = {}
+        self.dispatch_count = 0   # jitted device dispatches (prefill+decode)
 
     # -- continuous batching --------------------------------------------------
 
     def add_request(self, req: Request):
         """Claim a free slot; prefill it. Returns the slot or None."""
-        free = np.where(~self.active)[0]
-        if len(free) == 0:
+        free = np.flatnonzero(~self.active)
+        if free.size == 0:
             return None
         slot = int(free[0])
         self.active[slot] = True
@@ -71,61 +87,111 @@ class ServeEngine:
         self.positions[slot] = 0
         self.remaining[slot] = req.max_new_tokens
         self.outputs[req.id] = []
-        # feed prompt[:-1] through decode steps for this slot (simple
-        # warmup prefill; the last prompt token is fed by the first
-        # batched decode step, whose argmax is the first generated token)
-        for t in req.prompt[:-1]:
-            self._step_slot(slot, int(t))
+        prompt = np.asarray(req.prompt, np.int32)
+        # feed prompt[:-1] into the cache (the last prompt token is fed by
+        # the first batched decode step, whose argmax is the first
+        # generated token)
+        if prompt.size > 1:
+            self.prefill(slot, prompt[:-1])
+        self.last_token[slot] = int(prompt[-1]) if prompt.size else 0
         return slot
+
+    def prefill(self, slot: int, tokens: np.ndarray,
+                return_next: bool = False) -> Optional[int]:
+        """Feed `tokens` into the slot's cache rows.
+
+        One jitted dispatch per `prefill_chunk` tokens — ceil(P / chunk)
+        total, vs P decode steps for the per-token warmup loop. With
+        `return_next` also returns the greedy continuation of the last
+        prefilled token — that argmax blocks on the async dispatches, so
+        the admission hot path (`add_request`) leaves it off.
+        """
+        tokens = np.asarray(tokens, np.int32).reshape(-1)
+        if tokens.size == 0:
+            return None
+        if self._prefill is None:           # family without chunked prefill
+            return self._prefill_stepwise(slot, tokens)
+        C = self.prefill_chunk
+        write_mask = np.zeros(self.max_batch, bool)
+        write_mask[slot] = True
+        last_logits, last_n = None, 0
+        for start in range(0, tokens.size, C):
+            chunk = tokens[start:start + C]
+            if self.positions[slot] + C > self.max_seq:
+                # a padded chunk would spill past the cache end (the
+                # scatter would clamp and corrupt this row's own prefix)
+                return self._prefill_stepwise(slot, tokens[start:])
+            n = chunk.size
+            tok = np.zeros((self.max_batch, C), np.int32)
+            tok[slot, :n] = chunk
+            batch = {"tokens": jnp.asarray(tok),
+                     "positions": jnp.asarray(self.positions),
+                     "write_mask": jnp.asarray(write_mask)}
+            with mesh_context(self.mesh):
+                logits, self.cache = self._prefill(self.params, self.cache,
+                                                   batch)
+            self.dispatch_count += 1
+            self.positions[slot] += n
+            last_logits, last_n = logits, n
+        if not return_next:
+            return None
+        return int(jnp.argmax(last_logits[slot, last_n - 1]))
+
+    def _prefill_stepwise(self, slot: int, tokens: np.ndarray):
+        last = None
+        for t in tokens:
+            last = self._step_slot(slot, int(t))
+        return last
 
     def _step_slot(self, slot: int, token: int) -> int:
         tokens = np.zeros((self.max_batch, 1), np.int32)
         tokens[slot, 0] = token
-        pos = np.asarray(self.positions, np.int32)
         batch = {"tokens": jnp.asarray(tokens),
-                 "positions": jnp.asarray(pos)}
-        with jax.set_mesh(self.mesh):
+                 "positions": jnp.asarray(self.positions)}
+        with mesh_context(self.mesh):
             logits, self.cache = self._decode(self.params, self.cache, batch)
+        self.dispatch_count += 1
         self.positions[slot] += 1
         return int(jnp.argmax(logits[slot, -1]))
 
-    def step_all(self, last_tokens: dict[int, int]) -> dict[int, int]:
-        """One batched decode step for every active slot."""
-        tokens = np.zeros((self.max_batch, 1), np.int32)
-        for s in range(self.max_batch):
-            if self.active[s]:
-                tokens[s, 0] = last_tokens.get(s, 0)
+    def step_all(self, last_tokens: Optional[dict[int, int]] = None) -> dict:
+        """One batched decode step for every active slot.
+
+        `last_tokens` optionally overrides the tracked per-slot feed
+        token (kept for API compatibility; `generate` no longer needs
+        it). Returns {slot: next_token} for slots still running.
+        """
+        if last_tokens:
+            for s, t in last_tokens.items():
+                self.last_token[s] = t
+        tokens = np.where(self.active, self.last_token, 0
+                          ).astype(np.int32)[:, None]
         batch = {"tokens": jnp.asarray(tokens),
-                 "positions": jnp.asarray(self.positions, np.int32)}
-        with jax.set_mesh(self.mesh):
+                 "positions": jnp.asarray(self.positions)}
+        with mesh_context(self.mesh):
             logits, self.cache = self._decode(self.params, self.cache, batch)
-        out = {}
-        arg = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
-        for s in range(self.max_batch):
-            if not self.active[s]:
-                continue
-            self.positions[s] += 1
-            nxt = int(arg[s])
-            req = self.slot_req[s]
-            self.outputs[req.id].append(nxt)
-            self.remaining[s] -= 1
-            if self.remaining[s] <= 0 or self.positions[s] >= self.max_seq - 1:
-                self.active[s] = False   # release slot (continuous batching)
-                self.slot_req[s] = None
-            else:
-                out[s] = nxt
-        return out
+        self.dispatch_count += 1
+        arg = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
+        # vectorized slot bookkeeping: no per-slot Python for the numeric
+        # state, only the per-request output append below
+        act = self.active.copy()
+        self.positions[act] += 1
+        self.remaining[act] -= 1
+        self.last_token = np.where(act, arg, self.last_token)
+        done = act & ((self.remaining <= 0)
+                      | (self.positions >= self.max_seq - 1))
+        self.active &= ~done
+        for s in np.flatnonzero(act):
+            self.outputs[self.slot_req[s].id].append(int(arg[s]))
+        for s in np.flatnonzero(done):
+            self.slot_req[s] = None          # release slot (cont. batching)
+        return {int(s): int(arg[s]) for s in np.flatnonzero(act & ~done)}
 
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
         """Run all requests to completion with slot-level batching."""
         pending = list(requests)
-        last: dict[int, int] = {}
         while pending or self.active.any():
-            while pending:
-                slot = self.add_request(pending[0])
-                if slot is None:
-                    break
-                req = pending.pop(0)
-                last[slot] = int(req.prompt[-1]) if len(req.prompt) else 0
-            last = self.step_all(last)
+            while pending and self.add_request(pending[0]) is not None:
+                pending.pop(0)
+            self.step_all()
         return self.outputs

@@ -20,6 +20,7 @@ from repro.configs.base import ModelConfig, ShapeConfig
 from repro.data import PrefetchIterator, SyntheticLM
 from repro.distributed.fault import StragglerMonitor, Supervisor
 from repro.distributed.sharding import Rules
+from repro.launch.mesh import mesh_context
 from repro.models import model as M
 from repro.models.params import init_params, to_shape_dtype
 from repro.optim import adamw, SCHEDULES
@@ -68,7 +69,7 @@ class Trainer:
             donate_argnums=(0,))
 
         opt_init, _ = adamw.make_optimizer(settings.optimizer)
-        with jax.set_mesh(mesh):
+        with mesh_context(mesh):
             params = init_params(ap, jax.random.PRNGKey(tcfg.seed))
             params = jax.tree.map(jax.device_put, params,
                                   self.param_shardings)
@@ -123,7 +124,7 @@ class Trainer:
     def train(self, n_steps: Optional[int] = None) -> list:
         target = (self.tcfg.total_steps if n_steps is None
                   else self.current_step() + n_steps)
-        with jax.set_mesh(self.mesh):
+        with mesh_context(self.mesh):
             while self.current_step() < target:
                 step = self.current_step()
 

@@ -11,6 +11,7 @@ import numpy as np
 import pytest
 
 from repro.configs import get_arch, get_shape
+from repro.launch.mesh import mesh_context
 from repro.distributed.fault import (SimulatedFailure, StragglerMonitor,
                                      Supervisor)
 from repro.distributed.sharding import Rules
@@ -112,7 +113,7 @@ def test_pipeline_single_stage_equals_direct():
 
     fn = pipeline_forward(mesh, stage, n_micro=3)
     xs = jax.random.normal(jax.random.PRNGKey(1), (3, 4, 8))
-    with jax.set_mesh(mesh):
+    with mesh_context(mesh):
         out = fn(w, xs)
     expect = jnp.tanh(xs @ w[0])
     assert np.allclose(np.asarray(out), np.asarray(expect), atol=1e-5)

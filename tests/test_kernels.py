@@ -129,6 +129,40 @@ def test_packed_kv_attention_block_sweep():
         assert _rel_err(o, r) < 0.03, bs
 
 
+def test_packed_kv_attention_skips_invalid_blocks():
+    """Scalar-prefetched lengths: grid work must be ∝ actual length. The
+    kernel's block-visit counter reports how many sequence blocks each
+    (row, head) actually processed."""
+    B, KV, Hg, D, S, bs = 3, 2, 4, 64, 1024, 128
+    key = jax.random.PRNGKey(11)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kp, vp, ks, vs = _make_kv(jax.random.fold_in(key, 12), B, KV, S, D)
+    lengths = jnp.array([12, 300, 1024], jnp.int32)
+    o, visits = ops.packed_kv_attention(q, kp, vp, ks, vs, lengths, bs=bs,
+                                        debug_visits=True)
+    expect = np.maximum(np.ceil(np.asarray(lengths) / bs), 1).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(visits), np.tile(expect[:, None],
+                                                              (1, KV)))
+    # 12 valid tokens in a 1024-slot cache: 1 block visited, not 8
+    assert int(np.asarray(visits)[0, 0]) == 1
+    r = ref.packed_kv_attention_ref(q, kp, vp, ks, vs, lengths)
+    assert _rel_err(o, r) < 0.03
+
+
+def test_packed_kv_attention_short_lengths_numerics():
+    """lengths ≪ max_seq with the skipping path still matches the oracle
+    to seed tolerance."""
+    B, KV, Hg, D, S = 2, 4, 2, 64, 2048
+    key = jax.random.PRNGKey(13)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kp, vp, ks, vs = _make_kv(jax.random.fold_in(key, 14), B, KV, S, D)
+    lengths = jnp.array([1, 37], jnp.int32)
+    for bs in (128, 512):
+        o = ops.packed_kv_attention(q, kp, vp, ks, vs, lengths, bs=bs)
+        r = ref.packed_kv_attention_ref(q, kp, vp, ks, vs, lengths)
+        assert _rel_err(o, r) < 0.03, bs
+
+
 def test_packed_kv_attention_respects_length_mask():
     """Tokens beyond `length` must not affect the output."""
     B, KV, Hg, D, S = 1, 2, 2, 64, 256
@@ -142,3 +176,82 @@ def test_packed_kv_attention_respects_length_mask():
     vp2 = vp.at[:, :, 100:].set(255)
     o2 = ops.packed_kv_attention(q, kp2, vp2, ks, vs, lengths, bs=64)
     assert np.allclose(np.asarray(o1, np.float32), np.asarray(o2, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# fused quantize-pack (the cache write driver)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape", [(2, 16, 4, 64), (1, 7, 2, 128),
+                                   (3, 5, 70)])
+def test_quantize_pack_kv_matches_ref(shape):
+    kv = jax.random.normal(jax.random.PRNGKey(21), shape, jnp.bfloat16)
+    p, s = ops.quantize_pack_kv(kv)
+    pr, sr = ref.quantize_pack_kv_ref(kv)
+    assert p.dtype == jnp.uint8 and p.shape == shape[:-1] + (shape[-1] // 2,)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(s, np.float32),
+                                  np.asarray(sr.astype(jnp.bfloat16),
+                                             np.float32))
+
+
+def test_quantize_pack_kv_bit_exact_with_pack_kv_int4():
+    """The engine's golden equivalence rests on kernel == pack_kv_int4."""
+    from repro.models import layers as L
+    kv = jax.random.normal(jax.random.PRNGKey(22), (4, 9, 2, 64),
+                           jnp.bfloat16)
+    p, s = ops.quantize_pack_kv(kv)
+    pl_, sl = L.pack_kv_int4(kv)
+    np.testing.assert_array_equal(np.asarray(p), np.asarray(pl_))
+    np.testing.assert_array_equal(np.asarray(s, np.float32),
+                                  np.asarray(sl, np.float32))
+
+
+def test_quantize_pack_kv_padding_path():
+    """Row counts that don't divide the block size go through the padded
+    path and must be unchanged by it."""
+    kv = jax.random.normal(jax.random.PRNGKey(23), (13, 32), jnp.bfloat16)
+    p_pad, s_pad = ops.quantize_pack_kv(kv, bn=8)     # 13 rows, bn=8 -> pad 3
+    pr, sr = ref.quantize_pack_kv_ref(kv)
+    np.testing.assert_array_equal(np.asarray(p_pad), np.asarray(pr))
+    np.testing.assert_array_equal(np.asarray(s_pad, np.float32),
+                                  np.asarray(sr.astype(jnp.bfloat16),
+                                             np.float32))
+
+
+def test_quantize_pack_kv_roundtrip_attention():
+    """Cache built by the fused kernel feeds the attention kernel and
+    matches the all-reference pipeline."""
+    from repro.models import layers as L
+    B, KV, Hg, D, S = 2, 2, 2, 64, 256
+    key = jax.random.PRNGKey(24)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D),
+                           jnp.bfloat16)
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (B, KV, S, D),
+                           jnp.bfloat16)
+    kp, ks = ops.quantize_pack_kv(kf)
+    vp, vs = ops.quantize_pack_kv(vf)
+    lengths = jnp.array([200, 64], jnp.int32)
+    o = ops.packed_kv_attention(q, kp, vp, ks[..., 0], vs[..., 0], lengths,
+                                bs=64)
+    kp2, ks2 = L.pack_kv_int4(kf)
+    vp2, vs2 = L.pack_kv_int4(vf)
+    r = ref.packed_kv_attention_ref(q, kp2, vp2, ks2[..., 0], vs2[..., 0],
+                                    lengths)
+    assert _rel_err(o, r) < 0.03
+
+
+def test_packed_kv_attention_length_beyond_capacity():
+    """lengths > S means 'all slots valid' (ring-cache callers pass
+    position+1 past capacity); the output row must still be written."""
+    B, KV, Hg, D, S = 1, 2, 2, 64, 256
+    key = jax.random.PRNGKey(31)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kp, vp, ks, vs = _make_kv(jax.random.fold_in(key, 32), B, KV, S, D)
+    o = ops.packed_kv_attention(q, kp, vp, ks, vs,
+                                jnp.array([S + 100], jnp.int32), bs=64)
+    r = ref.packed_kv_attention_ref(q, kp, vp, ks, vs,
+                                    jnp.array([S], jnp.int32))
+    assert np.isfinite(np.asarray(o, np.float32)).all()
+    assert _rel_err(o, r) < 0.03

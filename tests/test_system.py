@@ -6,7 +6,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAS_HYPOTHESIS = True
+except ImportError:  # degrade: property tests fall back to fixed params
+    HAS_HYPOTHESIS = False
 
 from repro.configs import get_arch
 from repro.models import layers as L
@@ -65,9 +70,7 @@ def test_decode_attention_ring_permutation_invariance():
     assert np.allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
 
 
-@given(st.integers(1, 63))
-@settings(max_examples=10, deadline=None)
-def test_decode_attention_mask_property(valid_len):
+def _check_decode_attention_mask(valid_len):
     """Cache beyond `positions` must not influence the output."""
     key = jax.random.PRNGKey(4)
     B, H, KV, D, S = 1, 2, 1, 8, 64
@@ -80,6 +83,17 @@ def test_decode_attention_mask_property(valid_len):
     v2 = v.at[:, valid_len:].set(-99.0)
     o2 = L.decode_attention(q, k2, v2, pos)
     assert np.allclose(np.asarray(o1), np.asarray(o2), atol=1e-5)
+
+
+if HAS_HYPOTHESIS:
+    @given(st.integers(1, 63))
+    @settings(max_examples=10, deadline=None)
+    def test_decode_attention_mask_property(valid_len):
+        _check_decode_attention_mask(valid_len)
+else:
+    @pytest.mark.parametrize("valid_len", [1, 7, 32, 63])
+    def test_decode_attention_mask_property(valid_len):
+        _check_decode_attention_mask(valid_len)
 
 
 def test_rope_relative_property():
