@@ -119,19 +119,67 @@ def bench_serve_prefill_decode() -> dict:
 
     return {
         "config": {"arch": "qwen1.5-0.5b(reduced)", "prefill_chunk": chunk,
-                   "max_batch": 2, "max_seq": 64, "kv_mode": cfg.amc.kv_mode},
+                   "max_batch": 2, "max_seq": 64, "kv_mode": cfg.amc.kv_mode,
+                   "weight_mode": cfg.amc.weight_mode},
         "prefill": {"tokens": prefill_tokens,
                     "dispatches": prefill_dispatches,
                     "per_token_path_dispatches": prefill_tokens,
                     "tokens_per_s": prefill_tokens / prefill_s},
         "decode": {"steps": n, "steps_per_s": n / decode_s,
                    "tokens_per_s": emitted / decode_s},
-        "hbm_model": serve_hbm_model(),
+        "hbm_model": serve_hbm_model(kv_mode=cfg.amc.kv_mode,
+                                     weight_mode=cfg.amc.weight_mode),
     }
+
+
+def bench_serve_matrix() -> dict:
+    """The kv_mode x weight_mode serving matrix on the reduced config:
+    decode steps/s through the real engine (Pallas kernels in interpret
+    mode on CPU — relative numbers only) plus the modeled full-scale
+    per-decode-step HBM traffic, which is where the paper's augmentation
+    ratio shows up. Returned as BENCH_serve.json's "matrix" section."""
+    from benchmarks.kernels_bench import serve_hbm_model
+    from repro.serve import Request, ServeEngine
+
+    base = get_arch("qwen1.5-0.5b").reduced()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, base.vocab, size=(5,)).astype(np.int32)
+    matrix = {}
+    for kv_mode in ("normal", "int8", "int4"):
+        for weight_mode in ("normal", "ternary", "dual"):
+            cfg = dataclasses.replace(
+                base, amc=AMCConfig(weight_mode=weight_mode,
+                                    kv_mode=kv_mode))
+            eng = ServeEngine(cfg, make_local_mesh(), max_batch=2,
+                              max_seq=32, prefill_chunk=16)
+            eng.add_request(Request(prompt=prompt.copy(),
+                                    max_new_tokens=24, id=0))
+            eng.step_all()                       # warmup (compiles decode)
+            n, t0 = 6, time.perf_counter()
+            for _ in range(n):
+                eng.step_all()
+            dt = time.perf_counter() - t0
+            key = f"{kv_mode}/{weight_mode}"
+            st = eng.stats()
+            matrix[key] = {
+                "decode_steps_per_s": n / dt,
+                "capacity_factor": st["capacity_factor"],
+                "cache_bytes_physical": st["cache_bytes_physical"],
+                "weight_bytes_physical": st["weight_bytes_physical"],
+                "hbm_model": serve_hbm_model(kv_mode=kv_mode,
+                                             weight_mode=weight_mode),
+            }
+            row(f"serve_matrix_{kv_mode}_{weight_mode}", dt / n * 1e6,
+                f"steps_per_s={n/dt:.2f} "
+                f"modeled_traffic_ratio="
+                f"{matrix[key]['hbm_model']['traffic_ratio_vs_bf16']:.2f}x")
+    return matrix
 
 
 def run_all() -> dict:
     """Runs every e2e bench; returns the BENCH_serve.json payload."""
     bench_train_step()
     bench_decode_kv_modes()
-    return bench_serve_prefill_decode()
+    payload = bench_serve_prefill_decode()
+    payload["matrix"] = bench_serve_matrix()
+    return payload

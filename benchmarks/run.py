@@ -1,8 +1,9 @@
 """Benchmark harness — one section per paper table + kernel and e2e benches.
 Prints ``name,us_per_call,derived`` CSV (see DESIGN.md SS7 experiment index)
-and writes BENCH_serve.json (prefill/decode throughput + modeled HBM
-traffic for the packed cache) so the serving perf trajectory is tracked
-across PRs.
+and writes BENCH_serve.json (prefill/decode throughput, the kv_mode x
+weight_mode serving matrix + modeled HBM traffic) and BENCH_kernels.json
+(per-kernel modeled bytes + Pallas-interpret parity) so the serving perf
+trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -17,14 +18,16 @@ def main() -> None:
     print("# -- paper tables I-VI analogs --")
     paper_tables.run_all()
     print("# -- pallas kernels (bytes/roofline; CPU ref wall-time) --")
-    kernels_bench.run_all()
+    kernels = kernels_bench.run_all()
     print("# -- end-to-end (reduced configs, CPU) --")
     serve = e2e_bench.run_all()
-    out = os.path.join(os.path.dirname(os.path.dirname(
-        os.path.abspath(__file__))), "BENCH_serve.json")
-    with open(out, "w") as f:
-        json.dump(serve, f, indent=2)
-    print(f"# wrote {out}")
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    for name, payload in (("BENCH_serve.json", serve),
+                          ("BENCH_kernels.json", kernels)):
+        out = os.path.join(root, name)
+        with open(out, "w") as f:
+            json.dump(payload, f, indent=2)
+        print(f"# wrote {out}")
     print("# done")
 
 

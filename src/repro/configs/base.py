@@ -68,6 +68,11 @@ class AMCConfig:
     weight_mode: str = "normal"     # normal | ternary | dual
     ternary_fmt: str = "2bit"       # base3 | 2bit (kernels prefer 2bit)
     kv_mode: str = "normal"         # normal | int4 | int8
+    # Decode-attention implementation for packed kv_modes: "kernel" streams
+    # the packed cache through the Pallas flash-decode kernel (the cache is
+    # never dequantized in HBM); "dequant" is the reference unpack-then-dense
+    # path kept for golden-equivalence tests and debugging.
+    kv_impl: str = "kernel"         # kernel | dequant
     retention_steps: int = 8
 
 

@@ -55,6 +55,35 @@ BITS_PER_VALUE = {
     Mode.AUGMENTED_TERNARY: 1.6,  # base-3, 5 trits/byte
 }
 
+# Config-string spellings of the modes (cfg.amc.weight_mode / kv_mode).
+WEIGHT_MODES = {"normal": Mode.NORMAL, "dual": Mode.AUGMENTED_DUAL,
+                "ternary": Mode.AUGMENTED_TERNARY}
+KV_BITS_PER_VALUE = {"normal": 16.0, "int8": 8.0, "int4": 4.0}
+
+
+def mode_bits_per_value(mode: Mode, ternary_fmt: str = "base3") -> float:
+    """Physical bits per logical value for a storage mode (the paper's
+    capacity headline; shared by AugmentedStore and the serving stats)."""
+    if mode == Mode.AUGMENTED_TERNARY and ternary_fmt == "2bit":
+        return 2.0
+    return BITS_PER_VALUE[mode]
+
+
+def mode_physical_bytes(n_values: int, mode: Mode,
+                        ternary_fmt: str = "base3") -> int:
+    if mode == Mode.NORMAL:
+        return 2 * n_values
+    if mode == Mode.AUGMENTED_DUAL:
+        return n_values  # one byte holds static+dynamic for one index
+    per = 5 if ternary_fmt == "base3" else 4
+    return (n_values + per - 1) // per
+
+
+def capacity_factor(mode: Mode, ternary_fmt: str = "base3") -> float:
+    """Storage augmentation vs NORMAL mode (values per physical bit)."""
+    return (BITS_PER_VALUE[Mode.NORMAL]
+            / mode_bits_per_value(mode, ternary_fmt))
+
 
 class AugmentedStore:
     def __init__(self, shape, *, retention_steps: int = 4,
@@ -201,20 +230,13 @@ class AugmentedStore:
         return self._dynamic_live
 
     def bits_per_value(self) -> float:
-        if self.mode == Mode.AUGMENTED_TERNARY and self.ternary_fmt == "2bit":
-            return 2.0
-        return BITS_PER_VALUE[self.mode]
+        return mode_bits_per_value(self.mode, self.ternary_fmt)
 
     def capacity_factor(self) -> float:
         """Storage augmentation vs NORMAL mode (values per physical bit)."""
-        return BITS_PER_VALUE[Mode.NORMAL] / self.bits_per_value()
+        return capacity_factor(self.mode, self.ternary_fmt)
 
     def physical_bytes(self) -> int:
         import numpy as np
         n = int(np.prod(self.shape))
-        if self.mode == Mode.NORMAL:
-            return 2 * n
-        if self.mode == Mode.AUGMENTED_DUAL:
-            return n  # one byte holds static+dynamic for one logical index
-        per = 5 if self.ternary_fmt == "base3" else 4
-        return (n + per - 1) // per
+        return mode_physical_bytes(n, self.mode, self.ternary_fmt)

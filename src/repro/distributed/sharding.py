@@ -30,6 +30,9 @@ DEFAULT_RULES: dict[str, Tuple[str, ...]] = {
     "lru": ("model",),            # RG-LRU width / SSM inner dim
     "cache_seq": ("model",),      # decode KV cache sequence sharding (SP)
     "cache_batch": ("pod", "data"),
+    "packed": (),                 # 2-bit/nibble-packed contraction dims:
+                                  # sub-byte strides cannot take FSDP slicing
+                                  # -> replicated; the output dim keeps TP
     "frames": (),                 # encoder frames / vision patches
     "replicated": (),
 }

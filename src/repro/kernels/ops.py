@@ -47,22 +47,24 @@ def dual_plane_matmul(x, buf, hi_scale, lo_scale, *, bm=128, bk=256, bn=256,
                                     interpret=_auto_interpret(interpret))
 
 
-@functools.partial(jax.jit, static_argnames=("bs", "debug_visits",
+@functools.partial(jax.jit, static_argnames=("bs", "kv_bits", "debug_visits",
                                              "interpret", "use_ref"))
 def packed_kv_attention(q, k_packed, v_packed, k_scale, v_scale, lengths, *,
-                        bs=512, debug_visits=False, interpret=None,
+                        bs=512, kv_bits=4, debug_visits=False, interpret=None,
                         use_ref=False):
-    """Flash-decode over an int4-packed KV cache (never dequantized in HBM).
+    """Flash-decode over a packed KV cache (never dequantized in HBM).
 
-    `lengths` is scalar-prefetched: sequence blocks past a row's valid
-    length are skipped (no DMA, no compute). With `debug_visits` also
+    `kv_bits` selects the storage format: 4 = two int4 nibbles per byte,
+    8 = int8. `lengths` is scalar-prefetched: sequence blocks past a row's
+    valid length are skipped (no DMA, no compute). With `debug_visits` also
     returns the per-(row, head) count of blocks actually processed."""
     if use_ref:
         assert not debug_visits, "visit counting is a kernel-path feature"
         return ref.packed_kv_attention_ref(q, k_packed, v_packed, k_scale,
-                                           v_scale, lengths)
+                                           v_scale, lengths, kv_bits=kv_bits)
     return packed_kv_attention_pallas(q, k_packed, v_packed, k_scale,
                                       v_scale, lengths, bs=bs,
+                                      kv_bits=kv_bits,
                                       debug_visits=debug_visits,
                                       interpret=_auto_interpret(interpret))
 

@@ -56,13 +56,24 @@ def _unpack_int4_pairs(packed: jax.Array) -> jax.Array:
     return w.reshape(packed.shape[0], -1).astype(jnp.bfloat16)
 
 
+def _load_kv_block(ref_block: jax.Array, kv_bits: int) -> jax.Array:
+    """Packed KV block -> (bs, D) bf16 integer levels.
+
+    4-bit: two nibbles per byte, interleaved pairs. 8-bit: the int8 value
+    itself — no unpack, the cast is the whole "sense amplifier"."""
+    if kv_bits == 4:
+        return _unpack_int4_pairs(ref_block)
+    return ref_block.astype(jnp.bfloat16)
+
+
 def _num_valid_blocks(length, bs: int):
     """Blocks holding >= 1 valid slot; at least 1 so init/output fire."""
     return jnp.maximum(pl.cdiv(length, bs), 1)
 
 
 def _kv_attn_kernel(lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
-                    *rest, bs: int, scale: float, debug_visits: bool):
+                    *rest, bs: int, scale: float, kv_bits: int,
+                    debug_visits: bool):
     if debug_visits:
         visits_ref, acc_ref, m_ref, l_ref = rest
     else:
@@ -83,8 +94,8 @@ def _kv_attn_kernel(lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
     @pl.when(visited)
     def _compute():
         q = q_ref[0, 0]                          # (Hg, D) bf16
-        k_int = _unpack_int4_pairs(k_ref[0, 0])  # (bs, D)
-        v_int = _unpack_int4_pairs(v_ref[0, 0])
+        k_int = _load_kv_block(k_ref[0, 0], kv_bits)  # (bs, D)
+        v_int = _load_kv_block(v_ref[0, 0], kv_bits)
         k_scale = ks_ref[0, 0].astype(jnp.float32)  # (bs,)
         v_scale = vs_ref[0, 0].astype(jnp.float32)
 
@@ -118,15 +129,20 @@ def packed_kv_attention_pallas(q: jax.Array, k_packed: jax.Array,
                                v_packed: jax.Array, k_scale: jax.Array,
                                v_scale: jax.Array, lengths: jax.Array, *,
                                bs: int = DEFAULT_BS,
+                               kv_bits: int = 4,
                                debug_visits: bool = False,
                                interpret: bool = False):
-    """q: (B, KV, Hg, D) bf16; k/v_packed: (B, KV, S, D//2) uint8;
+    """q: (B, KV, Hg, D) bf16; k/v_packed: (B, KV, S, D//2) uint8 for
+    kv_bits=4 or (B, KV, S, D) int8 for kv_bits=8;
     scales: (B, KV, S) bf16; lengths: (B,) int32 (valid slots per row).
     Returns (B, KV, Hg, D) bf16 [, visits (B, KV) int32 when
     `debug_visits` — the number of sequence blocks actually processed
     per (row, head), for asserting grid work ∝ length]."""
     B, KV, Hg, D = q.shape
     S = k_packed.shape[2]
+    assert kv_bits in (4, 8), kv_bits
+    d_store = D // 2 if kv_bits == 4 else D
+    assert k_packed.shape[-1] == d_store, (k_packed.shape, D, kv_bits)
     bs = min(bs, S)
     assert S % bs == 0, (S, bs)
     scale = 1.0 / (D ** 0.5)
@@ -148,8 +164,8 @@ def packed_kv_attention_pallas(q: jax.Array, k_packed: jax.Array,
 
     in_specs = [
         pl.BlockSpec((1, 1, Hg, D), lambda b, h, s, lens: (b, h, 0, 0)),
-        pl.BlockSpec((1, 1, bs, D // 2), _kv_map),
-        pl.BlockSpec((1, 1, bs, D // 2), _kv_map),
+        pl.BlockSpec((1, 1, bs, d_store), _kv_map),
+        pl.BlockSpec((1, 1, bs, d_store), _kv_map),
         pl.BlockSpec((1, 1, bs), _scale_map),
         pl.BlockSpec((1, 1, bs), _scale_map),
     ]
@@ -171,7 +187,7 @@ def packed_kv_attention_pallas(q: jax.Array, k_packed: jax.Array,
     )
     return pl.pallas_call(
         functools.partial(_kv_attn_kernel, bs=bs, scale=scale,
-                          debug_visits=debug_visits),
+                          kv_bits=kv_bits, debug_visits=debug_visits),
         grid_spec=grid_spec,
         out_shape=out_shape,
         compiler_params=pltpu.TPUCompilerParams(

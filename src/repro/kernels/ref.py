@@ -4,8 +4,17 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import quant, ternary
+
+
+def rel_err(a, b) -> float:
+    """Max relative error vs oracle `b` — the ONE tolerance metric shared
+    by the kernel tests and the bench parity columns."""
+    a = np.asarray(a, np.float32)
+    b = np.asarray(b, np.float32)
+    return float(np.abs(a - b).max() / max(np.abs(b).max(), 1e-6))
 
 
 def ternary_matmul_ref(x: jax.Array, w_packed: jax.Array,
@@ -43,14 +52,21 @@ def _unpack_pairs_ref(packed: jax.Array) -> jax.Array:
 
 
 def packed_kv_attention_ref(q, k_packed, v_packed, k_scale, v_scale,
-                            lengths) -> jax.Array:
-    """Layouts as the kernel: q (B,KV,Hg,D); kv (B,KV,S,D//2) uint8;
+                            lengths, kv_bits: int = 4) -> jax.Array:
+    """Layouts as the kernel: q (B,KV,Hg,D); kv (B,KV,S,D//2) uint8 for
+    kv_bits=4 or (B,KV,S,D) int8 for kv_bits=8;
     scales (B,KV,S); lengths (B,). fp32 softmax, exact."""
     B, KV, Hg, D = q.shape
     S = k_packed.shape[2]
-    k = (_unpack_pairs_ref(k_packed).astype(jnp.float32)
+    lengths = jnp.minimum(lengths.astype(jnp.int32), S)
+    if kv_bits == 4:
+        k_int = _unpack_pairs_ref(k_packed)
+        v_int = _unpack_pairs_ref(v_packed)
+    else:
+        k_int, v_int = k_packed, v_packed
+    k = (k_int.astype(jnp.float32)
          * k_scale.astype(jnp.float32)[..., None])         # (B,KV,S,D)
-    v = (_unpack_pairs_ref(v_packed).astype(jnp.float32)
+    v = (v_int.astype(jnp.float32)
          * v_scale.astype(jnp.float32)[..., None])
     s = jnp.einsum("bkhd,bksd->bkhs", q.astype(jnp.float32), k) / (D ** 0.5)
     valid = jnp.arange(S)[None, :] < lengths[:, None]       # (B,S)

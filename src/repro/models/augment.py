@@ -1,0 +1,220 @@
+"""Augmented weight storage: the paper's 7T/8T cells applied to the model
+parameters (the STATIC plane; the KV cache is the dynamic plane).
+
+`augment_params` transforms a dense parameter tree so the hot path's matmul
+weights live packed in HBM and are consumed packed by the Pallas kernels:
+
+  weight_mode="ternary"  every attention/MLP matmul weight becomes 2-bit
+                         packed trits (4 / byte) + a per-output-channel TWN
+                         scale — the 7T cell's 8x capacity augmentation;
+                         matmuls run through `K.ternary_matmul`.
+  weight_mode="dual"     naturally-paired weights share ONE uint8 buffer,
+                         two int4 planes (the 8T dual-bit cell): wk (static
+                         nibble) + wv (dynamic nibble), and for swiglu MLPs
+                         w_gate + w_up.  `K.dual_plane_matmul` reads each
+                         byte once and issues two MXU dots.  Unpaired
+                         weights (wq, wo, w_down) stay dense bf16.
+
+`augment_pspecs` is the same transform on the declarative PSpec tree
+(dry-run shapes + sharding); `dequant_params` inverts the packing into a
+dense bf16 tree — the golden reference the kernel-backed forward is tested
+against.  Packed contraction dims carry the replicated "packed" logical
+axis (a 2-bit-packed dim cannot take the FSDP embed sharding); output dims
+keep their original TP axes.
+
+Applies to the transformer family (dense/MoE attention + dense MLP); MoE
+expert banks and the other families keep dense weights for now.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core import quant, ternary
+from repro.kernels import ops as kops
+from repro.models.params import PSpec
+
+TERNARY_KEYS = ("wq", "wk", "wv", "wo", "w_up", "w_down", "w_gate")
+DUAL_PAIRS = ((("wk", "wv"), "wkv_buf"), (("w_gate", "w_up"), "w_gate_up_buf"))
+
+
+# ---------------------------------------------------------------------------
+# Kernel application (2-D tiling over arbitrary leading dims)
+# ---------------------------------------------------------------------------
+
+def _as_rows(x: jax.Array, bm: int = 128):
+    """(..., K) -> padded (M', K) bf16 rows + (lead, M, bm) restore info."""
+    lead, K = x.shape[:-1], x.shape[-1]
+    x2 = x.reshape(-1, K).astype(jnp.bfloat16)
+    M = x2.shape[0]
+    bm = min(bm, M)
+    pad = (-M) % bm
+    if pad:
+        x2 = jnp.concatenate([x2, jnp.zeros((pad, K), x2.dtype)], axis=0)
+    return x2, lead, M, bm
+
+
+def ternary_apply(x: jax.Array, packed: jax.Array, scale: jax.Array):
+    """x (..., K) @ unpack(packed (K//4, N)) * scale (1, N) -> (..., N).
+
+    The weight stays 2 bits/value in HBM; `K.ternary_matmul` unpacks in
+    VMEM registers on the way into the MXU."""
+    x2, lead, M, bm = _as_rows(x)
+    K, N = packed.shape[0] * 4, packed.shape[1]
+    y = kops.ternary_matmul(x2, packed, scale, bm=bm,
+                            bk=math.gcd(K, 512), bn=math.gcd(N, 256))
+    return y[:M].reshape(*lead, N)
+
+
+def dual_apply(x: jax.Array, buf: jax.Array, hi_scale: jax.Array,
+               lo_scale: jax.Array):
+    """x (..., K) @ BOTH int4 planes of buf (K, N): one byte stream read
+    from HBM, two results — ((..., N), (..., N))."""
+    x2, lead, M, bm = _as_rows(x)
+    K, N = buf.shape
+    y_hi, y_lo = kops.dual_plane_matmul(x2, buf, hi_scale, lo_scale, bm=bm,
+                                        bk=math.gcd(K, 256),
+                                        bn=math.gcd(N, 256))
+    return y_hi[:M].reshape(*lead, N), y_lo[:M].reshape(*lead, N)
+
+
+def proj(p: dict, name: str, x: jax.Array) -> jax.Array:
+    """x @ p[name], dispatching to the ternary kernel when the weight is
+    stored packed (`{name}_packed` / `{name}_scale`)."""
+    if f"{name}_packed" in p:
+        return ternary_apply(x, p[f"{name}_packed"], p[f"{name}_scale"])
+    return x @ p[name]
+
+
+def ternary_mlp(cfg: ModelConfig, p: dict, h: jax.Array) -> jax.Array:
+    """MLP with all weights 2-bit packed (h is already normed)."""
+    if cfg.act == "swiglu":
+        mid = jax.nn.silu(proj(p, "w_gate", h)) * proj(p, "w_up", h)
+    else:
+        mid = jax.nn.gelu(proj(p, "w_up", h), approximate=True)
+    return proj(p, "w_down", mid)
+
+
+def dual_mlp(cfg: ModelConfig, p: dict, h: jax.Array) -> jax.Array:
+    """swiglu MLP with w_gate + w_up sharing one dual-plane buffer."""
+    gate, up = dual_apply(h, p["w_gate_up_buf"], p["w_gate_scale"],
+                          p["w_up_scale"])
+    return (jax.nn.silu(gate) * up) @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# Params transform (dense -> packed) and its PSpec / inverse views
+# ---------------------------------------------------------------------------
+
+def _ternary_pack(w: jax.Array):
+    """(n, K, N) dense -> (packed (n, K//4, N) u8, scale (n, 1, N) f32)."""
+    t, scale = ternary.ternarize(w.astype(jnp.float32), axis=1)
+    return jax.vmap(ternary.pack_ternary_2bit)(t), scale
+
+
+def _dual_pack(w_hi: jax.Array, w_lo: jax.Array):
+    """Two (n, K, N) dense weights -> one (n, K, N) u8 buffer + scales."""
+    qh, sh = quant.quantize_int4(w_hi.astype(jnp.float32), axis=1)
+    ql, sl = quant.quantize_int4(w_lo.astype(jnp.float32), axis=1)
+    return quant.pack_int4_pair(qh, ql), sh, sl
+
+
+def is_augmented(params: dict) -> bool:
+    attn = params.get("layers", {}).get("attn", {})
+    return "wkv_buf" in attn or any(k.endswith("_packed") for k in attn)
+
+
+def _transform(cfg: ModelConfig, params: dict, pack_tern, pack_dual) -> dict:
+    mode = cfg.amc.weight_mode
+    layers = dict(params["layers"])
+    attn = dict(layers["attn"])
+    mlp = dict(layers["mlp"]) if "mlp" in layers else None
+    groups = [g for g in (attn, mlp) if g is not None]
+    if mode == "ternary":
+        for g in groups:
+            for key in TERNARY_KEYS:
+                if key in g:
+                    g[f"{key}_packed"], g[f"{key}_scale"] = pack_tern(
+                        g.pop(key))
+    elif mode == "dual":
+        for g in groups:
+            for (hi, lo), buf_key in DUAL_PAIRS:
+                if hi in g and lo in g:
+                    (g[buf_key], g[f"{hi}_scale"],
+                     g[f"{lo}_scale"]) = pack_dual(g.pop(hi), g.pop(lo))
+    else:
+        raise ValueError(f"unknown weight_mode {mode!r}")
+    layers["attn"] = attn
+    if mlp is not None:
+        layers["mlp"] = mlp
+    out = dict(params)
+    out["layers"] = layers
+    return out
+
+
+def augment_params(cfg: ModelConfig, params: dict) -> dict:
+    """Dense parameter tree -> augmented storage per cfg.amc.weight_mode.
+
+    Idempotent (already-packed trees pass through); families other than
+    the transformer keep dense weights."""
+    if cfg.amc.weight_mode == "normal" or cfg.family not in ("dense", "moe"):
+        return params
+    if is_augmented(params):
+        return params
+    return _transform(cfg, params, _ternary_pack, _dual_pack)
+
+
+def augment_pspecs(cfg: ModelConfig, pspecs: dict) -> dict:
+    """The same transform on the PSpec tree (shapes/dtypes/sharding)."""
+    if cfg.amc.weight_mode == "normal" or cfg.family not in ("dense", "moe"):
+        return pspecs
+
+    def pack_tern(spec: PSpec):
+        n, K, N = spec.shape
+        out_ax = spec.axes[2]
+        return (PSpec((n, K // 4, N), (None, "packed", out_ax), dtype="u8"),
+                PSpec((n, 1, N), (None, None, out_ax), dtype="f32",
+                      init="ones"))
+
+    def pack_dual(hi: PSpec, lo: PSpec):
+        n, K, N = hi.shape
+        assert hi.shape == lo.shape, (hi.shape, lo.shape)
+        scale = PSpec((n, 1, N), (None, None, hi.axes[2]), dtype="f32",
+                      init="ones")
+        return (PSpec((n, K, N), hi.axes, dtype="u8"), scale, scale)
+
+    return _transform(cfg, pspecs, pack_tern, pack_dual)
+
+
+def dequant_params(cfg: ModelConfig, params: dict) -> dict:
+    """Augmented tree -> dense bf16 tree (the golden test reference: what
+    the packed weights represent, materialized)."""
+    if not is_augmented(params):
+        return params
+    layers = dict(params["layers"])
+    for group_key in ("attn", "mlp"):
+        if group_key not in layers:
+            continue
+        g = dict(layers[group_key])
+        for key in list(g):
+            if key.endswith("_packed"):
+                name = key[:-len("_packed")]
+                packed, scale = g.pop(key), g.pop(f"{name}_scale")
+                K = packed.shape[1] * 4
+                t = jax.vmap(lambda p_: ternary.unpack_ternary_2bit(p_, K)
+                             )(packed)
+                g[name] = ternary.ternary_dequant(t, scale)
+        for (hi, lo), buf_key in DUAL_PAIRS:
+            if buf_key in g:
+                buf = g.pop(buf_key)
+                g[hi] = quant.dequantize(quant.unpack_int4_hi(buf),
+                                         g.pop(f"{hi}_scale"))
+                g[lo] = quant.dequantize(quant.unpack_int4_lo(buf),
+                                         g.pop(f"{lo}_scale"))
+        layers[group_key] = g
+    out = dict(params)
+    out["layers"] = layers
+    return out

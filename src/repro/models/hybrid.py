@@ -172,9 +172,11 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
             kvs = {"k": _ring_from_full(k, W), "v": _ring_from_full(v, W)}
             mode = cfg.amc.kv_mode
             if mode != "normal":
+                # packed ring caches are head-major (B, KV, W, ·) — the
+                # layout the packed decode-attention kernel streams
                 pack = L.pack_kv_int4 if mode == "int4" else L.pack_kv_int8
-                kvs["k"], kvs["k_scale"] = pack(kvs["k"])
-                kvs["v"], kvs["v_scale"] = pack(kvs["v"])
+                kvs["k"], kvs["k_scale"] = pack(L.to_kvmajor(kvs["k"]))
+                kvs["v"], kvs["v_scale"] = pack(L.to_kvmajor(kvs["v"]))
             st.update(kvs)
         return x, (st if return_cache else None)
 
@@ -270,10 +272,11 @@ def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
     else:
         dt = "u8" if mode == "int4" else "i8"
         ds = hd // 2 if mode == "int4" else hd
-        blocks["k"] = PSpec((nb, batch, W, KV, ds), kv_ax, dtype=dt)
-        blocks["v"] = PSpec((nb, batch, W, KV, ds), kv_ax, dtype=dt)
-        blocks["k_scale"] = PSpec((nb, batch, W, KV, 1), kv_ax)
-        blocks["v_scale"] = PSpec((nb, batch, W, KV, 1), kv_ax)
+        kvm_ax = (None, bax, "kv_heads", "cache_seq", None)
+        blocks["k"] = PSpec((nb, batch, KV, W, ds), kvm_ax, dtype=dt)
+        blocks["v"] = PSpec((nb, batch, KV, W, ds), kvm_ax, dtype=dt)
+        blocks["k_scale"] = PSpec((nb, batch, KV, W, 1), kvm_ax)
+        blocks["v_scale"] = PSpec((nb, batch, KV, W, 1), kvm_ax)
     tail_c = {
         "h": PSpec((tail, batch, w), (None, bax, "lru"), dtype="f32",
                    init="zeros"),

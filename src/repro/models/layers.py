@@ -130,6 +130,17 @@ def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     return o.reshape(B, 1, H, D)
 
 
+def decode_attention_kvmajor(q: jax.Array, k_cache: jax.Array,
+                             v_cache: jax.Array, positions: jax.Array, *,
+                             window: Optional[int] = None) -> jax.Array:
+    """`decode_attention` over head-major caches (B, KV, S, D) — the
+    dequant reference path for the packed layouts (the hot path streams
+    the packed cache through `kernels.ops.packed_kv_attention` instead)."""
+    return decode_attention(q, jnp.swapaxes(k_cache, 1, 2),
+                            jnp.swapaxes(v_cache, 1, 2), positions,
+                            window=window)
+
+
 def prefill_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                       starts: jax.Array, *,
                       window: Optional[int] = None) -> jax.Array:
@@ -141,12 +152,24 @@ def prefill_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
     slots [0, starts[b] + i] — prior chunks plus the causal prefix of its
     own chunk — which is exact: during prefill, slot index == position.
     """
+    return prefill_attention_kvmajor(q, jnp.swapaxes(k_cache, 1, 2),
+                                     jnp.swapaxes(v_cache, 1, 2), starts,
+                                     window=window)
+
+
+def prefill_attention_kvmajor(q: jax.Array, k_cache: jax.Array,
+                              v_cache: jax.Array, starts: jax.Array, *,
+                              window: Optional[int] = None) -> jax.Array:
+    """`prefill_attention` over head-major caches (B, KV, S, D) — the
+    native layout of the packed decode cache, so the dequantized chunk
+    attention needs no cache transpose."""
     B, C, H, D = q.shape
-    S, KV = k_cache.shape[1], k_cache.shape[2]
+    KV, S = k_cache.shape[1], k_cache.shape[2]
     Hg = H // KV
     scale = 1.0 / (D ** 0.5)
     qg = q.reshape(B, C, KV, Hg, D)
-    s = _gqa_scores(qg, k_cache) * scale             # (B,KV,Hg,C,S)
+    s = jnp.einsum("bqkhd,bksd->bkhqs", qg, k_cache,
+                   preferred_element_type=jnp.float32) * scale
     qpos = starts[:, None] + jnp.arange(C)[None, :]  # (B, C)
     kpos = jnp.arange(S)
     m = kpos[None, None, :] <= qpos[:, :, None]      # (B, C, S)
@@ -154,7 +177,7 @@ def prefill_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
         m &= kpos[None, None, :] > qpos[:, :, None] - window
     s = jnp.where(m[:, None, None, :, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkhqs,bskd->bqkhd", p.astype(v_cache.dtype), v_cache)
+    o = jnp.einsum("bkhqs,bksd->bqkhd", p.astype(v_cache.dtype), v_cache)
     return o.reshape(B, C, H, D)
 
 
@@ -185,17 +208,26 @@ def lm_head(x: jax.Array, head_w: jax.Array, vocab_real: int) -> jax.Array:
 # KV cache update + AMC packing (the dynamic plane of the serving engine)
 # ---------------------------------------------------------------------------
 
+def to_kvmajor(x: jax.Array) -> jax.Array:
+    """Seq-major (..., S, KV, d) -> head-major (..., KV, S, d): the packed
+    decode-cache layout `kernels.ops.packed_kv_attention` streams. The ONE
+    place the layout convention is encoded — model code goes through here."""
+    return jnp.swapaxes(x, -3, -2)
+
 def update_cache_chunk(cache: jax.Array, new: jax.Array,
                        starts: jax.Array,
-                       write_mask: Optional[jax.Array] = None) -> jax.Array:
+                       write_mask: Optional[jax.Array] = None, *,
+                       axis: int = 0) -> jax.Array:
     """Scatter a per-row chunk into the cache.
 
     cache: (B, S, ...); new: (B, C, ...); starts: (B,) first slot per row.
+    `axis` is the sequence axis AFTER the batch dim is stripped (0 for
+    seq-major (B, S, ...) caches, 1 for head-major (B, KV, S, ...)).
     `write_mask` (B,) bool keeps masked-off rows bit-identical — prefill
     of one slot must not spill garbage into its batch neighbours' caches.
     """
     def upd(c, n, p):
-        return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=0)
+        return jax.lax.dynamic_update_slice_in_dim(c, n, p, axis=axis)
     updated = jax.vmap(upd)(cache, new, starts)
     if write_mask is None:
         return updated
@@ -204,9 +236,9 @@ def update_cache_chunk(cache: jax.Array, new: jax.Array,
 
 
 def update_cache_line(cache: jax.Array, new: jax.Array,
-                      positions: jax.Array) -> jax.Array:
+                      positions: jax.Array, *, axis: int = 0) -> jax.Array:
     """cache: (B, S, ...); new: (B, 1, ...); positions: (B,)."""
-    return update_cache_chunk(cache, new, positions)
+    return update_cache_chunk(cache, new, positions, axis=axis)
 
 
 def pack_kv_int4(kv: jax.Array):

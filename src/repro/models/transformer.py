@@ -14,6 +14,7 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.kernels import ops as K
+from repro.models import augment
 from repro.models import layers as L
 from repro.models import moe as moe_mod
 from repro.models.params import PSpec
@@ -67,6 +68,9 @@ def abstract_params(cfg: ModelConfig) -> dict:
     }
     if not cfg.tie_embeddings:
         params["head"] = PSpec((d, V), ("embed", "vocab"))
+    # NOTE: this is the DENSE master tree (training operates on it; ternary
+    # training goes through the STE path). Serving packs it into augmented
+    # storage via `augment.augment_params` / `augment.augment_pspecs`.
     return params
 
 
@@ -78,9 +82,16 @@ def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions):
     B, S, _ = x.shape
     H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     h = L.rms_norm(x, p["norm"], cfg.norm_eps)
-    q = h @ p["wq"]
-    k = h @ p["wk"]
-    v = h @ p["wv"]
+    if "wkv_buf" in p:
+        # dual-plane: wk (static nibble) + wv (dynamic nibble) share ONE
+        # uint8 stream — one HBM read, two MXU dots
+        q = augment.proj(p, "wq", h)
+        k, v = augment.dual_apply(h, p["wkv_buf"], p["wk_scale"],
+                                  p["wv_scale"])
+    else:
+        q = augment.proj(p, "wq", h)
+        k = augment.proj(p, "wk", h)
+        v = augment.proj(p, "wv", h)
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, H, hd)
@@ -100,14 +111,33 @@ def attn_block(cfg: ModelConfig, p: dict, x: jax.Array, positions,
     B, S, _ = x.shape
     q, k, v = _project_qkv(cfg, p, x, positions)
     o = L.attention(q, k, v, causal=causal, window=window, q_chunk=q_chunk)
-    return (o.reshape(B, S, -1) @ p["wo"]).astype(x.dtype), (k, v)
+    o = augment.proj(p, "wo", o.reshape(B, S, -1))
+    return o.astype(x.dtype), (k, v)
+
+
+def _seq_block(S: int, bs: int = 512) -> int:
+    """Largest divisor of S that is <= `bs` (kernel grids require
+    S % bs == 0; the VMEM budget caps the block). Runs at trace time.
+    E.g. S=100 -> 100, S=768 -> 384, S=8192 -> 512."""
+    for b in range(min(bs, S), 0, -1):
+        if S % b == 0:
+            return b
+    return 1
 
 
 def attn_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
                       cache_layer: dict, positions: jax.Array,
                       window=None):
-    """Single-token attention against (possibly packed) KV cache."""
+    """Single-token attention against (possibly packed) KV cache.
+
+    Packed kv modes (int4/int8) keep the cache head-major (B, KV, S, ·)
+    and stream it straight through `K.packed_kv_attention` — the bf16
+    cache is NEVER materialized in HBM; dequant scales are applied to
+    score columns inside the kernel. `cfg.amc.kv_impl == "dequant"`
+    selects the reference unpack-then-dense path (tests/debug only).
+    """
     B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
     q, k_new, v_new = _project_qkv(cfg, p, x, positions[:, None])
     kv_mode = cfg.amc.kv_mode
     slot = positions % window if window is not None else positions
@@ -115,31 +145,41 @@ def attn_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
         k_cache = L.update_cache_line(cache_layer["k"], k_new, slot)
         v_cache = L.update_cache_line(cache_layer["v"], v_new, slot)
         new_cache = {"k": k_cache, "v": v_cache}
-        kd, vd = k_cache, v_cache
-    elif kv_mode == "int4":
-        kp, ks = L.pack_kv_int4(k_new)
-        vp, vs = L.pack_kv_int4(v_new)
-        k_cache = L.update_cache_line(cache_layer["k"], kp, slot)
-        v_cache = L.update_cache_line(cache_layer["v"], vp, slot)
-        k_scale = L.update_cache_line(cache_layer["k_scale"], ks, slot)
-        v_scale = L.update_cache_line(cache_layer["v_scale"], vs, slot)
+        o = L.decode_attention(q, k_cache, v_cache, positions, window=window)
+    else:
+        if kv_mode == "int4":
+            pack, unpack, kv_bits = L.pack_kv_int4, L.unpack_kv_int4, 4
+        else:  # int8
+            pack, unpack, kv_bits = L.pack_kv_int8, L.unpack_kv_int8, 8
+        kp, ks = pack(k_new)                      # (B, 1, KV, ·)
+        vp, vs = pack(v_new)
+        write = functools.partial(L.update_cache_line, positions=slot, axis=1)
+        k_cache = write(cache_layer["k"], new=L.to_kvmajor(kp))
+        v_cache = write(cache_layer["v"], new=L.to_kvmajor(vp))
+        k_scale = write(cache_layer["k_scale"], new=L.to_kvmajor(ks))
+        v_scale = write(cache_layer["v_scale"], new=L.to_kvmajor(vs))
         new_cache = {"k": k_cache, "v": v_cache,
                      "k_scale": k_scale, "v_scale": v_scale}
-        kd = L.unpack_kv_int4(k_cache, k_scale)
-        vd = L.unpack_kv_int4(v_cache, v_scale)
-    else:  # int8
-        kp, ks = L.pack_kv_int8(k_new)
-        vp, vs = L.pack_kv_int8(v_new)
-        k_cache = L.update_cache_line(cache_layer["k"], kp, slot)
-        v_cache = L.update_cache_line(cache_layer["v"], vp, slot)
-        k_scale = L.update_cache_line(cache_layer["k_scale"], ks, slot)
-        v_scale = L.update_cache_line(cache_layer["v_scale"], vs, slot)
-        new_cache = {"k": k_cache, "v": v_cache,
-                     "k_scale": k_scale, "v_scale": v_scale}
-        kd = L.unpack_kv_int8(k_cache, k_scale)
-        vd = L.unpack_kv_int8(v_cache, v_scale)
-    o = L.decode_attention(q, kd, vd, positions, window=window)
-    return (o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype), new_cache
+        # valid slots = positions + 1 (the just-written token included);
+        # ring caches run past capacity — the kernel clamps lengths to S
+        lengths = positions + 1
+        if cfg.amc.kv_impl not in ("kernel", "dequant"):
+            raise ValueError(f"unknown kv_impl {cfg.amc.kv_impl!r}")
+        if cfg.amc.kv_impl == "kernel":
+            S = k_cache.shape[2]
+            qk = q[:, 0].reshape(B, KV, H // KV, hd)
+            o = K.packed_kv_attention(qk, k_cache, v_cache,
+                                      k_scale[..., 0], v_scale[..., 0],
+                                      lengths, bs=_seq_block(S),
+                                      kv_bits=kv_bits)
+            o = o.reshape(B, 1, H, hd)
+        else:  # reference: dequantize the full cache, dense attention
+            kd = unpack(k_cache, k_scale)
+            vd = unpack(v_cache, v_scale)
+            o = L.decode_attention_kvmajor(q, kd, vd, positions,
+                                           window=window)
+    o = augment.proj(p, "wo", o.reshape(B, 1, -1))
+    return o.astype(x.dtype), new_cache
 
 
 def attn_block_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
@@ -159,14 +199,13 @@ def attn_block_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
     q, k_new, v_new = _project_qkv(cfg, p, x, positions)
     kv_mode = cfg.amc.kv_mode
 
-    def put(cache, new):
-        return L.update_cache_chunk(cache, new, starts, write_mask)
-
     if kv_mode == "normal":
-        k_cache = put(cache_layer["k"], k_new)
-        v_cache = put(cache_layer["v"], v_new)
+        k_cache = L.update_cache_chunk(cache_layer["k"], k_new, starts,
+                                       write_mask)
+        v_cache = L.update_cache_chunk(cache_layer["v"], v_new, starts,
+                                       write_mask)
         new_cache = {"k": k_cache, "v": v_cache}
-        kd, vd = k_cache, v_cache
+        o = L.prefill_attention(q, k_cache, v_cache, starts)
     else:
         if kv_mode == "int4":
             kp, ks = K.quantize_pack_kv(k_new)
@@ -176,6 +215,13 @@ def attn_block_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
             kp, ks = L.pack_kv_int8(k_new)
             vp, vs = L.pack_kv_int8(v_new)
             unpack = L.unpack_kv_int8
+
+        def put(cache, new):
+            # packed caches are head-major (B, KV, S, ·): seq axis is 1
+            # after the batch dim is stripped
+            return L.update_cache_chunk(cache, L.to_kvmajor(new), starts,
+                                        write_mask, axis=1)
+
         k_cache = put(cache_layer["k"], kp)
         v_cache = put(cache_layer["v"], vp)
         k_scale = put(cache_layer["k_scale"], ks)
@@ -184,13 +230,19 @@ def attn_block_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
                      "k_scale": k_scale, "v_scale": v_scale}
         kd = unpack(k_cache, k_scale)
         vd = unpack(v_cache, v_scale)
-    o = L.prefill_attention(q, kd, vd, starts)
-    return (o.reshape(B, C, -1) @ p["wo"]).astype(x.dtype), new_cache
+        o = L.prefill_attention_kvmajor(q, kd, vd, starts)
+    o = augment.proj(p, "wo", o.reshape(B, C, -1))
+    return o.astype(x.dtype), new_cache
 
 
 def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array):
     h = L.rms_norm(x, p["norm"], cfg.norm_eps)
-    out = L.mlp(h, p.get("w_gate"), p["w_up"], p["w_down"], cfg.act)
+    if "w_up_packed" in p:            # ternary: 2-bit weights stay packed
+        out = augment.ternary_mlp(cfg, p, h)
+    elif "w_gate_up_buf" in p:        # dual: w_gate + w_up share one stream
+        out = augment.dual_mlp(cfg, p, h)
+    else:
+        out = L.mlp(h, p.get("w_gate"), p["w_up"], p["w_down"], cfg.act)
     return out.astype(x.dtype)
 
 
@@ -251,16 +303,17 @@ def _remat(fn, policy: str):
 def _pack_prefill_cache(cfg: ModelConfig, kvs):
     """Stacked per-layer (k, v) from prefill -> decode cache layout.
 
-    k/v arrive as (L, B, S, KV, hd). AMC kv modes pack them (the dynamic
-    plane of the serving engine: 4x / 2x capacity augmentation).
+    k/v arrive as (L, B, S, KV, hd). AMC kv modes pack them head-major
+    (L, B, KV, S, ·) — the layout `K.packed_kv_attention` streams — the
+    dynamic plane of the serving engine: 4x / 2x capacity augmentation.
     """
     k, v = kvs
     mode = cfg.amc.kv_mode
     if mode == "normal":
         return {"k": k, "v": v}
     pack = L.pack_kv_int4 if mode == "int4" else L.pack_kv_int8
-    kp, ks = pack(k)
-    vp, vs = pack(v)
+    kp, ks = pack(L.to_kvmajor(k))
+    vp, vs = pack(L.to_kvmajor(v))
     return {"k": kp, "v": vp, "k_scale": ks, "v_scale": vs}
 
 
@@ -320,16 +373,21 @@ def prefill_chunk_step(cfg: ModelConfig, params: dict, cache: dict,
 
 
 def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
-    """PSpec tree for the decode KV cache (dense/MoE transformer)."""
+    """PSpec tree for the decode KV cache (dense/MoE transformer).
+
+    Packed modes are head-major (L, B, KV, S, ·): the exact layout
+    `K.packed_kv_attention` streams HBM->VMEM, so the decode hot path
+    reads the packed bytes with no transpose and no dequantized copy."""
     n, KV, hd = cfg.n_layers, cfg.n_kv_heads, cfg.hd
     mode = cfg.amc.kv_mode
-    ax = (None, "cache_batch", "cache_seq", "kv_heads", None)
     if mode == "normal":
+        ax = (None, "cache_batch", "cache_seq", "kv_heads", None)
         return {"k": PSpec((n, batch, seq, KV, hd), ax),
                 "v": PSpec((n, batch, seq, KV, hd), ax)}
     dt = "u8" if mode == "int4" else "i8"
     d_store = hd // 2 if mode == "int4" else hd
-    return {"k": PSpec((n, batch, seq, KV, d_store), ax, dtype=dt),
-            "v": PSpec((n, batch, seq, KV, d_store), ax, dtype=dt),
-            "k_scale": PSpec((n, batch, seq, KV, 1), ax),
-            "v_scale": PSpec((n, batch, seq, KV, 1), ax)}
+    ax = (None, "cache_batch", "kv_heads", "cache_seq", None)
+    return {"k": PSpec((n, batch, KV, seq, d_store), ax, dtype=dt),
+            "v": PSpec((n, batch, KV, seq, d_store), ax, dtype=dt),
+            "k_scale": PSpec((n, batch, KV, seq, 1), ax),
+            "v_scale": PSpec((n, batch, KV, seq, 1), ax)}

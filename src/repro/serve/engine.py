@@ -25,10 +25,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import amc
 from repro.distributed.sharding import Rules
 from repro.launch.mesh import mesh_context
+from repro.models import augment
 from repro.models import model as M
-from repro.models.params import init_params
+from repro.models.params import init_params, is_pspec
 
 
 @dataclasses.dataclass(eq=False)
@@ -38,24 +40,49 @@ class Request:
     id: int = 0
 
 
+def _abstract_bytes(tree) -> int:
+    """Total bytes of a PSpec tree (dense logical footprint)."""
+    leaves = jax.tree.leaves(tree, is_leaf=is_pspec)
+    return sum(int(np.prod(l.shape)) * jnp.dtype(l.jdtype).itemsize
+               for l in leaves)
+
+
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, *, max_batch: int = 8,
                  max_seq: int = 256, prefill_chunk: int = 32, params=None,
-                 seed: int = 0):
+                 weight_mode: Optional[str] = None,
+                 kv_mode: Optional[str] = None, seed: int = 0):
+        # engine-level AMC knobs override the config (e.g. serve a dense
+        # checkpoint with ternary weights without touching the arch file)
+        if weight_mode is not None or kv_mode is not None:
+            cfg = dataclasses.replace(cfg, amc=dataclasses.replace(
+                cfg.amc,
+                weight_mode=weight_mode or cfg.amc.weight_mode,
+                kv_mode=kv_mode or cfg.amc.kv_mode))
         self.cfg, self.mesh = cfg, mesh
         self.max_batch, self.max_seq = max_batch, max_seq
         self.prefill_chunk = min(prefill_chunk, max_seq)
         shape = ShapeConfig("serve", max_seq, max_batch, "decode")
         self.rules = Rules.make(mesh, cfg, shape)
-        ap = M.abstract_params(cfg)
+        dense_cfg = dataclasses.replace(
+            cfg, amc=dataclasses.replace(cfg.amc, weight_mode="normal"))
         with mesh_context(mesh):
             if params is None:
-                params = init_params(ap, jax.random.PRNGKey(seed))
-            self.params = params
+                params = init_params(M.abstract_params(dense_cfg),
+                                     jax.random.PRNGKey(seed))
+            # pack the matmul weights into augmented storage (no-op for
+            # weight_mode="normal", already-packed trees, other families)
+            self.params = augment.augment_params(cfg, params)
             ca = M.abstract_cache(cfg, shape)
             self.cache = jax.tree.map(
                 lambda l: jnp.zeros(l.shape, l.jdtype), ca,
                 is_leaf=lambda x: hasattr(x, "jdtype"))
+        self._logical_weight_bytes = _abstract_bytes(
+            M.abstract_params(dense_cfg))
+        self._logical_cache_bytes = _abstract_bytes(M.abstract_cache(
+            dataclasses.replace(
+                cfg, amc=dataclasses.replace(cfg.amc, kv_mode="normal")),
+            shape))
         self._decode = jax.jit(
             lambda p, c, b: M.decode_step(cfg, p, c, b, rules=self.rules),
             donate_argnums=(1,))
@@ -78,6 +105,12 @@ class ServeEngine:
 
     def add_request(self, req: Request):
         """Claim a free slot; prefill it. Returns the slot or None."""
+        if np.asarray(req.prompt).size > self.max_seq:
+            # past max_seq every cache write would clamp to the last slot,
+            # silently corrupting the row — reject instead
+            raise ValueError(
+                f"prompt of {np.asarray(req.prompt).size} tokens exceeds "
+                f"max_seq={self.max_seq} cache slots")
         free = np.flatnonzero(~self.active)
         if free.size == 0:
             return None
@@ -117,22 +150,35 @@ class ServeEngine:
         last_logits, last_n = None, 0
         for start in range(0, tokens.size, C):
             chunk = tokens[start:start + C]
-            if self.positions[slot] + C > self.max_seq:
-                # a padded chunk would spill past the cache end (the
-                # scatter would clamp and corrupt this row's own prefix)
-                return self._prefill_stepwise(slot, tokens[start:])
             n = chunk.size
+            p = int(self.positions[slot])
+            if p + n > self.max_seq:
+                # genuinely no room for the real tokens
+                return self._prefill_stepwise(slot, tokens[start:])
+            # A padded dispatch writes C slots; near the cache end the
+            # scatter start is shifted left so the write window is
+            # [max_seq - C, max_seq) and the left-pad REPLAYS the last
+            # `shift` already-prefilled tokens (deterministic recompute ->
+            # bit-identical KV rewrite, exact attention). A short final
+            # chunk therefore still costs ONE dispatch instead of falling
+            # back to per-token steps.
+            shift = max(0, p + C - self.max_seq)
+            if shift > start:
+                # the replay tokens precede this call's buffer
+                return self._prefill_stepwise(slot, tokens[start:])
             tok = np.zeros((self.max_batch, C), np.int32)
-            tok[slot, :n] = chunk
+            tok[slot, :shift + n] = tokens[start - shift:start + n]
+            positions = self.positions.copy()
+            positions[slot] = p - shift
             batch = {"tokens": jnp.asarray(tok),
-                     "positions": jnp.asarray(self.positions),
+                     "positions": jnp.asarray(positions),
                      "write_mask": jnp.asarray(write_mask)}
             with mesh_context(self.mesh):
                 logits, self.cache = self._prefill(self.params, self.cache,
                                                    batch)
             self.dispatch_count += 1
             self.positions[slot] += n
-            last_logits, last_n = logits, n
+            last_logits, last_n = logits, shift + n
         if not return_next:
             return None
         return int(jnp.argmax(last_logits[slot, last_n - 1]))
@@ -186,6 +232,44 @@ class ServeEngine:
         for s in np.flatnonzero(done):
             self.slot_req[s] = None          # release slot (cont. batching)
         return {int(s): int(arg[s]) for s in np.flatnonzero(act & ~done)}
+
+    def stats(self) -> dict:
+        """Augmented-storage accounting (the paper's capacity headline).
+
+        Logical bytes = what the dense bf16 representation would occupy;
+        physical bytes = what the augmented planes actually occupy in HBM.
+        `capacity_factor` is logical/physical — the augmentation ratio —
+        alongside the per-plane bits/value of `AugmentedStore`'s ledger.
+        """
+        a = self.cfg.amc
+        weight_phys = sum(x.nbytes for x in jax.tree.leaves(self.params))
+        cache_phys = sum(x.nbytes for x in jax.tree.leaves(self.cache))
+        # families augment_params doesn't cover keep dense weights: report
+        # the physical reality, not the requested mode
+        weight_mode = (a.weight_mode if augment.is_augmented(self.params)
+                       else "normal")
+        wmode = amc.WEIGHT_MODES[weight_mode]
+        return {
+            "kv_mode": a.kv_mode,
+            "weight_mode": weight_mode,
+            "weight_bits_per_value": amc.mode_bits_per_value(
+                wmode, a.ternary_fmt),
+            "kv_bits_per_value": amc.KV_BITS_PER_VALUE[a.kv_mode],
+            "weight_bytes_logical": self._logical_weight_bytes,
+            "weight_bytes_physical": weight_phys,
+            "weight_capacity_factor": self._logical_weight_bytes
+                                      / weight_phys,
+            "cache_bytes_logical": self._logical_cache_bytes,
+            "cache_bytes_physical": cache_phys,
+            "cache_capacity_factor": self._logical_cache_bytes / cache_phys,
+            "total_bytes_logical": (self._logical_weight_bytes
+                                    + self._logical_cache_bytes),
+            "total_bytes_physical": weight_phys + cache_phys,
+            "capacity_factor": (self._logical_weight_bytes
+                                + self._logical_cache_bytes)
+                               / (weight_phys + cache_phys),
+            "dispatches": self.dispatch_count,
+        }
 
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
         """Run all requests to completion with slot-level batching."""

@@ -1,0 +1,296 @@
+"""Dequant-free decode + augmented weight storage, end-to-end through the
+model stack: golden equivalence of the kernel-backed paths vs the dense
+references, and an HLO-text proof that the jitted decode step never
+materializes the bf16 KV cache."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import AMCConfig, ShapeConfig
+from repro.models import augment
+from repro.models import model as M
+from repro.models.params import init_params
+
+
+def _cfg(kv_mode="normal", weight_mode="normal", kv_impl="kernel",
+         arch="granite-3-2b"):
+    cfg = get_arch(arch).reduced()
+    return dataclasses.replace(
+        cfg, amc=AMCConfig(weight_mode=weight_mode, kv_mode=kv_mode,
+                           kv_impl=kv_impl))
+
+
+def _zero_cache(cfg, B, S):
+    shape = ShapeConfig("d", S, B, "decode")
+    return jax.tree.map(
+        lambda l: jnp.zeros(l.shape, l.jdtype), M.abstract_cache(cfg, shape),
+        is_leaf=lambda x: hasattr(x, "jdtype"))
+
+
+from repro.kernels.ref import rel_err as _rel_err  # shared oracle metric
+
+
+# ---------------------------------------------------------------------------
+# kernel-backed decode vs the old unpack-then-dense path (golden)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_mode", ["int4", "int8"])
+def test_decode_kernel_matches_dequant_reference(kv_mode):
+    """The Pallas flash-decode path and the dequantize-everything path
+    must produce the same logits (same packed cache in, same math)."""
+    B, S, T = 2, 32, 6
+    cfg_k = _cfg(kv_mode, kv_impl="kernel")
+    cfg_d = _cfg(kv_mode, kv_impl="dequant")
+    params = init_params(M.abstract_params(cfg_k), jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (B, T), 0, cfg_k.vocab)
+    cache_k, cache_d = _zero_cache(cfg_k, B, S), _zero_cache(cfg_d, B, S)
+    for t in range(T):
+        batch = {"tokens": toks[:, t:t + 1],
+                 "positions": jnp.full((B,), t, jnp.int32)}
+        lg_k, cache_k = M.decode_step(cfg_k, params, cache_k, batch)
+        lg_d, cache_d = M.decode_step(cfg_d, params, cache_d, batch)
+        assert _rel_err(lg_k, lg_d) < 0.05, t
+    # the caches REPRESENT the same values (the two impls are distinct XLA
+    # programs, so fusion-order rounding may flip a quantization boundary
+    # on isolated entries — a flipped entry is off by one full quant step,
+    # so compare dequantized MEAN deviation, not bytes or max)
+    from repro.models import layers as L
+    unpack = L.unpack_kv_int4 if kv_mode == "int4" else L.unpack_kv_int8
+    for kv in ("k", "v"):
+        a = np.asarray(unpack(cache_k[kv], cache_k[f"{kv}_scale"]),
+                       np.float32)
+        b = np.asarray(unpack(cache_d[kv], cache_d[f"{kv}_scale"]),
+                       np.float32)
+        assert np.abs(a - b).mean() / max(np.abs(b).max(), 1e-6) < 1e-3, kv
+
+
+@pytest.mark.parametrize("kv_mode", ["int4", "int8"])
+def test_prefill_then_decode_kernel_vs_dequant(kv_mode):
+    """prefill_step fills the packed head-major cache; decode continues on
+    it — kernel and dequant impls must agree through the whole chain."""
+    B, S, P = 2, 32, 7
+    cfg_k = _cfg(kv_mode, kv_impl="kernel", arch="qwen1.5-0.5b")
+    cfg_d = _cfg(kv_mode, kv_impl="dequant", arch="qwen1.5-0.5b")
+    params = init_params(M.abstract_params(cfg_k), jax.random.PRNGKey(2))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, P), 0, cfg_k.vocab)
+    batch = {"tokens": toks, "positions": jnp.zeros((B,), jnp.int32),
+             "write_mask": jnp.ones((B,), bool)}
+    outs = {}
+    for name, cfg in (("kernel", cfg_k), ("dequant", cfg_d)):
+        cache = _zero_cache(cfg, B, S)
+        lg, cache = M.prefill_step(cfg, params, cache, batch)
+        dl, cache = M.decode_step(
+            cfg, params, cache,
+            {"tokens": toks[:, -1:],
+             "positions": jnp.full((B,), P, jnp.int32)})
+        outs[name] = (lg, dl)
+    assert _rel_err(outs["kernel"][0], outs["dequant"][0]) < 0.05
+    assert _rel_err(outs["kernel"][1], outs["dequant"][1]) < 0.05
+
+
+def test_decode_int4_agrees_with_normal_cache():
+    """Sanity: the packed-kernel decode tracks the full-precision cache.
+    With random-init weights the logit gaps are tiny, so int4 KV noise
+    flips some argmaxes — require majority agreement (the seed's serving
+    version of this check required 1-of-2)."""
+    B, S, T = 2, 32, 8
+    cfg_q = _cfg("int4")
+    cfg_n = _cfg("normal")
+    params = init_params(M.abstract_params(cfg_q), jax.random.PRNGKey(4))
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, T), 0, cfg_q.vocab)
+    cache_q, cache_n = _zero_cache(cfg_q, B, S), _zero_cache(cfg_n, B, S)
+    agree = 0
+    for t in range(T):
+        batch = {"tokens": toks[:, t:t + 1],
+                 "positions": jnp.full((B,), t, jnp.int32)}
+        lg_q, cache_q = M.decode_step(cfg_q, params, cache_q, batch)
+        lg_n, cache_n = M.decode_step(cfg_n, params, cache_n, batch)
+        agree += int((jnp.argmax(lg_q[:, -1], -1)
+                      == jnp.argmax(lg_n[:, -1], -1)).sum())
+    assert agree > B * T // 2, (agree, B * T)
+
+
+# ---------------------------------------------------------------------------
+# acceptance: the jitted int4 decode step materializes NO bf16 cache
+# ---------------------------------------------------------------------------
+
+def _decode_hlo(cfg, B, S):
+    params = init_params(M.abstract_params(cfg), jax.random.PRNGKey(0))
+    cache = _zero_cache(cfg, B, S)
+    batch = {"tokens": jnp.ones((B, 1), jnp.int32),
+             "positions": jnp.zeros((B,), jnp.int32)}
+    fn = jax.jit(lambda p, c, b: M.decode_step(cfg, p, c, b))
+    return fn.lower(params, cache, batch).as_text()
+
+
+def _bf16_cache_shapes(cfg, B, S):
+    """Textual type patterns of a full dequantized cache, any dim order."""
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    return [f"tensor<{B}x{S}x{KV}x{hd}xbf16>",
+            f"tensor<{B}x{KV}x{S}x{hd}xbf16>"]
+
+
+@pytest.mark.parametrize("kv_mode", ["int4", "int8"])
+def test_decode_hlo_materializes_no_bf16_cache(kv_mode):
+    """The acceptance criterion of the dequant-free decode: the lowered
+    decode step contains no (B, S, KV, hd)-shaped bf16 tensor in any
+    layout. The dequant reference path DOES (positive control, proving
+    the pattern actually detects the dequantized cache)."""
+    B, S = 2, 64
+    cfg = _cfg(kv_mode, kv_impl="kernel")
+    txt = _decode_hlo(cfg, B, S)
+    pats = _bf16_cache_shapes(cfg, B, S)
+    for pat in pats:
+        assert pat not in txt, f"dequantized cache {pat} in kernel-path HLO"
+    ref_txt = _decode_hlo(_cfg(kv_mode, kv_impl="dequant"), B, S)
+    assert any(p in ref_txt for p in pats), \
+        "positive control failed: dequant path shows no bf16 cache"
+
+
+def test_decode_hlo_no_full_cache_unpack_int8():
+    """int8 float-cache absence too: no (B,*,*,hd) f32 cache either."""
+    B, S = 2, 64
+    cfg = _cfg("int8", kv_impl="kernel")
+    txt = _decode_hlo(cfg, B, S)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    for pat in (f"tensor<{B}x{S}x{KV}x{hd}xf32>",
+                f"tensor<{B}x{KV}x{S}x{hd}xf32>"):
+        assert pat not in txt, pat
+
+
+# ---------------------------------------------------------------------------
+# augmented weight storage: packed forward == dense(dequantized) forward
+# ---------------------------------------------------------------------------
+
+def _golden_weight_pair(weight_mode, arch="granite-3-2b"):
+    """(augmented cfg+params, dense cfg+reference params).
+
+    The dense reference carries the DEQUANTIZED packed weights, so any
+    disagreement is kernel math, not quantization error."""
+    cfg_a = _cfg(weight_mode=weight_mode, arch=arch)
+    cfg_n = _cfg(weight_mode="normal", arch=arch)
+    dense = init_params(M.abstract_params(cfg_n), jax.random.PRNGKey(6))
+    aug = augment.augment_params(cfg_a, dense)
+    ref = augment.dequant_params(cfg_a, aug)
+    return cfg_a, aug, cfg_n, ref
+
+
+@pytest.mark.parametrize("weight_mode", ["ternary", "dual"])
+def test_forward_augmented_matches_dense_dequant(weight_mode):
+    cfg_a, aug, cfg_n, ref = _golden_weight_pair(weight_mode)
+    B, S = 2, 16
+    toks = jax.random.randint(jax.random.PRNGKey(7), (B, S), 0, cfg_a.vocab)
+    lg_a = M.forward(cfg_a, aug, {"tokens": toks}, q_chunk=16)
+    lg_r = M.forward(cfg_n, ref, {"tokens": toks}, q_chunk=16)
+    assert _rel_err(lg_a, lg_r) < 0.03
+
+
+@pytest.mark.parametrize("weight_mode", ["ternary", "dual"])
+def test_decode_augmented_matches_dense_dequant(weight_mode):
+    cfg_a, aug, cfg_n, ref = _golden_weight_pair(weight_mode,
+                                                 arch="qwen1.5-0.5b")
+    B, S, T = 2, 32, 4
+    toks = jax.random.randint(jax.random.PRNGKey(8), (B, T), 0, cfg_a.vocab)
+    cache_a, cache_r = _zero_cache(cfg_a, B, S), _zero_cache(cfg_n, B, S)
+    for t in range(T):
+        batch = {"tokens": toks[:, t:t + 1],
+                 "positions": jnp.full((B,), t, jnp.int32)}
+        lg_a, cache_a = M.decode_step(cfg_a, aug, cache_a, batch)
+        lg_r, cache_r = M.decode_step(cfg_n, ref, cache_r, batch)
+        assert _rel_err(lg_a, lg_r) < 0.03, t
+
+
+def test_augment_params_idempotent_and_invertible():
+    cfg = _cfg(weight_mode="ternary")
+    dense = init_params(
+        M.abstract_params(_cfg(weight_mode="normal")), jax.random.PRNGKey(9))
+    aug = augment.augment_params(cfg, dense)
+    assert augment.is_augmented(aug)
+    assert augment.augment_params(cfg, aug) is aug         # idempotent
+    attn = aug["layers"]["attn"]
+    assert attn["wq_packed"].dtype == jnp.uint8
+    # packed dim is K//4: 8x fewer bytes than the bf16 master
+    assert attn["wq_packed"].nbytes * 8 == dense["layers"]["attn"]["wq"].nbytes
+    ref = augment.dequant_params(cfg, aug)
+    assert set(ref["layers"]["attn"]) == set(dense["layers"]["attn"])
+
+
+def test_augment_pspecs_match_packed_arrays():
+    """The declarative PSpec view and the real packed arrays must agree on
+    shapes and dtypes (one tree, two views)."""
+    cfg = _cfg(weight_mode="dual", arch="qwen1.5-0.5b")
+    dense_specs = M.abstract_params(_cfg(weight_mode="normal",
+                                         arch="qwen1.5-0.5b"))
+    aug_specs = augment.augment_pspecs(cfg, dense_specs)
+    dense = init_params(dense_specs, jax.random.PRNGKey(10))
+    aug = augment.augment_params(cfg, dense)
+    specs = jax.tree_util.tree_leaves_with_path(
+        aug_specs, is_leaf=lambda x: hasattr(x, "jdtype"))
+    arrays = dict(jax.tree_util.tree_leaves_with_path(aug))
+    assert len(specs) == len(arrays)
+    for path, spec in specs:
+        arr = arrays[path]
+        assert tuple(spec.shape) == arr.shape, path
+        assert spec.jdtype == arr.dtype, path
+
+
+# ---------------------------------------------------------------------------
+# serving engine with augmented weights
+# ---------------------------------------------------------------------------
+
+def test_engine_weight_mode_knob_and_stats():
+    import numpy as np
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve import Request, ServeEngine
+
+    cfg = _cfg(arch="qwen1.5-0.5b")        # amc: all-normal
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                      weight_mode="ternary", kv_mode="int4", seed=3)
+    assert eng.cfg.amc.weight_mode == "ternary"
+    assert augment.is_augmented(eng.params)
+    rng = np.random.default_rng(0)
+    outs = eng.generate([Request(
+        prompt=rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
+        max_new_tokens=4, id=0)])
+    assert len(outs[0]) == 4
+    assert all(0 <= t < cfg.vocab_padded for t in outs[0])
+    st = eng.stats()
+    assert st["weight_bits_per_value"] == 2.0
+    assert st["kv_bits_per_value"] == 4.0
+    # packed weights strictly smaller than the dense logical footprint;
+    # int4 cache rows are hd/2 bytes + scales vs 2*hd bf16 (~3.6x)
+    assert st["weight_bytes_physical"] < st["weight_bytes_logical"]
+    assert st["cache_capacity_factor"] > 3.0
+    assert st["capacity_factor"] > 1.5
+
+
+def test_engine_augmented_matches_dense_dequant_serving():
+    """Full serving golden: an engine with packed ternary weights must
+    generate the same greedy tokens as one fed the dequantized dense
+    weights (the packing is the only difference)."""
+    import numpy as np
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve import Request, ServeEngine
+
+    cfg_a = _cfg(kv_mode="int4", weight_mode="ternary", arch="qwen1.5-0.5b")
+    cfg_n = _cfg(kv_mode="int4", weight_mode="normal", arch="qwen1.5-0.5b")
+    dense = init_params(M.abstract_params(cfg_n), jax.random.PRNGKey(11))
+    aug = augment.augment_params(cfg_a, dense)
+    ref = augment.dequant_params(cfg_a, aug)
+    rng = np.random.default_rng(1)
+    prompts = [rng.integers(0, cfg_a.vocab, size=(6,)).astype(np.int32)
+               for _ in range(2)]
+    outs = {}
+    for name, (cfg, params) in (("aug", (cfg_a, aug)),
+                                ("ref", (cfg_n, ref))):
+        eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                          prefill_chunk=4, params=params)
+        outs[name] = eng.generate(
+            [Request(prompt=p, max_new_tokens=4, id=i)
+             for i, p in enumerate(prompts)])
+    agree = sum(outs["aug"][i] == outs["ref"][i] for i in range(2))
+    assert agree == 2, outs

@@ -9,10 +9,7 @@ from repro.core import quant, ternary
 from repro.kernels import ops, ref
 
 
-def _rel_err(a, b):
-    a = np.asarray(a, np.float32)
-    b = np.asarray(b, np.float32)
-    return np.abs(a - b).max() / max(np.abs(b).max(), 1e-6)
+_rel_err = ref.rel_err
 
 
 # ---------------------------------------------------------------------------
@@ -240,6 +237,46 @@ def test_quantize_pack_kv_roundtrip_attention():
     r = ref.packed_kv_attention_ref(q, kp2, vp2, ks2[..., 0], vs2[..., 0],
                                     lengths)
     assert _rel_err(o, r) < 0.03
+
+
+@pytest.mark.parametrize("B,KV,Hg,D,S", [(2, 4, 4, 64, 512),
+                                         (1, 2, 2, 128, 256)])
+def test_packed_kv_attention_int8(B, KV, Hg, D, S):
+    """kv_bits=8: the cache stays int8 in HBM (no nibble unpack, the cast
+    is the sense amp); same online-softmax path, same length skipping."""
+    key = jax.random.PRNGKey(17)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (B, KV, S, D))
+    kq, ks = quant.quantize_int8(kf, axis=-1)
+    vq, vs = quant.quantize_int8(vf, axis=-1)
+    ks2 = ks[..., 0].astype(jnp.bfloat16)
+    vs2 = vs[..., 0].astype(jnp.bfloat16)
+    lengths = jnp.asarray(
+        np.random.default_rng(1).integers(1, S + 1, size=(B,)), jnp.int32)
+    o = ops.packed_kv_attention(q, kq, vq, ks2, vs2, lengths, bs=128,
+                                kv_bits=8)
+    r = ref.packed_kv_attention_ref(q, kq, vq, ks2, vs2, lengths, kv_bits=8)
+    assert _rel_err(o, r) < 0.03
+
+
+def test_packed_kv_attention_int8_respects_length_mask():
+    B, KV, Hg, D, S = 1, 2, 2, 64, 256
+    key = jax.random.PRNGKey(19)
+    q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
+    kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D))
+    vf = jax.random.normal(jax.random.fold_in(key, 2), (B, KV, S, D))
+    kq, _ks = quant.quantize_int8(kf, axis=-1)
+    vq, _vs = quant.quantize_int8(vf, axis=-1)
+    ks = _ks[..., 0].astype(jnp.bfloat16)
+    vs = _vs[..., 0].astype(jnp.bfloat16)
+    lengths = jnp.array([100], jnp.int32)
+    o1 = ops.packed_kv_attention(q, kq, vq, ks, vs, lengths, bs=64, kv_bits=8)
+    kq2 = kq.at[:, :, 100:].set(127)
+    vq2 = vq.at[:, :, 100:].set(127)
+    o2 = ops.packed_kv_attention(q, kq2, vq2, ks, vs, lengths, bs=64,
+                                 kv_bits=8)
+    assert np.allclose(np.asarray(o1, np.float32), np.asarray(o2, np.float32))
 
 
 def test_packed_kv_attention_length_beyond_capacity():

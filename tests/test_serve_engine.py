@@ -44,6 +44,17 @@ def test_prefill_dispatch_count(plen, chunk):
     assert int(eng.positions[slot]) == plen - 1
 
 
+def test_add_request_rejects_prompt_longer_than_cache():
+    """Past max_seq every cache write would clamp to the last slot and
+    silently corrupt the row — the engine must reject instead."""
+    cfg = _cfg()
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=16)
+    rng = np.random.default_rng(7)
+    with pytest.raises(ValueError, match="exceeds max_seq"):
+        eng.add_request(Request(prompt=_prompt(rng, 17, cfg.vocab),
+                                max_new_tokens=1, id=0))
+
+
 def test_prefill_single_token_prompt_no_dispatch():
     cfg = _cfg()
     eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32)
@@ -78,9 +89,12 @@ def test_prefill_golden_vs_stepwise(mode):
     assert fast_n < slow_n
 
 
-def test_prefill_near_cache_end_falls_back_safely():
-    """When a padded chunk would spill past max_seq the engine degrades to
-    per-token steps — outputs must stay identical."""
+def test_prefill_near_cache_end_stays_chunked_and_golden():
+    """A short final chunk near the cache end used to fall back to
+    per-token stepwise prefill (the spill check compared against the
+    padded chunk size C, not the actual n): now the scatter window is
+    left-shifted and replays already-prefilled tokens instead — outputs
+    must stay identical to the per-token path."""
     cfg = _cfg()
     rng = np.random.default_rng(4)
     prompt = _prompt(rng, 19, cfg.vocab)   # 18 prefill tokens
@@ -90,9 +104,32 @@ def test_prefill_near_cache_end_falls_back_safely():
                           prefill_chunk=8, seed=1)
         if not chunked:
             eng._prefill = None
-        return eng.generate([Request(prompt=prompt, max_new_tokens=1, id=0)])
+        out = eng.generate([Request(prompt=prompt, max_new_tokens=1, id=0)])
+        return out, eng.dispatch_count
 
-    assert run(True) == run(False)
+    fast, fast_n = run(True)
+    slow, slow_n = run(False)
+    assert fast == slow
+    assert fast_n < slow_n
+
+
+@pytest.mark.parametrize("plen,chunk,max_seq", [(19, 8, 20), (18, 8, 20),
+                                                (31, 8, 32), (21, 4, 22)])
+def test_prefill_short_final_chunk_dispatch_count(plen, chunk, max_seq):
+    """Regression for the spill check: prefill near the cache end must
+    still cost ceil(P / chunk) dispatches (no stepwise fallback while the
+    real tokens fit)."""
+    cfg = _cfg()
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=max_seq,
+                      prefill_chunk=chunk)
+    rng = np.random.default_rng(5)
+    before = eng.dispatch_count
+    slot = eng.add_request(Request(prompt=_prompt(rng, plen, cfg.vocab),
+                                   max_new_tokens=1, id=0))
+    want = math.ceil((plen - 1) / chunk)
+    assert eng.dispatch_count - before == want, \
+        (plen, chunk, max_seq, eng.dispatch_count - before, want)
+    assert int(eng.positions[slot]) == plen - 1
 
 
 # ---------------------------------------------------------------------------
