@@ -117,10 +117,12 @@ def bench_serve_prefill_decode() -> dict:
         f"steps={n} steps_per_s={n/decode_s:.1f} "
         f"tok_per_s={emitted/decode_s:.0f}")
 
+    st = eng.stats()
     return {
         "config": {"arch": "qwen1.5-0.5b(reduced)", "prefill_chunk": chunk,
                    "max_batch": 2, "max_seq": 64, "kv_mode": cfg.amc.kv_mode,
-                   "weight_mode": cfg.amc.weight_mode},
+                   "weight_mode": cfg.amc.weight_mode,
+                   "pool_mode": eng.pool.pool_mode if eng.paged else None},
         "prefill": {"tokens": prefill_tokens,
                     "dispatches": prefill_dispatches,
                     "per_token_path_dispatches": prefill_tokens,
@@ -129,6 +131,10 @@ def bench_serve_prefill_decode() -> dict:
                    "tokens_per_s": emitted / decode_s},
         "hbm_model": serve_hbm_model(kv_mode=cfg.amc.kv_mode,
                                      weight_mode=cfg.amc.weight_mode),
+        # paged-pool refresh/maintenance traffic rides along so the
+        # serving trajectory tracks the retention cost too
+        "pool": st.get("pool"),
+        "scheduler": st.get("scheduler"),
     }
 
 

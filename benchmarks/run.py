@@ -15,15 +15,19 @@ import sys
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import e2e_bench, kernels_bench, paper_tables
+    from benchmarks import scheduler_bench
     print("# -- paper tables I-VI analogs --")
     paper_tables.run_all()
     print("# -- pallas kernels (bytes/roofline; CPU ref wall-time) --")
     kernels = kernels_bench.run_all()
     print("# -- end-to-end (reduced configs, CPU) --")
     serve = e2e_bench.run_all()
+    print("# -- continuous-batching scheduler (pool modes x offered load) --")
+    sched = scheduler_bench.run_all()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for name, payload in (("BENCH_serve.json", serve),
-                          ("BENCH_kernels.json", kernels)):
+                          ("BENCH_kernels.json", kernels),
+                          ("BENCH_scheduler.json", sched)):
         out = os.path.join(root, name)
         with open(out, "w") as f:
             json.dump(payload, f, indent=2)

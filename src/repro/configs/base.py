@@ -74,6 +74,37 @@ class AMCConfig:
     # path kept for golden-equivalence tests and debugging.
     kv_impl: str = "kernel"         # kernel | dequant
     retention_steps: int = 8
+    # -- paged augmented KV pool (serve/cache_pool.py) ----------------------
+    # Tokens per page: the mode-switch granularity of the pool (the paper's
+    # per-sub-array WL/SL reconfiguration unit).
+    page_size: int = 16
+    # Pool mode policy: "auto" derives the legacy-equivalent behavior from
+    # kv_mode (normal -> normal-only, int4/int8 -> always-augmented);
+    # "augment-on-pressure" starts pages in Normal mode and augments cold
+    # pages in place when the byte budget runs out (the paper's on-demand
+    # capacity); "normal-only" / "always-augmented" pin the mode.
+    pool_mode: str = "auto"
+    # Refresh policy: promote expired augmented pages back to Normal when
+    # the budget has room (augment-on-pressure only); otherwise they are
+    # re-written in place (restamped) and the traffic is accounted.
+    refresh_promote: bool = True
+
+    @property
+    def aug_bits(self) -> int:
+        """Augmented-plane width for the paged pool: follows kv_mode,
+        int8 when the model itself serves a Normal cache (conservative
+        default for pressure-augmented pages of a bf16 pool)."""
+        return 4 if self.kv_mode == "int4" else 8
+
+    @property
+    def resolved_pool_mode(self) -> str:
+        """``auto`` maps kv_mode onto the legacy-equivalent pool policy:
+        a normal cache serves from Normal pages, a packed cache from
+        Augmented pages; augment-on-pressure must be asked for."""
+        if self.pool_mode == "auto":
+            return "normal-only" if self.kv_mode == "normal" \
+                else "always-augmented"
+        return self.pool_mode
 
 
 @dataclasses.dataclass(frozen=True)

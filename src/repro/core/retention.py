@@ -73,6 +73,19 @@ class RefreshPolicy:
     retention_steps: int = 1
     _written_at: int = dataclasses.field(default=-1, init=False)
 
+    @classmethod
+    def from_leakage(cls, cell: str, temp_c: float,
+                     step_time_us: float) -> "RefreshPolicy":
+        """Derive the step budget from the analog model: how many decode
+        steps of `step_time_us` fit inside the cell's retention window at
+        `temp_c`.  This is the bridge between the paper's Tables I-II and
+        the serving scheduler's refresh cadence — colder parts (longer
+        retention) buy strictly more steps between refreshes.  Always at
+        least 1 step, else an augmented page could never be read back.
+        """
+        ret_us = LeakageModel(cell=cell).retention_us(temp_c)
+        return cls(retention_steps=max(1, int(ret_us // step_time_us)))
+
     def stamp(self, step: int) -> None:
         self._written_at = step
 
@@ -83,6 +96,12 @@ class RefreshPolicy:
 
     def expires_at(self) -> int:
         return self._written_at + self.retention_steps
+
+    def age(self, step: int) -> int:
+        """Steps since the last stamp (0 if never written)."""
+        if self._written_at < 0:
+            return 0
+        return step - self._written_at
 
     def needs_refresh(self, step: int) -> bool:
         return self._written_at >= 0 and not self.valid(step)

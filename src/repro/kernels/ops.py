@@ -14,6 +14,7 @@ import jax.numpy as jnp
 from repro.kernels import ref
 from repro.kernels.dual_plane_matmul import dual_plane_matmul_pallas
 from repro.kernels.packed_kv_attention import packed_kv_attention_pallas
+from repro.kernels.paged_kv_attention import paged_kv_attention_pallas
 from repro.kernels.quantize_pack_kv import quantize_pack_kv_pallas
 from repro.kernels.ternary_matmul import ternary_matmul_pallas
 
@@ -67,6 +68,31 @@ def packed_kv_attention(q, k_packed, v_packed, k_scale, v_scale, lengths, *,
                                       kv_bits=kv_bits,
                                       debug_visits=debug_visits,
                                       interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("page", "kv_bits", "interpret",
+                                             "use_ref"))
+def paged_kv_attention(q, kn, vn, kp, vp, k_scale, v_scale, lengths, modes,
+                       normal_idx, packed_idx, *, page, kv_bits=4,
+                       interpret=None, use_ref=False):
+    """Flash-decode over the paged mode-switchable KV pool.
+
+    Walks each row's page table (scalar-prefetched, hold-previous gather
+    indices so the mode-mismatched arena issues no DMA); per-page mode
+    selects the Normal bf16 plane or the Augmented packed plane. On an
+    all-Augmented pool this is bit-identical to `packed_kv_attention`
+    with bs == page (same block walk, same op order)."""
+    if use_ref:
+        # reconstruct the true page table: at mode==1 steps packed_idx
+        # holds the real physical page, at mode==0 steps normal_idx does
+        table = jnp.where(modes == 1, packed_idx, normal_idx)
+        return ref.paged_kv_attention_ref(q, kn, vn, kp, vp, k_scale,
+                                          v_scale, lengths, table, modes,
+                                          kv_bits=kv_bits)
+    return paged_kv_attention_pallas(q, kn, vn, kp, vp, k_scale, v_scale,
+                                     lengths, modes, normal_idx, packed_idx,
+                                     page=page, kv_bits=kv_bits,
+                                     interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret", "use_ref"))

@@ -51,6 +51,54 @@ def _unpack_pairs_ref(packed: jax.Array) -> jax.Array:
     return w.reshape(*packed.shape[:-1], packed.shape[-1] * 2)
 
 
+def paged_gather_kv_ref(kn, vn, kp, vp, k_scale, v_scale, page_table,
+                        page_modes, kv_bits: int = 4):
+    """Gather a paged two-arena pool into dense head-major caches.
+
+    kn/vn: (Nn, KV, page, D) bf16; kp/vp: (Np, KV, page, D//2|D) packed;
+    k/v_scale: (Np, KV, page); page_table/page_modes: (B, maxP) int32
+    (physical page index valid in the arena selected by the mode bit).
+    Returns (k, v): (B, KV, maxP*page, D) f32 — the logical contiguous
+    cache the page table describes (invalid tail pages yield garbage that
+    callers mask via lengths)."""
+    B, maxP = page_table.shape
+    KV, page, D = kn.shape[1], kn.shape[2], kn.shape[3]
+    n_sel = jnp.where(page_modes == 0, page_table, 0)
+    p_sel = jnp.where(page_modes == 1, page_table, 0)
+
+    def dense(nrm, pkd, scl):
+        g_n = nrm[n_sel].astype(jnp.float32)            # (B,maxP,KV,page,D)
+        ints = pkd[p_sel]
+        ints = (_unpack_pairs_ref(ints) if kv_bits == 4 else ints)
+        g_p = (ints.astype(jnp.float32)
+               * scl[p_sel].astype(jnp.float32)[..., None])
+        out = jnp.where((page_modes == 1)[:, :, None, None, None], g_p, g_n)
+        # (B, maxP, KV, page, D) -> (B, KV, maxP*page, D)
+        return jnp.moveaxis(out, 2, 1).reshape(B, KV, maxP * page, D)
+
+    return dense(kn, kp, k_scale), dense(vn, vp, v_scale)
+
+
+def paged_kv_attention_ref(q, kn, vn, kp, vp, k_scale, v_scale, lengths,
+                           page_table, page_modes,
+                           kv_bits: int = 4) -> jax.Array:
+    """Oracle for the paged mixed-mode kernel: gather + dense softmax.
+    Layouts as `paged_kv_attention_pallas`, except the page table is the
+    TRUE (page_table, page_modes) pair rather than hold-previous gather
+    indices."""
+    B, KV, Hg, D = q.shape
+    k, v = paged_gather_kv_ref(kn, vn, kp, vp, k_scale, v_scale,
+                               page_table, page_modes, kv_bits=kv_bits)
+    S = k.shape[2]
+    lengths = jnp.minimum(lengths.astype(jnp.int32), S)
+    s = jnp.einsum("bkhd,bksd->bkhs", q.astype(jnp.float32), k) / (D ** 0.5)
+    valid = jnp.arange(S)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkhs,bksd->bkhd", p, v)
+    return o.astype(jnp.bfloat16)
+
+
 def packed_kv_attention_ref(q, k_packed, v_packed, k_scale, v_scale,
                             lengths, kv_bits: int = 4) -> jax.Array:
     """Layouts as the kernel: q (B,KV,Hg,D); kv (B,KV,S,D//2) uint8 for

@@ -22,6 +22,15 @@ def main():
     ap.add_argument("--max-new", type=int, default=8)
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--pool-mode", default=None,
+                    choices=["normal-only", "augment-on-pressure",
+                             "always-augmented"],
+                    help="paged-pool policy override (default: auto from "
+                         "kv_mode)")
+    ap.add_argument("--pool-budget-bytes", type=int, default=None,
+                    help="paged-pool byte budget (the modeled SRAM array "
+                         "size; small budgets exercise augmentation "
+                         "pressure and preemption)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -29,7 +38,8 @@ def main():
         cfg = cfg.reduced()
     mesh = mesh_lib.make_local_mesh()
     eng = ServeEngine(cfg, mesh, max_batch=args.max_batch,
-                      max_seq=args.max_seq)
+                      max_seq=args.max_seq, pool_mode=args.pool_mode,
+                      pool_budget_bytes=args.pool_budget_bytes)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
                     max_new_tokens=args.max_new, id=i)
@@ -37,9 +47,17 @@ def main():
     outs = eng.generate(reqs)
     for rid in sorted(outs):
         print(f"[serve] req {rid}: {outs[rid]}")
-    print(f"[serve] kv_mode={cfg.amc.kv_mode} "
+    print(f"[serve] kv_mode={eng.cfg.amc.kv_mode} "
           f"(augmented KV capacity factor "
-          f"{ {'normal':1,'int8':2,'int4':4}[cfg.amc.kv_mode] }x)")
+          f"{ {'normal':1,'int8':2,'int4':4}[eng.cfg.amc.kv_mode] }x)")
+    if eng.paged:
+        st = eng.stats()
+        print(f"[serve] pool={eng.pool.pool_mode} "
+              f"pages(norm/aug)={st['pool']['pages_live_normal']}/"
+              f"{st['pool']['pages_live_augmented']} "
+              f"augments={st['augment_events']} refreshes={st['refreshes']} "
+              f"preemptions={st['preemptions']} "
+              f"queue_peak={st['scheduler']['peak_queue_depth']}")
 
 
 if __name__ == "__main__":

@@ -67,6 +67,34 @@ def prefill_step(cfg: ModelConfig, params, cache, batch: dict, *,
               batch.get("write_mask"), rules=rules)
 
 
+def supports_paging(cfg: ModelConfig) -> bool:
+    """Whether the family's decode state is a transformer KV cache the
+    paged augmented pool (serve/cache_pool.py) can manage. Recurrent /
+    conv / cross-attention states keep the contiguous slot cache."""
+    return cfg.family in ("dense", "moe")
+
+
+def paged_decode_step(cfg: ModelConfig, params, arenas, batch: dict, *,
+                      rules=None):
+    """One decode step against the paged pool. batch adds the pool's
+    device tables (page_table/page_modes/normal_idx/packed_idx) and
+    write_mask to the decode operands."""
+    return _family_mod(cfg).paged_decode_step(
+        cfg, params, arenas, batch["tokens"], batch["positions"],
+        {k: batch[k] for k in ("page_table", "page_modes", "normal_idx",
+                               "packed_idx", "write_mask")}, rules=rules)
+
+
+def paged_prefill_step(cfg: ModelConfig, params, arenas, batch: dict, *,
+                       rules=None):
+    """Chunked prefill into the paged pool (one dispatch per chunk)."""
+    return _family_mod(cfg).paged_prefill_chunk_step(
+        cfg, params, arenas, batch["tokens"], batch["positions"],
+        batch.get("write_mask"),
+        {k: batch[k] for k in ("page_table", "page_modes", "normal_idx",
+                               "packed_idx")}, rules=rules)
+
+
 def loss_fn(cfg: ModelConfig, params, batch: dict, *, rules=None,
             remat_policy="dots", q_chunk=1024):
     """Next-token cross-entropy, vocab-sharding-friendly.

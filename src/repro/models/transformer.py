@@ -182,6 +182,119 @@ def attn_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
     return o.astype(x.dtype), new_cache
 
 
+def _paged_pack(cfg: ModelConfig, kv: jax.Array):
+    """Quantize a bf16 KV tensor for the pool's Augmented plane. int4 runs
+    through the fused `quantize_pack_kv` Pallas write driver; int8 through
+    the jnp pack (no nibble interleave to fuse)."""
+    if cfg.amc.aug_bits == 4:
+        return K.quantize_pack_kv(kv)
+    return L.pack_kv_int8(kv)
+
+
+def _paged_scatter(cfg: ModelConfig, arenas: dict, k_new: jax.Array,
+                   v_new: jax.Array, pos: jax.Array, meta: dict,
+                   write: jax.Array) -> dict:
+    """Scatter per-token KV rows into the two-plane paged arena.
+
+    k/v_new: (B, T, KV, hd); pos: (B, T) absolute positions; write:
+    (B, T) bool. Each token lands in its logical page's physical page
+    (page_table) in the plane its mode bit selects; masked-off rows are
+    redirected to physical page 0, the write-dump page, so neighbours
+    stay bit-identical (the paged form of the write-masked scatter)."""
+    page = cfg.amc.page_size
+    lp = pos // page
+    slot = pos % page
+    phys = jnp.take_along_axis(meta["page_table"], lp, axis=1)    # (B, T)
+    mode = jnp.take_along_axis(meta["page_modes"], lp, axis=1)
+    out = dict(arenas)
+    # pool_mode is trace-time static: pinned-mode pools skip the plane
+    # they can never write (half the scatter work of the mixed path)
+    policy = cfg.amc.resolved_pool_mode
+    if policy != "always-augmented":
+        pn = jnp.where(write & (mode == 0), phys, 0)
+        out["kn"] = arenas["kn"].at[pn, :, slot].set(
+            k_new.astype(jnp.bfloat16))
+        out["vn"] = arenas["vn"].at[pn, :, slot].set(
+            v_new.astype(jnp.bfloat16))
+    if policy != "normal-only":
+        pp = jnp.where(write & (mode == 1), phys, 0)
+        kq, ks = _paged_pack(cfg, k_new)
+        vq, vs = _paged_pack(cfg, v_new)
+        out["kp"] = arenas["kp"].at[pp, :, slot].set(kq)
+        out["vp"] = arenas["vp"].at[pp, :, slot].set(vq)
+        out["ks"] = arenas["ks"].at[pp, :, slot].set(
+            ks[..., 0].astype(jnp.bfloat16))
+        out["vs"] = arenas["vs"].at[pp, :, slot].set(
+            vs[..., 0].astype(jnp.bfloat16))
+    return out
+
+
+def _paged_gather(cfg: ModelConfig, arenas: dict, meta: dict):
+    """Reference gather: materialize the pool's logical contiguous caches
+    (B, KV, maxP*page, hd) bf16 — the dequant/debug path and the chunked-
+    prefill attention operand (prefill is compute-bound; the decode hot
+    path streams pages through `K.paged_kv_attention` instead)."""
+    from repro.kernels.ref import paged_gather_kv_ref
+    kd, vd = paged_gather_kv_ref(
+        arenas["kn"], arenas["vn"], arenas["kp"], arenas["vp"],
+        arenas["ks"], arenas["vs"], meta["page_table"], meta["page_modes"],
+        kv_bits=cfg.amc.aug_bits)
+    return kd.astype(jnp.bfloat16), vd.astype(jnp.bfloat16)
+
+
+def attn_block_decode_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                            arenas: dict, positions: jax.Array,
+                            meta: dict) -> tuple:
+    """Single-token attention against the paged mode-switchable pool.
+
+    `meta` carries the scheduler's device tables: page_table/page_modes
+    (true per-(row, logical-page) physical index + mode bit) plus
+    normal_idx/packed_idx (hold-previous gather indices for the kernel)
+    and write_mask (rows actively decoding). The new token's KV is
+    scattered into whichever plane its tail page is in; attention walks
+    the page table via the scalar-prefetched Pallas kernel."""
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions[:, None])
+    new_arenas = _paged_scatter(cfg, arenas, k_new, v_new,
+                                positions[:, None], meta,
+                                meta["write_mask"][:, None])
+    lengths = positions + 1
+    if cfg.amc.kv_impl == "kernel":
+        qk = q[:, 0].reshape(B, KV, H // KV, hd)
+        o = K.paged_kv_attention(
+            qk, new_arenas["kn"], new_arenas["vn"], new_arenas["kp"],
+            new_arenas["vp"], new_arenas["ks"], new_arenas["vs"], lengths,
+            meta["page_modes"], meta["normal_idx"], meta["packed_idx"],
+            page=cfg.amc.page_size, kv_bits=cfg.amc.aug_bits)
+        o = o.reshape(B, 1, H, hd)
+    else:  # reference: gather + dense attention
+        kd, vd = _paged_gather(cfg, new_arenas, meta)
+        o = L.decode_attention_kvmajor(q, kd, vd, positions)
+    o = augment.proj(p, "wo", o.reshape(B, 1, -1))
+    return o.astype(x.dtype), new_arenas
+
+
+def attn_block_prefill_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                             arenas: dict, starts: jax.Array,
+                             write_mask: Optional[jax.Array],
+                             meta: dict) -> tuple:
+    """Chunked-prefill attention over the paged pool: the chunk's KV is
+    scattered across whatever pages (and modes) the page table assigns,
+    then attended exactly against the gathered logical cache."""
+    B, C, _ = x.shape
+    positions = starts[:, None] + jnp.arange(C)[None, :]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    write = (jnp.ones((B, 1), bool) if write_mask is None
+             else write_mask[:, None]) & jnp.ones((B, C), bool)
+    new_arenas = _paged_scatter(cfg, arenas, k_new, v_new, positions,
+                                meta, write)
+    kd, vd = _paged_gather(cfg, new_arenas, meta)
+    o = L.prefill_attention_kvmajor(q, kd, vd, starts)
+    o = augment.proj(p, "wo", o.reshape(B, C, -1))
+    return o.astype(x.dtype), new_arenas
+
+
 def attn_block_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
                        cache_layer: dict, starts: jax.Array,
                        write_mask: Optional[jax.Array] = None):
@@ -280,14 +393,20 @@ def forward(cfg: ModelConfig, params: dict, tokens: jax.Array, *,
 
     body_fn = _remat(body, remat_policy)
     x, kvs = jax.lax.scan(body_fn, x, params["layers"])
+    logits = _logits_head(cfg, params, x)
+    if return_cache:
+        return logits, _pack_prefill_cache(cfg, kvs)
+    return logits
+
+
+def _logits_head(cfg: ModelConfig, params: dict, x: jax.Array) -> jax.Array:
+    """Final norm + (possibly tied) LM head — the shared epilogue of
+    every forward / decode / prefill variant."""
     x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
     head = params.get("head")
     if head is None:
         head = params["embed"].T
-    logits = L.lm_head(x, head, cfg.vocab)
-    if return_cache:
-        return logits, _pack_prefill_cache(cfg, kvs)
-    return logits
+    return L.lm_head(x, head, cfg.vocab)
 
 
 def _remat(fn, policy: str):
@@ -334,11 +453,7 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
         return x, new_cache
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
-    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params.get("head")
-    if head is None:
-        head = params["embed"].T
-    logits = L.lm_head(x, head, cfg.vocab)
+    logits = _logits_head(cfg, params, x)
     return logits, new_cache
 
 
@@ -364,12 +479,60 @@ def prefill_chunk_step(cfg: ModelConfig, params: dict, cache: dict,
         return x, new_cache
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
-    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
-    head = params.get("head")
-    if head is None:
-        head = params["embed"].T
-    logits = L.lm_head(x, head, cfg.vocab)
+    logits = _logits_head(cfg, params, x)
     return logits, new_cache
+
+
+def paged_decode_step(cfg: ModelConfig, params: dict, arenas: dict,
+                      tokens: jax.Array, positions: jax.Array, meta: dict,
+                      *, rules=None):
+    """One decode step against the paged augmented KV pool.
+
+    tokens (B, 1); positions (B,); `meta` holds the pool's device tables
+    (see `attn_block_decode_paged`) — scalar operands, shared by every
+    layer of the scan. Returns (logits, new_arenas)."""
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+
+    from repro.distributed.sharding import constrain
+
+    def body(x, scanned):
+        lp, arena_layer = scanned
+        x = constrain(x, rules, "batch", None, None)
+        a, new_arenas = attn_block_decode_paged(cfg, lp["attn"], x,
+                                                arena_layer, positions, meta)
+        x = constrain(x + a, rules, "batch", None, None)
+        x = x + ffn_dispatch(cfg, lp, x, rules)
+        return x, new_arenas
+
+    x, new_arenas = jax.lax.scan(body, x, (params["layers"], arenas))
+    logits = _logits_head(cfg, params, x)
+    return logits, new_arenas
+
+
+def paged_prefill_chunk_step(cfg: ModelConfig, params: dict, arenas: dict,
+                             tokens: jax.Array, starts: jax.Array,
+                             write_mask: Optional[jax.Array], meta: dict,
+                             *, rules=None):
+    """Chunked prefill into the paged pool: tokens (B, C) at absolute
+    positions starts (B,), scattered across the rows' page tables in one
+    dispatch. Returns (logits (B, C, V), new_arenas)."""
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+
+    from repro.distributed.sharding import constrain
+
+    def body(x, scanned):
+        lp, arena_layer = scanned
+        x = constrain(x, rules, "batch", None, None)
+        a, new_arenas = attn_block_prefill_paged(cfg, lp["attn"], x,
+                                                 arena_layer, starts,
+                                                 write_mask, meta)
+        x = constrain(x + a, rules, "batch", None, None)
+        x = x + ffn_dispatch(cfg, lp, x, rules)
+        return x, new_arenas
+
+    x, new_arenas = jax.lax.scan(body, x, (params["layers"], arenas))
+    logits = _logits_head(cfg, params, x)
+    return logits, new_arenas
 
 
 def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:

@@ -1,3 +1,6 @@
+from repro.serve.cache_pool import PagedKVPool
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import QueueEntry, Scheduler
 
-__all__ = ["Request", "ServeEngine"]
+__all__ = ["Request", "ServeEngine", "PagedKVPool", "Scheduler",
+           "QueueEntry"]

@@ -1,0 +1,448 @@
+"""Paged, mode-switchable augmented KV pool — the serving-layer analogue of
+the paper's on-demand capacity.
+
+The pool manages fixed-size pages (``cfg.amc.page_size`` tokens × all
+layers × K+V) that each live in one of two modes:
+
+  Normal     1 logical bit per physical bit: bf16 rows in the ``kn``/``vn``
+             arena (the 6T static mode).
+  Augmented  capacity_factor > 1: int4/int8-packed rows + per-token scales
+             in the ``kp``/``vp``/``ks``/``vs`` arena (the 8T/7T dynamic
+             mode) — written through the existing `quantize_pack_kv` path.
+
+One BYTE BUDGET models the physical array (the paper's SRAM macro): a
+Normal page charges `page_bytes_normal` against it, an Augmented page only
+`page_bytes_aug` (~3.6x less for int4+scales). Under memory pressure the
+pool *augments* cold pages — move them to the packed plane, release the
+byte difference — so more sequences can be admitted instead of rejected.
+The two arenas are the staging areas for the two electrical configurations
+of the same budgeted cells; `live_bytes <= budget_bytes` is the invariant
+the allocator enforces.
+
+Augmented pages are DYNAMIC: each carries a `core.retention.RefreshPolicy`
+stamped on every write; after `retention_steps` decode steps the page
+expires and the refresh scheduler must re-materialize it (restamp + traffic
+accounting) or promote it back to Normal. `refresh_due()` lists expired
+pages; the serving scheduler drains that list interleaved with decode.
+
+Host-side metadata (numpy page tables, free lists, stamps) drives
+device-side arenas (jax arrays, donated through the jitted decode step).
+`device_tables()` emits the scalar-prefetch operands of the paged
+attention kernel, including the HOLD-PREVIOUS gather indices that let the
+mode-mismatched arena skip its DMA.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.core.retention import RefreshPolicy
+from repro.kernels import ops as K
+from repro.models import layers as L
+
+POOL_MODES = ("normal-only", "augment-on-pressure", "always-augmented")
+
+
+def resolve_pool_mode(cfg: ModelConfig) -> str:
+    """Validated `cfg.amc.resolved_pool_mode` (auto follows kv_mode)."""
+    mode = cfg.amc.resolved_pool_mode
+    if mode not in POOL_MODES:
+        raise ValueError(f"unknown pool_mode {mode!r}")
+    return mode
+
+
+def aug_bits_for(cfg: ModelConfig) -> int:
+    """Augmented-plane width of this model's pool (cfg.amc.aug_bits)."""
+    return cfg.amc.aug_bits
+
+
+@dataclasses.dataclass(frozen=True)
+class PageGeometry:
+    """Static shape/byte facts of one pool instance."""
+    n_layers: int
+    kv_heads: int
+    head_dim: int
+    page_size: int
+    aug_bits: int
+
+    @property
+    def d_store(self) -> int:
+        return self.head_dim // 2 if self.aug_bits == 4 else self.head_dim
+
+    @property
+    def page_bytes_normal(self) -> int:
+        # K + V, all layers, bf16
+        return 2 * self.n_layers * self.kv_heads * self.page_size \
+            * self.head_dim * 2
+
+    @property
+    def page_bytes_aug(self) -> int:
+        # K + V packed rows + bf16 per-(token, head) scales
+        return 2 * self.n_layers * self.kv_heads * self.page_size \
+            * (self.d_store + 2)
+
+    @property
+    def capacity_factor(self) -> float:
+        return self.page_bytes_normal / self.page_bytes_aug
+
+
+class PagedKVPool:
+    """See module docstring. `max_batch` bounds the running-batch width
+    (rows of the page table); capacity in tokens is budget-bound, not
+    row-bound."""
+
+    def __init__(self, cfg: ModelConfig, *, max_batch: int, max_seq: int,
+                 pages_normal: Optional[int] = None,
+                 pages_packed: Optional[int] = None,
+                 budget_bytes: Optional[int] = None,
+                 retention_steps: Optional[int] = None):
+        a = cfg.amc
+        self.cfg = cfg
+        self.pool_mode = resolve_pool_mode(cfg)
+        self.geom = PageGeometry(cfg.n_layers, cfg.n_kv_heads, cfg.hd,
+                                 a.page_size, aug_bits_for(cfg))
+        self.max_batch = max_batch
+        self.max_pages = -(-max_seq // a.page_size)          # ceil
+        self.retention_steps = (a.retention_steps if retention_steps is None
+                                else retention_steps)
+        B, maxP = max_batch, self.max_pages
+        pbn, pba = self.geom.page_bytes_normal, self.geom.page_bytes_aug
+        # default arena sizing: legacy-equivalent capacity (every row can
+        # reach max_seq tokens in any mode the policy may choose)
+        if pages_normal is None:
+            pages_normal = 0 if self.pool_mode == "always-augmented" \
+                else B * maxP
+        if pages_packed is None:
+            pages_packed = 0 if self.pool_mode == "normal-only" \
+                else B * maxP
+        self.pages_normal, self.pages_packed = pages_normal, pages_packed
+        self.budget_bytes = (B * maxP * pbn if budget_bytes is None
+                             else budget_bytes)
+        seq_cost = maxP * (pbn if self.pool_mode == "normal-only" else pba)
+        if self.budget_bytes < seq_cost:
+            raise ValueError(
+                f"budget_bytes={self.budget_bytes} cannot hold one full "
+                f"sequence ({seq_cost} B in the pool's cheapest mode)")
+        self.live_bytes = 0
+
+        # device arenas — physical page 0 of each is the write-dump page
+        # (masked-off scatter rows land there), so usable pages start at 1
+        g = self.geom
+        Nn, Np = pages_normal + 1, pages_packed + 1
+        Lg, KV, P = g.n_layers, g.kv_heads, g.page_size
+        self.arenas = {
+            "kn": jnp.zeros((Lg, Nn, KV, P, g.head_dim), jnp.bfloat16),
+            "vn": jnp.zeros((Lg, Nn, KV, P, g.head_dim), jnp.bfloat16),
+            "kp": jnp.zeros((Lg, Np, KV, P, g.d_store),
+                            jnp.uint8 if g.aug_bits == 4 else jnp.int8),
+            "vp": jnp.zeros((Lg, Np, KV, P, g.d_store),
+                            jnp.uint8 if g.aug_bits == 4 else jnp.int8),
+            "ks": jnp.zeros((Lg, Np, KV, P), jnp.bfloat16),
+            "vs": jnp.zeros((Lg, Np, KV, P), jnp.bfloat16),
+        }
+
+        # host page tables (numpy; mirrored to device per dispatch)
+        self.page_table = np.zeros((B, maxP), np.int32)
+        self.page_mode = np.zeros((B, maxP), np.int32)   # 0 normal, 1 aug
+        self.allocated = np.zeros((B, maxP), bool)
+        self.last_write = np.full((B, maxP), -1, np.int64)
+        self.free_normal = list(range(Nn - 1, 0, -1))    # pop() -> low first
+        self.free_packed = list(range(Np - 1, 0, -1))
+        self.policies: dict[tuple[int, int], RefreshPolicy] = {}
+        self._tables_cache: Optional[dict] = None   # invalidated on any
+                                                    # page-table mutation
+        self.stats = {
+            "augment_events": 0, "promote_events": 0, "refreshes": 0,
+            "refresh_bytes": 0, "augment_bytes": 0,
+            "maintenance_dispatches": 0, "alloc_failures": 0,
+            "peak_live_bytes": 0,
+        }
+
+    # -- byte accounting ------------------------------------------------------
+
+    def _cost(self, mode: int) -> int:
+        return self.geom.page_bytes_normal if mode == 0 \
+            else self.geom.page_bytes_aug
+
+    def free_page_count(self, mode: int) -> int:
+        return len(self.free_normal if mode == 0 else self.free_packed)
+
+    def can_admit_tokens(self, n_tokens: int) -> bool:
+        """Admission check: could `n_tokens` more tokens be stored right
+        now, augmenting cold pages if the policy allows?"""
+        pages = -(-n_tokens // self.geom.page_size)
+        free_b = self.budget_bytes - self.live_bytes
+        if self.pool_mode == "normal-only":
+            return (pages <= self.free_page_count(0)
+                    and pages * self._cost(0) <= free_b)
+        if (self.pool_mode == "augment-on-pressure"
+                and pages <= self.free_page_count(0)
+                and pages * self._cost(0) <= free_b):
+            return True     # fits in the static plane, no pressure at all
+        if pages > self.free_page_count(1):
+            return False
+        need = pages * self._cost(1) - free_b
+        if need <= 0:
+            return True
+        per = self._cost(0) - self._cost(1)   # bytes one augmentation frees
+        n_aug = -(-need // per)
+        # each augmentation consumes one free packed slot ON TOP of the
+        # request's own pages — don't promise an admission alloc_page
+        # cannot deliver
+        return (self.pool_mode == "augment-on-pressure"
+                and n_aug <= self._augmentable_count()
+                and pages + n_aug <= self.free_page_count(1))
+
+    # -- allocation -----------------------------------------------------------
+
+    def alloc_page(self, row: int, lp: int, step: int) -> bool:
+        """Allocate the logical page (row, lp). Mode policy: normal-only /
+        always-augmented pin the plane; augment-on-pressure prefers Normal
+        and falls back to Augmented, augmenting cold pages when even the
+        packed plane doesn't fit the budget. False = pool exhausted."""
+        assert not self.allocated[row, lp], (row, lp)
+        order = {"normal-only": (0,), "always-augmented": (1,),
+                 "augment-on-pressure": (0, 1)}[self.pool_mode]
+        for mode in order:
+            if self._try_place(row, lp, mode, step):
+                return True
+        if self.pool_mode == "augment-on-pressure":
+            # pressure: demote cold Normal pages to the packed plane until
+            # the budget fits one more Augmented page
+            while (self.live_bytes + self._cost(1) > self.budget_bytes
+                   or self.free_page_count(1) == 0):
+                if not self._augment_coldest(step):
+                    self.stats["alloc_failures"] += 1
+                    return False
+            if self._try_place(row, lp, 1, step):
+                return True
+        self.stats["alloc_failures"] += 1
+        return False
+
+    def _try_place(self, row: int, lp: int, mode: int, step: int) -> bool:
+        cost = self._cost(mode)
+        free = self.free_normal if mode == 0 else self.free_packed
+        if not free or self.live_bytes + cost > self.budget_bytes:
+            return False
+        phys = free.pop()
+        self._tables_cache = None
+        self.page_table[row, lp] = phys
+        self.page_mode[row, lp] = mode
+        self.allocated[row, lp] = True
+        self.last_write[row, lp] = step
+        self.live_bytes += cost
+        self.stats["peak_live_bytes"] = max(self.stats["peak_live_bytes"],
+                                            self.live_bytes)
+        if mode == 1:
+            pol = RefreshPolicy(retention_steps=self.retention_steps)
+            pol.stamp(step)
+            self.policies[(row, lp)] = pol
+        return True
+
+    def free_row(self, row: int) -> None:
+        for lp in np.flatnonzero(self.allocated[row]):
+            self._release(row, int(lp))
+
+    def _release(self, row: int, lp: int) -> None:
+        mode = int(self.page_mode[row, lp])
+        phys = int(self.page_table[row, lp])
+        (self.free_normal if mode == 0 else self.free_packed).append(phys)
+        self._tables_cache = None
+        self.live_bytes -= self._cost(mode)
+        self.allocated[row, lp] = False
+        self.page_table[row, lp] = 0
+        self.page_mode[row, lp] = 0
+        self.last_write[row, lp] = -1
+        self.policies.pop((row, lp), None)
+
+    # -- mode switching (the paper's WL/SL reconfiguration) --------------------
+
+    def _augmentable_count(self) -> int:
+        return int((self.allocated & (self.page_mode == 0)).sum())
+
+    def _coldest_normal(self) -> Optional[tuple[int, int]]:
+        cand = self.allocated & (self.page_mode == 0)
+        if not cand.any():
+            return None
+        age = np.where(cand, self.last_write, np.iinfo(np.int64).max)
+        row, lp = np.unravel_index(int(age.argmin()), age.shape)
+        return int(row), int(lp)
+
+    def _augment_coldest(self, step: int) -> bool:
+        target = self._coldest_normal()
+        if target is None or not self.free_packed:
+            return False
+        self.augment_page(*target, step=step)
+        return True
+
+    def augment_page(self, row: int, lp: int, step: int) -> None:
+        """Normal -> Augmented in place: quantize-pack the page into the
+        dynamic plane, release the byte difference back to the budget.
+        The bf16 master is gone afterwards — the page is now dynamic data
+        under the retention clock."""
+        assert self.page_mode[row, lp] == 0 and self.allocated[row, lp]
+        src = int(self.page_table[row, lp])
+        dst = self.free_packed.pop()
+        self.arenas = _augment_page_op(self.arenas, src, dst,
+                                       aug_bits=self.geom.aug_bits)
+        self.stats["maintenance_dispatches"] += 1
+        self.free_normal.append(src)
+        self._tables_cache = None
+        self.page_table[row, lp] = dst
+        self.page_mode[row, lp] = 1
+        self.live_bytes -= self._cost(0) - self._cost(1)
+        pol = RefreshPolicy(retention_steps=self.retention_steps)
+        pol.stamp(step)
+        self.policies[(row, lp)] = pol
+        self.stats["augment_events"] += 1
+        self.stats["augment_bytes"] += self._cost(0) + self._cost(1)
+
+    def promote_page(self, row: int, lp: int, step: int) -> bool:
+        """Augmented -> Normal (refresh-promote): dequantize back into the
+        static plane when the budget has room again."""
+        assert self.page_mode[row, lp] == 1 and self.allocated[row, lp]
+        cost_up = self._cost(0) - self._cost(1)
+        if not self.free_normal or self.live_bytes + cost_up > self.budget_bytes:
+            return False
+        src = int(self.page_table[row, lp])
+        dst = self.free_normal.pop()
+        self.arenas = _promote_page_op(self.arenas, src, dst,
+                                       aug_bits=self.geom.aug_bits)
+        self.stats["maintenance_dispatches"] += 1
+        self.free_packed.append(src)
+        self._tables_cache = None
+        self.page_table[row, lp] = dst
+        self.page_mode[row, lp] = 0
+        self.live_bytes += cost_up
+        self.last_write[row, lp] = step
+        self.policies.pop((row, lp), None)
+        self.stats["promote_events"] += 1
+        return True
+
+    # -- retention / refresh ----------------------------------------------------
+
+    def note_writes(self, rows: np.ndarray, lps: np.ndarray,
+                    step: int) -> None:
+        """Stamp pages written by this dispatch (decode tail slots or
+        prefill chunks): resets both coldness and the retention clock."""
+        for row, lp in zip(np.asarray(rows).ravel(), np.asarray(lps).ravel()):
+            row, lp = int(row), int(lp)
+            if not self.allocated[row, lp]:
+                continue
+            self.last_write[row, lp] = step
+            pol = self.policies.get((row, lp))
+            if pol is not None:
+                pol.stamp(step)
+
+    def refresh_due(self, step: int) -> list[tuple[int, int]]:
+        return [key for key, pol in self.policies.items()
+                if pol.needs_refresh(step)]
+
+    def refresh_page(self, row: int, lp: int, step: int, *,
+                     promote_ok: bool = True) -> None:
+        """DRAM-style refresh of one expired Augmented page: promote back
+        to Normal when allowed and the budget has room, else re-write the
+        packed rows in place (restamp) and account the traffic."""
+        if promote_ok and self.pool_mode == "augment-on-pressure" \
+                and self.cfg.amc.refresh_promote \
+                and self.promote_page(row, lp, step):
+            self.stats["refreshes"] += 1
+            self.stats["refresh_bytes"] += self._cost(1) + self._cost(0)
+            return
+        pol = self.policies.get((row, lp))
+        if pol is None:                      # freed/promoted concurrently
+            return
+        pol.stamp(step)
+        self.stats["refreshes"] += 1
+        self.stats["refresh_bytes"] += 2 * self._cost(1)   # read + re-write
+
+    def max_augmented_age(self, step: int) -> int:
+        """Oldest unrefreshed augmented page, in steps (invariant probe:
+        the scheduler must keep this <= retention_steps)."""
+        return max((pol.age(step) for pol in self.policies.values()),
+                   default=0)
+
+    # -- device views -----------------------------------------------------------
+
+    def device_tables(self) -> dict:
+        """Scalar-prefetch operands for the paged kernel + write tables.
+        normal_idx / packed_idx carry HOLD-PREVIOUS semantics per row so
+        the mode-mismatched arena never issues a DMA."""
+        if self._tables_cache is not None:
+            return self._tables_cache
+        pt, md = self.page_table, self.page_mode
+        B, maxP = pt.shape
+        nidx = np.zeros((B, maxP), np.int32)
+        pidx = np.zeros((B, maxP), np.int32)
+        lastn = np.zeros(B, np.int32)
+        lastp = np.zeros(B, np.int32)
+        for s in range(maxP):
+            live = self.allocated[:, s]
+            lastn = np.where(live & (md[:, s] == 0), pt[:, s], lastn)
+            lastp = np.where(live & (md[:, s] == 1), pt[:, s], lastp)
+            nidx[:, s], pidx[:, s] = lastn, lastp
+        self._tables_cache = {"page_table": jnp.asarray(pt),
+                              "page_modes": jnp.asarray(md),
+                              "normal_idx": jnp.asarray(nidx),
+                              "packed_idx": jnp.asarray(pidx)}
+        return self._tables_cache
+
+    def arena_bytes(self) -> int:
+        return sum(x.nbytes for x in jax.tree.leaves(self.arenas))
+
+    def describe(self) -> dict:
+        g = self.geom
+        live_n = int((self.allocated & (self.page_mode == 0)).sum())
+        live_a = int((self.allocated & (self.page_mode == 1)).sum())
+        return {
+            "pool_mode": self.pool_mode,
+            "page_size": g.page_size,
+            "aug_bits": g.aug_bits,
+            "pages_live_normal": live_n,
+            "pages_live_augmented": live_a,
+            "page_bytes_normal": g.page_bytes_normal,
+            "page_bytes_aug": g.page_bytes_aug,
+            "page_capacity_factor": g.capacity_factor,
+            "budget_bytes": self.budget_bytes,
+            "live_bytes": self.live_bytes,
+            "arena_bytes": self.arena_bytes(),
+            "retention_steps": self.retention_steps,
+            **self.stats,
+        }
+
+
+# ---------------------------------------------------------------------------
+# jitted maintenance ops (mode switches move one page between planes)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("aug_bits",), donate_argnums=(0,))
+def _augment_page_op(arenas: dict, src: int, dst: int, *, aug_bits: int):
+    """Quantize-pack Normal page `src` into packed page `dst` (all layers,
+    K and V) — the existing quantize_pack_kv path is the write driver."""
+    out = dict(arenas)
+    for plane, packed, scale in (("kn", "kp", "ks"), ("vn", "vp", "vs")):
+        x = arenas[plane][:, src]                       # (L, KV, page, hd)
+        if aug_bits == 4:
+            p, s = K.quantize_pack_kv(x)
+        else:
+            p, s = L.pack_kv_int8(x)
+        out[packed] = out[packed].at[:, dst].set(p)
+        out[scale] = out[scale].at[:, dst].set(s[..., 0].astype(jnp.bfloat16))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("aug_bits",), donate_argnums=(0,))
+def _promote_page_op(arenas: dict, src: int, dst: int, *, aug_bits: int):
+    """Dequantize packed page `src` back into Normal page `dst`."""
+    unpack = L.unpack_kv_int4 if aug_bits == 4 else L.unpack_kv_int8
+    out = dict(arenas)
+    for plane, packed, scale in (("kn", "kp", "ks"), ("vn", "vp", "vs")):
+        d = unpack(arenas[packed][:, src], arenas[scale][:, src][..., None])
+        out[plane] = out[plane].at[:, dst].set(d.astype(jnp.bfloat16))
+    return out

@@ -1,23 +1,30 @@
-"""Batched serving engine with AMC-augmented KV storage.
+"""Serving engine: continuous batching over the paged augmented KV pool.
 
-Prefill fills the cache (packed int4/int8 when cfg.amc.kv_mode says so —
-the dynamic plane), decode steps run against it. Implements continuous
-batching at the slot level: finished sequences release their cache rows to
-new requests (positions are per-row, the validity mask handles ragged
-lengths). The FILO discipline of the paper maps cleanly: per slot, static
-context (weights / cross-KV) is written once, the per-step KV stream is
-dynamic and drained (attended) before the slot is re-written.
+Transformer families (dense/MoE) serve from `cache_pool.PagedKVPool` — a
+two-plane paged cache whose pages mode-switch between Normal (bf16) and
+Augmented (packed int4/int8, capacity_factor > 1) — driven by
+`scheduler.Scheduler`: a FIFO request queue with admission control,
+slot-free sequence lifecycle (join/leave the running batch between decode
+steps), preemption-by-augmentation, and a retention-driven refresh pass
+interleaved with decode (`core/retention.py`'s RefreshPolicy clocks every
+augmented page). Families whose decode state is not a transformer KV
+cache (ssm/hybrid/audio/vlm) keep the legacy contiguous slot cache.
 
-Hot-path shape: a P-token prompt costs ceil(P / prefill_chunk) jitted
-dispatches (`prefill_chunk_step` scatters each chunk's packed KV straight
-into the slot's cache rows), not P full-batch decode steps; decode-side
-host bookkeeping (positions / remaining / active) is vectorized numpy, so
-`step_all` does no per-slot Python in the steady state beyond appending
-each generated token to its request's output list.
+Requests are never dropped: `add_request` enqueues when the pool or the
+running batch is full and returns the row index on immediate admission or
+None when queued; `generate` drains the queue to completion. Empty
+prompts require an explicit `bos_id` — there is no silent token-0 feed.
+
+Hot-path shape is unchanged from the contiguous engine: a P-token prompt
+costs ceil(P / prefill_chunk) jitted dispatches, one batched decode
+dispatch serves every running row, and host bookkeeping is vectorized
+numpy. Pool maintenance (augment / promote / refresh) dispatches are
+accounted separately (`stats()["pool"]["maintenance_dispatches"]`).
 """
 from __future__ import annotations
 
 import dataclasses
+from collections import deque
 from typing import Optional
 
 import jax
@@ -31,6 +38,8 @@ from repro.launch.mesh import mesh_context
 from repro.models import augment
 from repro.models import model as M
 from repro.models.params import init_params, is_pspec
+from repro.serve.cache_pool import PagedKVPool
+from repro.serve.scheduler import QueueEntry, Scheduler
 
 
 @dataclasses.dataclass(eq=False)
@@ -51,17 +60,28 @@ class ServeEngine:
     def __init__(self, cfg: ModelConfig, mesh, *, max_batch: int = 8,
                  max_seq: int = 256, prefill_chunk: int = 32, params=None,
                  weight_mode: Optional[str] = None,
-                 kv_mode: Optional[str] = None, seed: int = 0):
+                 kv_mode: Optional[str] = None, seed: int = 0,
+                 bos_id: Optional[int] = None,
+                 pool_mode: Optional[str] = None,
+                 pool_budget_bytes: Optional[int] = None,
+                 pool_pages_normal: Optional[int] = None,
+                 pool_pages_packed: Optional[int] = None,
+                 retention_steps: Optional[int] = None,
+                 paged: Optional[bool] = None):
         # engine-level AMC knobs override the config (e.g. serve a dense
         # checkpoint with ternary weights without touching the arch file)
-        if weight_mode is not None or kv_mode is not None:
+        if weight_mode is not None or kv_mode is not None \
+                or pool_mode is not None:
             cfg = dataclasses.replace(cfg, amc=dataclasses.replace(
                 cfg.amc,
                 weight_mode=weight_mode or cfg.amc.weight_mode,
-                kv_mode=kv_mode or cfg.amc.kv_mode))
+                kv_mode=kv_mode or cfg.amc.kv_mode,
+                pool_mode=pool_mode or cfg.amc.pool_mode))
         self.cfg, self.mesh = cfg, mesh
         self.max_batch, self.max_seq = max_batch, max_seq
         self.prefill_chunk = min(prefill_chunk, max_seq)
+        self.bos_id = bos_id
+        self.paged = M.supports_paging(cfg) if paged is None else paged
         shape = ShapeConfig("serve", max_seq, max_batch, "decode")
         self.rules = Rules.make(mesh, cfg, shape)
         dense_cfg = dataclasses.replace(
@@ -73,65 +93,202 @@ class ServeEngine:
             # pack the matmul weights into augmented storage (no-op for
             # weight_mode="normal", already-packed trees, other families)
             self.params = augment.augment_params(cfg, params)
-            ca = M.abstract_cache(cfg, shape)
-            self.cache = jax.tree.map(
-                lambda l: jnp.zeros(l.shape, l.jdtype), ca,
-                is_leaf=lambda x: hasattr(x, "jdtype"))
+            if self.paged:
+                self.pool = PagedKVPool(
+                    cfg, max_batch=max_batch, max_seq=max_seq,
+                    pages_normal=pool_pages_normal,
+                    pages_packed=pool_pages_packed,
+                    budget_bytes=pool_budget_bytes,
+                    retention_steps=retention_steps)
+                self.scheduler = Scheduler(self.pool, max_batch=max_batch)
+            else:
+                self.pool, self.scheduler = None, None
+                self._legacy_queue: deque[QueueEntry] = deque()
+                ca = M.abstract_cache(cfg, shape)
+                self._cache = jax.tree.map(
+                    lambda l: jnp.zeros(l.shape, l.jdtype), ca,
+                    is_leaf=lambda x: hasattr(x, "jdtype"))
         self._logical_weight_bytes = _abstract_bytes(
             M.abstract_params(dense_cfg))
         self._logical_cache_bytes = _abstract_bytes(M.abstract_cache(
             dataclasses.replace(
                 cfg, amc=dataclasses.replace(cfg.amc, kv_mode="normal")),
             shape))
-        self._decode = jax.jit(
-            lambda p, c, b: M.decode_step(cfg, p, c, b, rules=self.rules),
-            donate_argnums=(1,))
-        self._prefill = None
-        if M.supports_prefill(cfg):
-            self._prefill = jax.jit(
-                lambda p, c, b: M.prefill_step(cfg, p, c, b,
-                                               rules=self.rules),
+        if self.paged:
+            self._decode = jax.jit(
+                lambda p, c, b: M.paged_decode_step(cfg, p, c, b,
+                                                    rules=self.rules),
                 donate_argnums=(1,))
+            self._prefill = jax.jit(
+                lambda p, c, b: M.paged_prefill_step(cfg, p, c, b,
+                                                     rules=self.rules),
+                donate_argnums=(1,))
+        else:
+            self._decode = jax.jit(
+                lambda p, c, b: M.decode_step(cfg, p, c, b,
+                                              rules=self.rules),
+                donate_argnums=(1,))
+            self._prefill = None
+            if M.supports_prefill(cfg):
+                self._prefill = jax.jit(
+                    lambda p, c, b: M.prefill_step(cfg, p, c, b,
+                                                   rules=self.rules),
+                    donate_argnums=(1,))
         # slot bookkeeping (host side, int32 once — dispatched as-is)
         self.positions = np.zeros(max_batch, np.int32)
         self.remaining = np.zeros(max_batch, np.int32)
         self.active = np.zeros(max_batch, bool)
         self.last_token = np.zeros(max_batch, np.int32)
         self.slot_req: list[Optional[Request]] = [None] * max_batch
+        self._slot_entry: list[Optional[QueueEntry]] = [None] * max_batch
         self.outputs: dict[int, list[int]] = {}
         self.dispatch_count = 0   # jitted device dispatches (prefill+decode)
+        self.step_idx = 0         # decode-step clock (retention time base)
 
-    # -- continuous batching --------------------------------------------------
+    # -- cache view -----------------------------------------------------------
 
-    def add_request(self, req: Request):
-        """Claim a free slot; prefill it. Returns the slot or None."""
-        if np.asarray(req.prompt).size > self.max_seq:
+    @property
+    def cache(self):
+        """The decode-state tree: paged arenas or the contiguous cache."""
+        return self.pool.arenas if self.paged else self._cache
+
+    @property
+    def _queue(self) -> deque:
+        return self.scheduler.queue if self.paged else self._legacy_queue
+
+    # -- continuous batching ---------------------------------------------------
+
+    def add_request(self, req: Request) -> Optional[int]:
+        """Enqueue a request and admit as many queued requests as fit.
+
+        Returns the running-batch row if THIS request was admitted
+        immediately, else None — meaning queued, never dropped: the
+        scheduler admits it between later decode steps (`generate` and
+        `step_all` both drain the queue)."""
+        prompt = np.asarray(req.prompt, np.int32).reshape(-1)
+        if prompt.size == 0:
+            if self.bos_id is None:
+                raise ValueError(
+                    "empty prompt with no bos_id: pass bos_id=<token> to "
+                    "ServeEngine to define what an empty prompt decodes "
+                    "from (there is no implicit token 0)")
+            prompt = np.array([self.bos_id], np.int32)
+        if prompt.size > self.max_seq:
             # past max_seq every cache write would clamp to the last slot,
             # silently corrupting the row — reject instead
             raise ValueError(
-                f"prompt of {np.asarray(req.prompt).size} tokens exceeds "
+                f"prompt of {prompt.size} tokens exceeds "
                 f"max_seq={self.max_seq} cache slots")
-        free = np.flatnonzero(~self.active)
-        if free.size == 0:
-            return None
-        slot = int(free[0])
-        self.active[slot] = True
-        self.slot_req[slot] = req
-        self.positions[slot] = 0
-        self.remaining[slot] = req.max_new_tokens
-        self.outputs[req.id] = []
-        prompt = np.asarray(req.prompt, np.int32)
+        entry = QueueEntry(req=req, prompt=prompt,
+                           remaining=req.max_new_tokens,
+                           enqueue_step=self.step_idx)
+        if self.paged:
+            self.scheduler.enqueue(entry)
+        else:
+            self._legacy_queue.append(entry)
+        admitted = self._admit()
+        return admitted.get(req.id)
+
+    def _admit(self) -> dict[int, int]:
+        """Admission pass: move queued requests into free rows while both
+        a row and (paged) pool capacity exist. FIFO, head-of-line."""
+        admitted: dict[int, int] = {}
+        while True:
+            free = np.flatnonzero(~self.active)
+            if free.size == 0:
+                break
+            row = int(free[0])
+            if self.paged:
+                entry = self.scheduler.pop_admittable(self.step_idx)
+                if entry is None:
+                    break
+                if not self.scheduler.admit(row, len(entry.prompt),
+                                            self.step_idx):
+                    # can_admit_tokens raced a concurrent change; requeue
+                    self.scheduler.enqueue(entry, front=True)
+                    break
+            else:
+                if not self._legacy_queue:
+                    break
+                entry = self._legacy_queue.popleft()
+            self._start_row(row, entry)
+            admitted[entry.req.id] = row
+        return admitted
+
+    def _start_row(self, row: int, entry: QueueEntry) -> None:
+        self.active[row] = True
+        self.slot_req[row] = entry.req
+        self._slot_entry[row] = entry
+        self.positions[row] = 0
+        self.remaining[row] = entry.remaining
+        self.outputs.setdefault(entry.req.id, [])
+        prompt = entry.prompt
         # feed prompt[:-1] into the cache (the last prompt token is fed by
         # the first batched decode step, whose argmax is the first
         # generated token)
         if prompt.size > 1:
-            self.prefill(slot, prompt[:-1])
-        self.last_token[slot] = int(prompt[-1]) if prompt.size else 0
-        return slot
+            self.prefill(row, prompt[:-1])
+        self.last_token[row] = int(prompt[-1])
+
+    def _preempt(self, victim: int) -> None:
+        """Preemption: release the victim's pages and requeue it with
+        prompt := prompt + generated-so-far (greedy recompute on resume —
+        work is lost, tokens are not)."""
+        entry = self._slot_entry[victim]
+        gen = np.asarray(self.outputs[entry.req.id], np.int32)
+        # rebuild from the ORIGINAL prompt + every generated token so far:
+        # entry.prompt of an already-resumed entry contains earlier stints'
+        # tokens, and outputs holds them too — concatenating those would
+        # duplicate them on a second preemption
+        resumed = QueueEntry(
+            req=entry.req,
+            prompt=np.concatenate([entry.base_prompt, gen]),
+            base_prompt=entry.base_prompt,
+            remaining=int(self.remaining[victim]),
+            resumed=True, enqueue_step=self.step_idx)
+        self.scheduler.release_row(victim)
+        self.active[victim] = False
+        self.slot_req[victim] = None
+        self._slot_entry[victim] = None
+        self.scheduler.enqueue(resumed, front=True)
+        self.scheduler.stats["preemptions"] += 1
+
+    # -- prefill ---------------------------------------------------------------
+
+    def _paged_batch(self, extra: dict) -> dict:
+        return {**self.pool.device_tables(), **extra}
+
+    def _dispatch(self, fn, batch: dict):
+        """One jitted dispatch against the backend's state tree (the paged
+        arenas or the contiguous cache), with the paged device tables
+        merged in. The ONE place the two backends' dispatch plumbing
+        lives."""
+        if self.paged:
+            batch = self._paged_batch(batch)
+        with mesh_context(self.mesh):
+            if self.paged:
+                logits, self.pool.arenas = fn(self.params, self.pool.arenas,
+                                              batch)
+            else:
+                logits, self._cache = fn(self.params, self._cache, batch)
+        self.dispatch_count += 1
+        return logits
+
+    def _ensure_prefill_pages(self, slot: int, first: int, last: int) -> None:
+        """Chunked prefill writes positions [first, last] — every page in
+        that span must exist (admission allocates them; direct `prefill`
+        callers would otherwise silently scatter into the dump page)."""
+        page = self.cfg.amc.page_size
+        for lp in range(first // page, last // page + 1):
+            if not self.scheduler.ensure_position(slot, lp * page,
+                                                  self.step_idx):
+                raise RuntimeError(
+                    f"pool exhausted allocating prefill page {lp} of row "
+                    f"{slot}")
 
     def prefill(self, slot: int, tokens: np.ndarray,
                 return_next: bool = False) -> Optional[int]:
-        """Feed `tokens` into the slot's cache rows.
+        """Feed `tokens` into the slot's cache rows/pages.
 
         One jitted dispatch per `prefill_chunk` tokens — ceil(P / chunk)
         total, vs P decode steps for the per-token warmup loop. With
@@ -170,14 +327,18 @@ class ServeEngine:
             tok[slot, :shift + n] = tokens[start - shift:start + n]
             positions = self.positions.copy()
             positions[slot] = p - shift
-            batch = {"tokens": jnp.asarray(tok),
-                     "positions": jnp.asarray(positions),
-                     "write_mask": jnp.asarray(write_mask)}
-            with mesh_context(self.mesh):
-                logits, self.cache = self._prefill(self.params, self.cache,
-                                                   batch)
-            self.dispatch_count += 1
+            if self.paged:
+                self._ensure_prefill_pages(slot, p - shift, p + n - 1)
+            logits = self._dispatch(self._prefill,
+                                    {"tokens": jnp.asarray(tok),
+                                     "positions": jnp.asarray(positions),
+                                     "write_mask": jnp.asarray(write_mask)})
             self.positions[slot] += n
+            if self.paged:
+                page = self.cfg.amc.page_size
+                lps = np.unique(np.arange(p - shift, p + n) // page)
+                self.pool.note_writes(np.full(lps.size, slot), lps,
+                                      self.step_idx)
             last_logits, last_n = logits, shift + n
         if not return_next:
             return None
@@ -190,37 +351,81 @@ class ServeEngine:
         return last
 
     def _step_slot(self, slot: int, token: int) -> int:
+        if self.paged:
+            # defensive: direct prefill() callers may outrun the pages
+            # allocated at admission
+            if not self.scheduler.ensure_position(
+                    slot, int(self.positions[slot]), self.step_idx):
+                raise RuntimeError("pool exhausted during stepwise prefill")
         tokens = np.zeros((self.max_batch, 1), np.int32)
         tokens[slot, 0] = token
         batch = {"tokens": jnp.asarray(tokens),
                  "positions": jnp.asarray(self.positions)}
-        with mesh_context(self.mesh):
-            logits, self.cache = self._decode(self.params, self.cache, batch)
-        self.dispatch_count += 1
+        if self.paged:
+            mask = np.zeros(self.max_batch, bool)
+            mask[slot] = True
+            batch["write_mask"] = jnp.asarray(mask)
+        logits = self._dispatch(self._decode, batch)
+        if self.paged:
+            page = self.cfg.amc.page_size
+            self.pool.note_writes(np.array([slot]),
+                                  np.array([self.positions[slot] // page]),
+                                  self.step_idx)
         self.positions[slot] += 1
         return int(jnp.argmax(logits[slot, -1]))
 
+    # -- decode ----------------------------------------------------------------
+
+    def _ensure_decode_capacity(self) -> None:
+        """Every active row must own the page its next token lands in;
+        under pressure the pool augments cold pages, and when even that
+        fails the youngest-admitted row is preempted (requeued, not
+        dropped)."""
+        for row in np.flatnonzero(self.active):
+            if not self.active[row]:
+                continue    # preempted by an earlier row's allocation
+            pos = int(self.positions[row])
+            while not self.scheduler.ensure_position(row, pos,
+                                                     self.step_idx):
+                victim = self.scheduler.preemption_victim(row, self.active)
+                if victim is None:
+                    raise RuntimeError(
+                        "paged pool cannot hold one growing sequence — "
+                        "budget_bytes too small for max_seq")
+                self._preempt(victim)
+
     def step_all(self, last_tokens: Optional[dict[int, int]] = None) -> dict:
-        """One batched decode step for every active slot.
+        """One scheduler pass + one batched decode step for every active
+        row: refresh expired augmented pages, admit queued requests into
+        free rows, grow/augment/preempt for capacity, then dispatch.
 
         `last_tokens` optionally overrides the tracked per-slot feed
         token (kept for API compatibility; `generate` no longer needs
-        it). Returns {slot: next_token} for slots still running.
+        it). Returns {row: next_token} for rows still running.
         """
         if last_tokens:
             for s, t in last_tokens.items():
                 self.last_token[s] = t
+        self._admit()
+        if self.paged:
+            self.scheduler.refresh_pass(self.step_idx)
+            self._ensure_decode_capacity()
         tokens = np.where(self.active, self.last_token, 0
                           ).astype(np.int32)[:, None]
         batch = {"tokens": jnp.asarray(tokens),
                  "positions": jnp.asarray(self.positions)}
-        with mesh_context(self.mesh):
-            logits, self.cache = self._decode(self.params, self.cache, batch)
-        self.dispatch_count += 1
+        if self.paged:
+            batch["write_mask"] = jnp.asarray(self.active)
+        logits = self._dispatch(self._decode, batch)
         arg = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
         # vectorized slot bookkeeping: no per-slot Python for the numeric
         # state, only the per-request output append below
         act = self.active.copy()
+        if self.paged and act.any():
+            rows = np.flatnonzero(act)
+            self.pool.note_writes(
+                rows, self.positions[rows] // self.cfg.amc.page_size,
+                self.step_idx)
         self.positions[act] += 1
         self.remaining[act] -= 1
         self.last_token = np.where(act, arg, self.last_token)
@@ -230,26 +435,39 @@ class ServeEngine:
         for s in np.flatnonzero(act):
             self.outputs[self.slot_req[s].id].append(int(arg[s]))
         for s in np.flatnonzero(done):
-            self.slot_req[s] = None          # release slot (cont. batching)
+            self.slot_req[s] = None          # release row (cont. batching)
+            self._slot_entry[s] = None
+            if self.paged:
+                self.scheduler.release_row(int(s))
+        self.step_idx += 1
         return {int(s): int(arg[s]) for s in np.flatnonzero(act & ~done)}
+
+    # -- stats -----------------------------------------------------------------
 
     def stats(self) -> dict:
         """Augmented-storage accounting (the paper's capacity headline).
 
         Logical bytes = what the dense bf16 representation would occupy;
-        physical bytes = what the augmented planes actually occupy in HBM.
-        `capacity_factor` is logical/physical — the augmentation ratio —
-        alongside the per-plane bits/value of `AugmentedStore`'s ledger.
+        physical bytes = what the augmented planes actually occupy. For
+        the paged pool, cache bytes are the USABLE page capacity (the two
+        one-page write-dump lines are excluded; `pool.arena_bytes`
+        reports the raw allocation). Pool/scheduler/refresh counters ride
+        along under "pool" and "scheduler".
         """
         a = self.cfg.amc
         weight_phys = sum(x.nbytes for x in jax.tree.leaves(self.params))
-        cache_phys = sum(x.nbytes for x in jax.tree.leaves(self.cache))
+        if self.paged:
+            g = self.pool.geom
+            cache_phys = (self.pool.pages_normal * g.page_bytes_normal
+                          + self.pool.pages_packed * g.page_bytes_aug)
+        else:
+            cache_phys = sum(x.nbytes for x in jax.tree.leaves(self._cache))
         # families augment_params doesn't cover keep dense weights: report
         # the physical reality, not the requested mode
         weight_mode = (a.weight_mode if augment.is_augmented(self.params)
                        else "normal")
         wmode = amc.WEIGHT_MODES[weight_mode]
-        return {
+        out = {
             "kv_mode": a.kv_mode,
             "weight_mode": weight_mode,
             "weight_bits_per_value": amc.mode_bits_per_value(
@@ -270,12 +488,28 @@ class ServeEngine:
                                / (weight_phys + cache_phys),
             "dispatches": self.dispatch_count,
         }
+        if self.paged:
+            pool = self.pool.describe()
+            out["pool"] = pool
+            out["scheduler"] = self.scheduler.describe()
+            for k in ("refreshes", "refresh_bytes", "augment_events",
+                      "promote_events", "maintenance_dispatches"):
+                out[k] = pool[k]
+            out["preemptions"] = self.scheduler.stats["preemptions"]
+        return out
 
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
-        """Run all requests to completion with slot-level batching."""
-        pending = list(requests)
-        while pending or self.active.any():
-            while pending and self.add_request(pending[0]) is not None:
-                pending.pop(0)
+        """Run all requests to completion: enqueue everything, then step
+        until the queue AND the running batch drain. Zero drops — the
+        scheduler admits from the queue between decode steps."""
+        for req in requests:
+            self.add_request(req)
+        while self.active.any() or self._queue:
+            if not self.active.any():
+                self._admit()
+                if not self.active.any():
+                    raise RuntimeError(
+                        "queued requests but nothing admittable — pool "
+                        "misconfigured (budget below one sequence?)")
             self.step_all()
         return self.outputs

@@ -1,0 +1,154 @@
+"""Continuous-batching scheduler over the paged augmented KV pool.
+
+Requests enter a FIFO queue and are admitted into the running batch
+between decode steps (slot-free lifecycle: a sequence joins whenever a
+row AND enough pool capacity exist, and leaves the moment it finishes —
+`ServeEngine.step_all` drives one scheduler pass per decode dispatch).
+
+Admission control asks the pool whether the request's prompt could be
+stored *right now*, counting the headroom that augmenting cold pages
+would release (`PagedKVPool.can_admit_tokens`). Under pressure the pool
+augments cold Normal pages in place — the paper's on-demand capacity —
+so load beyond the Normal-mode capacity queues briefly instead of being
+rejected; nothing is ever dropped.
+
+Preemption-by-augmentation: when a RUNNING sequence grows into a new
+page and even augmentation cannot free room, the engine preempts the
+youngest-admitted victim — its pages return to the pool and its request
+re-enters the queue *front* with prompt := prompt + generated-so-far
+(deterministic greedy recompute on resume), so preemption costs work,
+never tokens.
+
+The refresh scheduler runs first in every pass: augmented pages whose
+`RefreshPolicy` expired (age >= retention_steps decode steps) are
+re-materialized in place or promoted back to Normal, with the traffic
+accounted in `stats()` — interleaved with decode exactly like DRAM
+refresh cycles steal array bandwidth.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Optional
+
+import numpy as np
+
+from repro.serve.cache_pool import PagedKVPool
+
+
+@dataclasses.dataclass
+class QueueEntry:
+    """A queued (or re-queued) generation request."""
+    req: object                  # serve.Request (id, max_new_tokens)
+    prompt: np.ndarray           # effective prompt; on resume this is the
+                                 # original prompt + tokens generated so far
+    remaining: int               # generation budget left
+    base_prompt: np.ndarray = None   # ORIGINAL prompt — the resume prompt
+                                     # is always rebuilt from this + the
+                                     # full output list, so repeated
+                                     # preemptions never duplicate tokens
+    resumed: bool = False
+    enqueue_step: int = 0
+
+    def __post_init__(self):
+        if self.base_prompt is None:
+            self.base_prompt = self.prompt
+
+
+class Scheduler:
+    def __init__(self, pool: PagedKVPool, *, max_batch: int):
+        self.pool = pool
+        self.max_batch = max_batch
+        self.queue: deque[QueueEntry] = deque()
+        self._admit_ticket = 0
+        # per-row admission ticket: the LIFO victim order for preemption
+        self.row_ticket = np.full(max_batch, -1, np.int64)
+        self.stats = {
+            "enqueued": 0, "requeues": 0, "admitted": 0, "preemptions": 0,
+            "refresh_passes": 0, "peak_queue_depth": 0,
+            "peak_concurrency": 0, "queue_wait_steps": 0,
+        }
+
+    # -- queue ---------------------------------------------------------------
+
+    def enqueue(self, entry: QueueEntry, *, front: bool = False) -> None:
+        """`front` requeues (preemption resume / admission race) — counted
+        separately so `enqueued` stays the offered-request count."""
+        (self.queue.appendleft if front else self.queue.append)(entry)
+        self.stats["requeues" if front else "enqueued"] += 1
+        self.stats["peak_queue_depth"] = max(self.stats["peak_queue_depth"],
+                                             len(self.queue))
+
+    def pop_admittable(self, step: int) -> Optional[QueueEntry]:
+        """FIFO head if the pool could hold its prompt right now (counting
+        augmentation headroom); head-of-line order is preserved — a big
+        request is never starved by smaller ones jumping the queue."""
+        if not self.queue:
+            return None
+        entry = self.queue[0]
+        if not self.pool.can_admit_tokens(max(len(entry.prompt), 1)):
+            return None
+        self.queue.popleft()
+        self.stats["queue_wait_steps"] += step - entry.enqueue_step
+        return entry
+
+    # -- page lifecycle -------------------------------------------------------
+
+    def admit(self, row: int, n_tokens: int, step: int) -> bool:
+        """Allocate the prompt's pages for a fresh row; all-or-nothing."""
+        pages = -(-max(n_tokens, 1) // self.pool.geom.page_size)
+        done = []
+        for lp in range(pages):
+            if not self.pool.alloc_page(row, lp, step):
+                for d in done:
+                    self.pool._release(row, d)
+                return False
+            done.append(lp)
+        self._admit_ticket += 1
+        self.row_ticket[row] = self._admit_ticket
+        self.stats["admitted"] += 1
+        running = int((self.row_ticket >= 0).sum())
+        self.stats["peak_concurrency"] = max(self.stats["peak_concurrency"],
+                                             running)
+        return True
+
+    def ensure_position(self, row: int, pos: int, step: int) -> bool:
+        """Guarantee the page holding `pos` exists before a decode writes
+        it (sequences grow one token per step; augmentation pressure is
+        applied inside the pool's allocator)."""
+        lp = pos // self.pool.geom.page_size
+        assert lp < self.pool.max_pages, (
+            f"position {pos} past the page table ({self.pool.max_pages} "
+            f"pages): the engine's max_seq done-condition should retire "
+            f"rows before this")
+        if self.pool.allocated[row, lp]:
+            return True
+        return self.pool.alloc_page(row, lp, step)
+
+    def release_row(self, row: int) -> None:
+        self.pool.free_row(row)
+        self.row_ticket[row] = -1
+
+    def preemption_victim(self, protect: int,
+                          active: np.ndarray) -> Optional[int]:
+        """Youngest-admitted active row other than `protect` (LIFO: the
+        sequence with the least sunk prefill work pays for the preemption)."""
+        tickets = np.where(active, self.row_ticket, -1)
+        tickets[protect] = -1
+        victim = int(tickets.argmax())
+        return victim if tickets[victim] >= 0 else None
+
+    # -- refresh --------------------------------------------------------------
+
+    def refresh_pass(self, step: int) -> int:
+        """Drain every expired augmented page (DRAM-style refresh cycle,
+        interleaved with decode). Returns pages refreshed."""
+        due = self.pool.refresh_due(step)
+        for row, lp in due:
+            self.pool.refresh_page(row, lp, step)
+        if due:
+            self.stats["refresh_passes"] += 1
+        return len(due)
+
+    def describe(self) -> dict:
+        return {"queue_depth": len(self.queue), **self.stats}

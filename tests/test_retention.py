@@ -1,0 +1,82 @@
+"""core/retention.py: the leakage model must reproduce the paper's
+calibration tables (I-II) exactly, and the step-based RefreshPolicy
+derived from it must be monotone in temperature (colder -> longer
+retention -> more decode steps between refreshes)."""
+import jax.numpy as jnp
+import pytest
+
+from repro.core.retention import (LeakageModel, RefreshPolicy,
+                                  V_SENSE_FRACTION, quant_error_halflife)
+
+
+# ---------------------------------------------------------------------------
+# paper calibration points (Tables I-II)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell,temp_c,want_us", [
+    ("8T", 85, 25.0), ("8T", 25, 250.0),
+    ("7T", 85, 4.0),
+])
+def test_leakage_reproduces_paper_points(cell, temp_c, want_us):
+    assert LeakageModel(cell=cell).retention_us(temp_c) == pytest.approx(
+        want_us, rel=1e-9)
+
+
+def test_leakage_7t_25c_at_least_50us():
+    """Table II quotes the 7T cell's 25C retention as '> 50us'."""
+    assert LeakageModel(cell="7T").retention_us(25) >= 50.0
+
+
+@pytest.mark.parametrize("cell", ["8T", "7T"])
+def test_retention_monotone_decreasing_in_temperature(cell):
+    m = LeakageModel(cell=cell)
+    temps = [0, 25, 45, 65, 85, 105]
+    rets = [m.retention_us(t) for t in temps]
+    assert all(a > b for a, b in zip(rets, rets[1:])), rets
+
+
+def test_readable_flips_exactly_at_retention():
+    """The sense margin crosses V_SENSE_FRACTION at the retention time."""
+    m = LeakageModel(cell="8T")
+    lvl = jnp.ones(())
+    ret = m.retention_us(85)
+    assert bool(m.readable(lvl, 0.5 * ret, 85))
+    assert not bool(m.readable(lvl, 1.5 * ret, 85))
+    # decay at exactly retention equals the sense threshold
+    assert float(m.decay(lvl, ret, 85)) == pytest.approx(V_SENSE_FRACTION,
+                                                         rel=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# RefreshPolicy wiring (the serving scheduler's clock)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("cell", ["8T", "7T"])
+def test_refresh_policy_steps_monotone_in_temperature(cell):
+    """Colder silicon buys strictly more decode steps per refresh window
+    (the cryo-friendly scaling the paper calls out), never below 1."""
+    step_us = 1.0
+    temps = [0, 25, 45, 65, 85, 105]
+    steps = [RefreshPolicy.from_leakage(cell, t, step_us).retention_steps
+             for t in temps]
+    assert all(a >= b for a, b in zip(steps, steps[1:])), steps
+    assert steps[0] > steps[-1], steps
+    assert all(s >= 1 for s in steps)
+    # calibration: 8T @ 85C with 1us steps = floor(25us / 1us)
+    if cell == "8T":
+        assert RefreshPolicy.from_leakage("8T", 85, 1.0).retention_steps == 25
+
+
+def test_refresh_policy_validity_window():
+    pol = RefreshPolicy(retention_steps=3)
+    assert not pol.valid(0)            # never written
+    pol.stamp(10)
+    assert pol.valid(12) and not pol.needs_refresh(12)
+    assert not pol.valid(13) and pol.needs_refresh(13)
+    assert pol.expires_at() == 13
+    pol.stamp(13)                      # refresh restamps
+    assert pol.valid(15)
+
+
+def test_quant_error_halflife_tracks_bits():
+    assert quant_error_halflife(4) > quant_error_halflife(8)

@@ -1,0 +1,215 @@
+"""Continuous-batching scheduler over the paged pool: zero-drop
+admission under overload, augment-on-pressure capacity vs normal-only at
+equal bytes, the refresh invariant (no augmented page outlives
+retention_steps), preemption-by-augmentation, BOS handling, and the
+queue-backed add_request regression."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import AMCConfig
+from repro.launch.mesh import make_local_mesh
+from repro.serve import Request, ServeEngine
+
+
+def _cfg(**amc):
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    return dataclasses.replace(cfg, amc=AMCConfig(**amc))
+
+
+def _reqs(rng, cfg, n, plen=6, max_new=4):
+    return [Request(prompt=rng.integers(0, cfg.vocab, size=(plen,))
+                    .astype(np.int32), max_new_tokens=max_new, id=i)
+            for i in range(n)]
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 4x offered load, zero drops
+# ---------------------------------------------------------------------------
+
+def test_zero_drops_at_4x_offered_load():
+    cfg = _cfg(kv_mode="int8")
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                      prefill_chunk=16)
+    rng = np.random.default_rng(0)
+    reqs = _reqs(rng, cfg, 4 * eng.max_batch)   # all offered at once
+    outs = eng.generate(reqs)
+    assert sorted(outs) == list(range(8))       # nothing dropped
+    for i, toks in outs.items():
+        assert len(toks) == 4, (i, toks)
+    assert len(eng.scheduler.queue) == 0
+    assert eng.scheduler.stats["peak_queue_depth"] >= 6  # 8 offered, 2 rows
+
+
+def test_augment_on_pressure_admits_more_at_equal_bytes():
+    """The paper's on-demand capacity: at the SAME byte budget, the
+    augment-on-pressure pool must reach strictly higher peak concurrency
+    than normal-only (cold pages demoted to the packed plane make room)."""
+    base = get_arch("qwen1.5-0.5b").reduced()
+    rng = np.random.default_rng(1)
+    peaks, pools = {}, {}
+    for mode in ("normal-only", "augment-on-pressure"):
+        cfg = dataclasses.replace(
+            base, amc=AMCConfig(kv_mode="normal", pool_mode=mode))
+        eng = ServeEngine(cfg, make_local_mesh(), max_batch=4, max_seq=32,
+                          prefill_chunk=16, pool_budget_bytes=2 * 16384)
+        budget = eng.pool.budget_bytes
+        outs = eng.generate(_reqs(rng, cfg, 8, plen=8, max_new=4))
+        assert all(len(outs[i]) == 4 for i in range(8)), mode
+        peaks[mode] = eng.scheduler.stats["peak_concurrency"]
+        pools[mode] = (budget, eng.stats()["pool"])
+    assert pools["normal-only"][0] == pools["augment-on-pressure"][0]
+    assert peaks["augment-on-pressure"] > peaks["normal-only"], peaks
+    assert pools["augment-on-pressure"][1]["augment_events"] > 0
+
+
+# ---------------------------------------------------------------------------
+# refresh invariant
+# ---------------------------------------------------------------------------
+
+def test_augmented_pages_refreshed_within_retention_steps():
+    """Scheduler invariant: at every decode-step boundary, no augmented
+    page has gone more than retention_steps steps without a (re)write or
+    refresh."""
+    cfg = _cfg(kv_mode="int8", pool_mode="always-augmented",
+               retention_steps=2)
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                      prefill_chunk=16)
+    rng = np.random.default_rng(2)
+    for r in _reqs(rng, cfg, 2, plen=20, max_new=8):
+        eng.add_request(r)
+    while eng.active.any():
+        eng.step_all()
+        age = eng.pool.max_augmented_age(eng.step_idx)
+        assert age <= cfg.amc.retention_steps, (age, eng.step_idx)
+    st = eng.stats()
+    assert st["refreshes"] > 0              # cold prompt pages expired
+    assert st["refresh_bytes"] > 0
+
+
+# ---------------------------------------------------------------------------
+# preemption-by-augmentation
+# ---------------------------------------------------------------------------
+
+def test_preemption_requeues_and_completes_identically():
+    """When growth outruns even augmentation, the youngest row is
+    preempted and resumed by greedy recompute — same tokens as an
+    unpressured run, zero drops."""
+    cfg = _cfg(kv_mode="int8", pool_mode="always-augmented")
+    rng = np.random.default_rng(3)
+    prompts = [rng.integers(0, cfg.vocab, size=(14,)).astype(np.int32)
+               for _ in range(2)]
+
+    def run(budget_pages):
+        eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                          prefill_chunk=16, seed=4,
+                          pool_budget_bytes=budget_pages
+                          * 8704)  # page_bytes_aug of the reduced config
+        assert eng.pool.geom.page_bytes_aug == 8704, \
+            "reduced-config geometry changed; update the test budget"
+        outs = eng.generate([Request(prompt=p, max_new_tokens=6, id=i)
+                             for i, p in enumerate(prompts)])
+        return outs, eng.scheduler.stats["preemptions"]
+
+    full, p0 = run(budget_pages=4)      # both rows fit: no preemption
+    tight, p1 = run(budget_pages=3)     # 2 growing rows, 3 pages: preempt
+    assert p0 == 0 and p1 >= 1
+    assert full == tight                # recompute reproduced the tokens
+
+
+def test_double_preemption_does_not_duplicate_tokens():
+    """A resumed entry's prompt already contains its first stint's
+    generated tokens; a second preemption must rebuild from the ORIGINAL
+    prompt + the full output list, not concatenate the two (which would
+    duplicate the first stint)."""
+    cfg = _cfg(kv_mode="int8", pool_mode="always-augmented")
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                      prefill_chunk=16, seed=9)
+    rng = np.random.default_rng(9)
+    prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+    eng.add_request(Request(prompt=prompt, max_new_tokens=8, id=0))
+    eng.step_all()
+    eng.step_all()                              # 2 tokens generated
+    for round_ in range(2):                     # preempt, resume, repeat
+        eng._preempt(0)
+        entry = eng._queue[0]
+        want = np.concatenate([prompt,
+                               np.asarray(eng.outputs[0], np.int32)])
+        assert np.array_equal(entry.prompt, want), round_
+        eng.step_all()                          # re-admit + 1 more token
+    while eng.active.any() or eng._queue:
+        eng.step_all()
+    assert len(eng.outputs[0]) == 8
+
+
+# ---------------------------------------------------------------------------
+# queue-backed add_request (regression: full batch used to drop to None)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [True, False])
+def test_add_request_enqueues_when_full_never_drops(paged):
+    cfg = _cfg(kv_mode="normal")
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=32,
+                      prefill_chunk=8, paged=paged)
+    rng = np.random.default_rng(5)
+    r0, r1, r2 = _reqs(rng, cfg, 3, plen=4, max_new=3)
+    assert eng.add_request(r0) == 0          # admitted immediately
+    assert eng.add_request(r1) is None       # batch full -> queued
+    assert eng.add_request(r2) is None
+    assert len(eng._queue) == 2              # queued, NOT dropped
+    for _ in range(64):
+        if not (eng.active.any() or eng._queue):
+            break
+        eng.step_all()
+    assert sorted(eng.outputs) == [0, 1, 2]
+    assert all(len(eng.outputs[i]) == 3 for i in range(3))
+
+
+# ---------------------------------------------------------------------------
+# explicit BOS handling (regression: empty prompt used to feed token 0)
+# ---------------------------------------------------------------------------
+
+def test_empty_prompt_without_bos_raises():
+    cfg = _cfg(kv_mode="normal")
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=16)
+    with pytest.raises(ValueError, match="bos_id"):
+        eng.add_request(Request(prompt=np.array([], np.int32),
+                                max_new_tokens=2, id=0))
+
+
+def test_empty_prompt_with_bos_matches_explicit_prompt():
+    cfg = _cfg(kv_mode="normal")
+    bos = 7
+    eng_a = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=16,
+                        seed=6, bos_id=bos)
+    out_a = eng_a.generate([Request(prompt=np.array([], np.int32),
+                                    max_new_tokens=4, id=0)])
+    eng_b = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=16,
+                        seed=6)
+    out_b = eng_b.generate([Request(prompt=np.array([bos], np.int32),
+                                    max_new_tokens=4, id=0)])
+    assert out_a == out_b
+
+
+# ---------------------------------------------------------------------------
+# paged engine vs legacy contiguous engine (single-mode golden)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kv_mode", ["normal", "int8"])
+def test_paged_engine_matches_legacy_contiguous(kv_mode):
+    """With page_size == max_seq the paged kernel's block walk matches the
+    contiguous kernel's, so greedy outputs must agree exactly."""
+    cfg = _cfg(kv_mode=kv_mode, page_size=32)
+    rng = np.random.default_rng(7)
+    prompts = [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)
+               for n in (5, 9)]
+
+    def run(paged):
+        eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                          prefill_chunk=8, seed=8, paged=paged)
+        return eng.generate([Request(prompt=p, max_new_tokens=4, id=i)
+                             for i, p in enumerate(prompts)])
+
+    assert run(True) == run(False)
