@@ -1,0 +1,139 @@
+"""IMC bench: modeled energy/token + decode throughput vs activation
+precision across the augmented-storage matrix (BENCH_imc.json).
+
+Two sections:
+  * "kernel": imc_dot parity vs the packed matmul goldens (bit-exact at
+    8-bit activations) and the array event model of one decode-shaped
+    matmul per storage format x activation precision — the in-array vs
+    fetch energy ratio is the arXiv:1802.08601/2008.03378 headline.
+  * "matrix": the real ServeEngine on a reduced config with
+    matmul_impl="imc", swept over {normal, ternary, dual, int4} storage x
+    activation precisions: decode steps/s (CPU interpret mode — relative
+    only) and the ledger's modeled energy/token, with Normal-mode and
+    Augmented-mode cache reads costed per their page modes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.paper_tables import row
+from repro.configs import get_arch
+from repro.configs.base import AMCConfig
+from repro.core import ternary
+from repro.imc import energy
+from repro.kernels import ops, ref
+
+# storage mode -> engine-level AMC knobs (weights and/or KV augmented)
+STORAGE_MATRIX = {
+    "normal": dict(weight_mode="normal", kv_mode="normal"),
+    "ternary": dict(weight_mode="ternary", kv_mode="normal"),
+    "dual": dict(weight_mode="dual", kv_mode="normal"),
+    "int4": dict(weight_mode="normal", kv_mode="int4"),
+}
+ABITS_SWEEP = (4, 8)
+
+
+def bench_imc_kernel() -> dict:
+    """Parity + event model of the bit-serial kernel itself."""
+    M, K, N = 128, 512, 256
+    rng = np.random.default_rng(0)
+    x = rng.integers(-127, 128, size=(M, K)).astype(np.float32)
+    x[:, 0] = 127                       # absmax == qmax -> exact path
+    x = jnp.asarray(x, jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    t, scale = ternary.ternarize(w)
+    wp = ternary.pack_ternary_2bit(t)
+    y = ops.imc_dot(x, wp, scale, fmt="ternary", abits=8)
+    golden = ops.ternary_matmul(x, wp, scale)
+    bit_exact = bool(np.array_equal(np.asarray(y, np.float32),
+                                    np.asarray(golden, np.float32)))
+    xr = jax.random.normal(jax.random.PRNGKey(1), (M, K), jnp.bfloat16)
+    dense = ref.ternary_matmul_ref(xr, wp, scale)
+    errs = {a: ref.rel_err(ops.imc_dot(xr, wp, scale, fmt="ternary",
+                                       abits=a), dense)
+            for a in (1, 4, 8)}
+
+    # decode-shaped (M=1) event/energy model per storage x abits
+    Kd, Nd = 2048, 2048
+    model = {}
+    for storage in ("ternary", "dual", "int4", "int8"):
+        for abits in (1, 4, 8):
+            ev_imc = energy.matmul_events(1, Kd, Nd, storage=storage,
+                                          impl="imc", abits=abits)
+            ev_fetch = energy.matmul_events(1, Kd, Nd, storage=storage,
+                                            impl="packed")
+            e_imc, e_fetch = energy.energy_fj(ev_imc), energy.energy_fj(
+                ev_fetch)
+            model[f"{storage}/abits{abits}"] = {
+                "imc_energy_fj": e_imc, "fetch_energy_fj": e_fetch,
+                "imc_vs_fetch_ratio": e_imc / e_fetch,
+            }
+            row(f"imc_model_{storage}_abits{abits}", 0.0,
+                f"imc_fj={e_imc:.0f} fetch_fj={e_fetch:.0f} "
+                f"ratio={e_imc/e_fetch:.2f}")
+    row("imc_dot_parity", 0.0,
+        f"bit_exact_vs_ternary_matmul={bit_exact} "
+        f"rel_err_abits148={errs[1]:.3f}/{errs[4]:.3f}/{errs[8]:.4f}")
+    return {"bit_exact_vs_ternary_matmul": bit_exact,
+            "rel_err_vs_dense_by_abits": {str(a): float(e)
+                                          for a, e in errs.items()},
+            "decode_matmul_model": model}
+
+
+def bench_imc_matrix() -> dict:
+    """The engine-level matrix: storage mode x activation precision."""
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve import Request, ServeEngine
+
+    base = get_arch("qwen1.5-0.5b").reduced()
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, base.vocab, size=(5,)).astype(np.int32)
+    matrix = {}
+    for sname, knobs in STORAGE_MATRIX.items():
+        for abits in ABITS_SWEEP:
+            cfg = dataclasses.replace(
+                base, amc=AMCConfig(matmul_impl="imc", imc_abits=abits,
+                                    **knobs))
+            eng = ServeEngine(cfg, make_local_mesh(), max_batch=2,
+                              max_seq=32, prefill_chunk=16)
+            eng.add_request(Request(prompt=prompt.copy(),
+                                    max_new_tokens=24, id=0))
+            eng.step_all()                   # warmup (compiles decode)
+            tok0 = eng.energy_ledger.tokens
+            fj0 = eng.energy_ledger.energy_fj()
+            n, t0 = 6, time.perf_counter()
+            for _ in range(n):
+                eng.step_all()
+            dt = time.perf_counter() - t0
+            st = eng.stats()
+            d_tok = eng.energy_ledger.tokens - tok0
+            pj_tok = (eng.energy_ledger.energy_fj() - fj0) / max(d_tok,
+                                                                 1) / 1e3
+            key = f"{sname}/abits{abits}"
+            matrix[key] = {
+                "decode_steps_per_s": n / dt,
+                "energy_pj_per_token_decode": pj_tok,
+                "energy_pj_per_token_total":
+                    st["imc"]["energy_pj_per_token"],
+                "groups_energy_fj": {g: d["energy_fj"] for g, d in
+                                     st["imc"]["groups"].items()},
+                "kv_read_fj_per_value_normal_mode":
+                    st["imc"]["kv_read_fj_per_value_normal_mode"],
+                "kv_read_fj_per_value_augmented_mode":
+                    st["imc"]["kv_read_fj_per_value_augmented_mode"],
+                "capacity_factor": st["capacity_factor"],
+            }
+            row(f"imc_serve_{sname}_abits{abits}", dt / n * 1e6,
+                f"steps_per_s={n/dt:.2f} energy_pj_per_tok={pj_tok:.1f}")
+    return matrix
+
+
+def run_all() -> dict:
+    """Returns the BENCH_imc.json payload."""
+    return {"kernel": bench_imc_kernel(), "matrix": bench_imc_matrix(),
+            "event_energy_fj": dict(energy.EVENT_ENERGY_FJ)}

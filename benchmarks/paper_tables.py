@@ -29,7 +29,9 @@ def row(name: str, us_per_call: float, derived: str):
 
 
 def _time_us(fn, *args, n=20):
-    fn(*args)  # warmup/compile
+    # block the warmup result: otherwise compilation/dispatch may still be
+    # in flight when the timer starts and the first timed call absorbs it
+    jax.block_until_ready(fn(*args))
     t0 = time.perf_counter()
     for _ in range(n):
         out = fn(*args)
@@ -139,8 +141,13 @@ def bench_capacity():
         f"augmentation={per_tok_bf16/per_tok_int4:.2f}x")
 
 
-def run_all():
+def run_all() -> dict:
+    """Runs every paper-table analog; returns the BENCH_paper_tables.json
+    payload (the same rows the CSV prints, structured)."""
+    ROWS.clear()
     bench_retention()
     bench_energy_bytes()
     bench_op_latency()
     bench_capacity()
+    return {"rows": [{"name": n, "us_per_call": us, "derived": d}
+                     for n, us, d in ROWS]}

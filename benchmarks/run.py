@@ -1,9 +1,12 @@
 """Benchmark harness — one section per paper table + kernel and e2e benches.
 Prints ``name,us_per_call,derived`` CSV (see DESIGN.md SS7 experiment index)
 and writes BENCH_serve.json (prefill/decode throughput, the kv_mode x
-weight_mode serving matrix + modeled HBM traffic) and BENCH_kernels.json
-(per-kernel modeled bytes + Pallas-interpret parity) so the serving perf
-trajectory is tracked across PRs.
+weight_mode serving matrix + modeled HBM traffic), BENCH_kernels.json
+(per-kernel modeled bytes + Pallas-interpret parity),
+BENCH_scheduler.json (pool modes x offered load), BENCH_paper_tables.json
+(the Tables I-VI analog rows, structured) and BENCH_imc.json (storage
+matrix x activation precision: modeled energy/token + throughput) so the
+serving perf trajectory is tracked across PRs.
 """
 from __future__ import annotations
 
@@ -14,20 +17,24 @@ import sys
 
 def main() -> None:
     print("name,us_per_call,derived")
-    from benchmarks import e2e_bench, kernels_bench, paper_tables
+    from benchmarks import e2e_bench, imc_bench, kernels_bench, paper_tables
     from benchmarks import scheduler_bench
     print("# -- paper tables I-VI analogs --")
-    paper_tables.run_all()
+    tables = paper_tables.run_all()
     print("# -- pallas kernels (bytes/roofline; CPU ref wall-time) --")
     kernels = kernels_bench.run_all()
     print("# -- end-to-end (reduced configs, CPU) --")
     serve = e2e_bench.run_all()
     print("# -- continuous-batching scheduler (pool modes x offered load) --")
     sched = scheduler_bench.run_all()
+    print("# -- in-memory compute (storage matrix x activation precision) --")
+    imc = imc_bench.run_all()
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     for name, payload in (("BENCH_serve.json", serve),
                           ("BENCH_kernels.json", kernels),
-                          ("BENCH_scheduler.json", sched)):
+                          ("BENCH_scheduler.json", sched),
+                          ("BENCH_paper_tables.json", tables),
+                          ("BENCH_imc.json", imc)):
         out = os.path.join(root, name)
         with open(out, "w") as f:
             json.dump(payload, f, indent=2)

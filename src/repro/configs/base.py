@@ -73,6 +73,17 @@ class AMCConfig:
     # never dequantized in HBM); "dequant" is the reference unpack-then-dense
     # path kept for golden-equivalence tests and debugging.
     kv_impl: str = "kernel"         # kernel | dequant
+    # Matmul implementation for augmented weight storage: "packed" streams
+    # the packed bytes through the Pallas matmul kernels; "dense" is the
+    # dequantize-then-XLA reference path; "imc" evaluates the dot product
+    # IN the array — wordline-serial activation bits x bitline-parallel
+    # accumulation (kernels/imc_dot.py), with array-level event/energy
+    # accounting in imc/energy.py. Dense (unpacked) weights have no
+    # resident array and fall back to the fetch model under "imc".
+    matmul_impl: str = "packed"     # dense | packed | imc
+    # Activation precision of the bit-serial IMC path: 1/4/8 bits
+    # (arXiv:2008.03378's reconfigurable bit-precision).
+    imc_abits: int = 8
     retention_steps: int = 8
     # -- paged augmented KV pool (serve/cache_pool.py) ----------------------
     # Tokens per page: the mode-switch granularity of the pool (the paper's

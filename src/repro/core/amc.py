@@ -85,6 +85,32 @@ def capacity_factor(mode: Mode, ternary_fmt: str = "base3") -> float:
             / mode_bits_per_value(mode, ternary_fmt))
 
 
+# Array access events per logical VALUE, by mode (the paper's Tables
+# III/IV access structure; per-event energies live in `repro.imc.energy`).
+# NORMAL reads 16 6T cells per bf16 value; AUGMENTED_DUAL touches 4 8T
+# cells per int4 value (static plane sensed through the dynamic node,
+# dynamic plane with the boosted WL); AUGMENTED_TERNARY reads one 7T cell
+# per trit.
+MODE_ACCESS_EVENTS = {
+    (Mode.NORMAL, "read"): ("read_6t", 16),
+    (Mode.NORMAL, "write"): ("write_6t", 16),
+    (Mode.AUGMENTED_DUAL, "read"): ("read_8t_static", 4),
+    (Mode.AUGMENTED_DUAL, "read_dynamic"): ("read_8t_dynamic", 4),
+    (Mode.AUGMENTED_DUAL, "write"): ("write_8t_dual", 4),
+    (Mode.AUGMENTED_DUAL, "write_dynamic"): ("write_8t_dynamic", 4),
+    (Mode.AUGMENTED_TERNARY, "read"): ("read_7t", 1),
+    (Mode.AUGMENTED_TERNARY, "write"): ("write_7t", 1),
+}
+
+
+def mode_access_events(mode: Mode, n_values: int, kind: str) -> dict:
+    """{event_class: count} of one `kind` access to `n_values` values
+    stored in `mode` — the bridge between this module's capacity ledger
+    and the array-level energy model (`repro.imc.energy`)."""
+    cls, cells = MODE_ACCESS_EVENTS[(mode, kind)]
+    return {cls: cells * n_values}
+
+
 class AugmentedStore:
     def __init__(self, shape, *, retention_steps: int = 4,
                  ternary_fmt: str = "base3"):
@@ -100,6 +126,21 @@ class AugmentedStore:
         self._step = 0
         self.policy = RefreshPolicy(retention_steps=retention_steps)
         self.stats = {"refreshes": 0, "filo_faults": 0, "mode_switches": 0}
+        # array access events by class (paper Tables III/IV; energies in
+        # repro.imc.energy — see `energy_fj()`)
+        self.events: dict = {}
+
+    def _note_access(self, kind: str) -> None:
+        import numpy as np
+        n = int(np.prod(self.shape))
+        for cls, c in mode_access_events(self.mode, n, kind).items():
+            self.events[cls] = self.events.get(cls, 0) + c
+
+    def energy_fj(self) -> float:
+        """Modeled energy of every access so far (lazy import keeps
+        core free of the imc package at module load)."""
+        from repro.imc.energy import energy_fj
+        return energy_fj(self.events)
 
     # -- mode switching (the WL/SL reconfiguration of the paper) ------------
 
@@ -153,6 +194,7 @@ class AugmentedStore:
             else:
                 self._tern_packed = ternary.pack_ternary_2bit(t)
             self._tern_scale = scale
+        self._note_access("write")
         self._static_written = True
         self._dynamic_live = False
 
@@ -160,6 +202,7 @@ class AugmentedStore:
         if self.mode == Mode.AUGMENTED_DUAL:
             # the SRAM read path runs through the dynamic node (paper fig. 1)
             self._guard_filo(force)
+        self._note_access("read")
         if self.mode == Mode.NORMAL:
             return self._dense
         if self.mode == Mode.AUGMENTED_DUAL:
@@ -192,6 +235,7 @@ class AugmentedStore:
             raise RuntimeError("dynamic plane exists only in AUGMENTED_DUAL")
         self._dual = dp.write_dynamic(self._dual, x, stochastic=stochastic,
                                       key=key)
+        self._note_access("write_dynamic")
         self._dynamic_live = True
         self.policy.stamp(self._step)
 
@@ -203,6 +247,7 @@ class AugmentedStore:
             raise RetentionExpired(
                 f"dynamic plane expired at step {self.policy.expires_at()}, "
                 f"now {self._step}; refresh() from master first")
+        self._note_access("read_dynamic")
         out = dp.read_dynamic(self._dual)
         self._dynamic_live = False
         return out
@@ -210,6 +255,7 @@ class AugmentedStore:
     def peek_dynamic(self) -> jax.Array:
         if self.policy.needs_refresh(self._step):
             raise RetentionExpired("dynamic plane expired")
+        self._note_access("read_dynamic")
         return dp.read_dynamic(self._dual)
 
     def refresh(self, master: jax.Array) -> None:
@@ -217,6 +263,7 @@ class AugmentedStore:
         if self.mode != Mode.AUGMENTED_DUAL or not self._dynamic_live:
             return
         self._dual = dp.write_dynamic(self._dual, master)
+        self._note_access("write_dynamic")
         self.policy.stamp(self._step)
         self.stats["refreshes"] += 1
 

@@ -1,0 +1,23 @@
+"""In-memory compute (IMC) subsystem: bit-serial dot-product engine over
+packed augmented storage + array-level event/energy accounting.
+
+  engine.BitSerialArray   resident packed weights, wordline-serial dot()
+  energy.ImcEventLedger   host-side event/energy accumulator
+  energy.*_events         analytic per-dispatch event counts
+
+The Pallas kernels themselves live in `repro.kernels.imc_dot`; the model
+routing knob is `cfg.amc.matmul_impl` ("dense" | "packed" | "imc").
+"""
+from repro.imc.energy import (EVENT_ENERGY_FJ, ImcEventLedger,
+                              decode_matmul_events, imc_dot_events,
+                              kv_read_events, kv_write_events,
+                              matmul_events, refresh_events,
+                              weight_fetch_events)
+from repro.imc.engine import BitSerialArray
+
+__all__ = [
+    "EVENT_ENERGY_FJ", "ImcEventLedger", "BitSerialArray",
+    "decode_matmul_events", "imc_dot_events", "kv_read_events",
+    "kv_write_events", "matmul_events", "refresh_events",
+    "weight_fetch_events",
+]

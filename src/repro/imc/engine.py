@@ -1,0 +1,88 @@
+"""Bit-serial IMC engine: array objects that own packed augmented weights
+and evaluate dot products in place, logging array events per call.
+
+`BitSerialArray` is the eager, host-driven view of one IMC sub-array —
+what the benches and direct callers use. It pairs the `imc_dot` kernels
+with the `energy.ImcEventLedger` so every `dot()` logs its wordline /
+bitline / ADC events. Inside jit-compiled model steps the pure kernel ops
+(`kernels.ops.imc_dot` / `imc_dual_dot`) are used directly and the
+*engine-level* accounting is analytic (`energy.decode_matmul_events`,
+called per real dispatch by `ServeEngine`) — a Python counter cannot be
+bumped from inside a traced function.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quant, ternary
+from repro.imc import energy
+from repro.kernels import ops as kops
+from repro.kernels.imc_dot import _k_pack
+
+
+class BitSerialArray:
+    """One IMC sub-array: packed weights resident, activations streamed
+    bit-serially at `abits` precision (reconfigurable per call)."""
+
+    def __init__(self, wp: jax.Array, scale, *, fmt: str,
+                 lo_scale=None, abits: int = 8,
+                 ledger: Optional[energy.ImcEventLedger] = None):
+        if fmt not in ("ternary", "dual", "int8", "int4"):
+            raise ValueError(f"unknown IMC weight format {fmt!r}")
+        self.fmt, self.abits = fmt, abits
+        self.wp, self.scale, self.lo_scale = wp, scale, lo_scale
+        self.ledger = ledger if ledger is not None else energy.ImcEventLedger()
+        self.K = wp.shape[0] * _k_pack(fmt)
+        self.N = wp.shape[1]
+
+    # -- constructors (the write drivers) -----------------------------------
+
+    @classmethod
+    def from_dense(cls, w: jax.Array, *, fmt: str = "ternary",
+                   abits: int = 8, ledger=None) -> "BitSerialArray":
+        """Pack a dense (K, N) weight into the array's resident format."""
+        w = w.astype(jnp.float32)
+        if fmt == "ternary":
+            t, scale = ternary.ternarize(w, axis=0)
+            return cls(ternary.pack_ternary_2bit(t), scale, fmt=fmt,
+                       abits=abits, ledger=ledger)
+        if fmt == "int8":
+            q, scale = quant.quantize_int8(w, axis=0)
+            return cls(q, scale, fmt=fmt, abits=abits, ledger=ledger)
+        if fmt == "int4":
+            q, scale = quant.quantize_int4(w, axis=0)
+            return cls(quant.pack_int4_pair(q[0::2], q[1::2]), scale,
+                       fmt=fmt, abits=abits, ledger=ledger)
+        raise ValueError("use from_dense_pair for the dual format")
+
+    @classmethod
+    def from_dense_pair(cls, w_hi: jax.Array, w_lo: jax.Array, *,
+                        abits: int = 8, ledger=None) -> "BitSerialArray":
+        """Two dense (K, N) weights into ONE dual-plane uint8 array."""
+        qh, sh = quant.quantize_int4(w_hi.astype(jnp.float32), axis=0)
+        ql, sl = quant.quantize_int4(w_lo.astype(jnp.float32), axis=0)
+        return cls(quant.pack_int4_pair(qh, ql), sh, fmt="dual",
+                   lo_scale=sl, abits=abits, ledger=ledger)
+
+    # -- compute ------------------------------------------------------------
+
+    def dot(self, x: jax.Array, *, abits: Optional[int] = None):
+        """x (M, K) -> (M, N) (dual: ((M, N), (M, N))). Logs the call's
+        wordline/bitline/ADC events to the ledger."""
+        a = self.abits if abits is None else abits
+        M = x.shape[0]
+        self.ledger.add(
+            energy.imc_dot_events(M, self.K, self.N, abits=a,
+                                  planes=2 if self.fmt == "dual" else 1),
+            group="imc_dot")
+        if self.fmt == "dual":
+            return kops.imc_dual_dot(x, self.wp, self.scale, self.lo_scale,
+                                     abits=a)
+        return kops.imc_dot(x, self.wp, self.scale, fmt=self.fmt, abits=a)
+
+    def physical_bytes(self) -> int:
+        scales = [s for s in (self.scale, self.lo_scale) if s is not None]
+        return int(self.wp.nbytes) + sum(int(s.nbytes) for s in scales)

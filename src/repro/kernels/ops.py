@@ -13,6 +13,8 @@ import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.dual_plane_matmul import dual_plane_matmul_pallas
+from repro.kernels.imc_dot import (imc_dot_pallas, imc_dual_dot_pallas,
+                                   quantize_activations)
 from repro.kernels.packed_kv_attention import packed_kv_attention_pallas
 from repro.kernels.paged_kv_attention import paged_kv_attention_pallas
 from repro.kernels.quantize_pack_kv import quantize_pack_kv_pallas
@@ -46,6 +48,40 @@ def dual_plane_matmul(x, buf, hi_scale, lo_scale, *, bm=128, bk=256, bn=256,
     return dual_plane_matmul_pallas(x, buf, hi_scale, lo_scale, bm=bm,
                                     bk=bk, bn=bn,
                                     interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("fmt", "abits", "bm", "bk",
+                                             "bn", "interpret", "use_ref"))
+def imc_dot(x, wp, scale, *, fmt="ternary", abits=8, bm=128, bk=512, bn=256,
+            interpret=None, use_ref=False):
+    """Bit-serial IMC dot product over packed weights consumed as stored.
+
+    `fmt` selects the resident storage: "ternary" (K//4, N) u8 trits,
+    "int4" (K//2, N) u8 row pairs, "int8" (K, N) i8. Activations are
+    quantized per-row to `abits` bits (1/4/8 — arXiv:2008.03378's
+    reconfigurable precision) and streamed one magnitude bit-plane per
+    cycle. At abits=8 with unit activation scale this is bit-exact with
+    `ternary_matmul` on the same packed bytes."""
+    if use_ref:
+        return ref.imc_dot_ref(x, wp, scale, fmt=fmt, abits=abits)
+    xq, xs = quantize_activations(x, abits)
+    return imc_dot_pallas(xq, xs, wp, scale, fmt=fmt, abits=abits, bm=bm,
+                          bk=bk, bn=bn, interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("abits", "bm", "bk", "bn",
+                                             "interpret", "use_ref"))
+def imc_dual_dot(x, buf, hi_scale, lo_scale, *, abits=8, bm=128, bk=256,
+                 bn=256, interpret=None, use_ref=False):
+    """Bit-serial IMC dot over BOTH int4 planes of one uint8 array: a
+    single wordline-serial activation stream, two bitline-parallel
+    accumulations (the 8T dual-bit cell as a dot-product engine)."""
+    if use_ref:
+        return ref.imc_dual_dot_ref(x, buf, hi_scale, lo_scale, abits=abits)
+    xq, xs = quantize_activations(x, abits)
+    return imc_dual_dot_pallas(xq, xs, buf, hi_scale, lo_scale, abits=abits,
+                               bm=bm, bk=bk, bn=bn,
+                               interpret=_auto_interpret(interpret))
 
 
 @functools.partial(jax.jit, static_argnames=("bs", "kv_bits", "debug_visits",

@@ -35,6 +35,62 @@ def dual_plane_matmul_ref(x: jax.Array, buf: jax.Array, hi_scale: jax.Array,
             (xf @ lo * lo_scale).astype(out_dtype))
 
 
+def _imc_bit_serial(xq: jax.Array, w: jax.Array, abits: int) -> jax.Array:
+    """The wordline-serial shift-add spec: sum_b 2^b (plane_b @ w), every
+    plane in {-1,0,+1}. Integer-exact in fp32 (the kernel mirrors this op
+    order, so ternary/dual parity is bit-exact, not approximate)."""
+    from repro.kernels.imc_dot import mag_bits
+    xi = xq.astype(jnp.int32)
+    sign, mag = jnp.sign(xi), jnp.abs(xi)
+    acc = jnp.zeros((xq.shape[0], w.shape[1]), jnp.float32)
+    for b in range(mag_bits(abits)):
+        bit = jnp.bitwise_and(jnp.right_shift(mag, b), 1)
+        plane = (sign * bit).astype(jnp.bfloat16)
+        acc = acc + (2.0 ** b) * jnp.dot(
+            plane, w.astype(jnp.bfloat16), preferred_element_type=jnp.float32)
+    return acc
+
+
+def _imc_unpack_weights(fmt: str, wp: jax.Array) -> jax.Array:
+    """Materialize the resident array contents (K, N) for the oracle."""
+    if fmt == "ternary":
+        return ternary.unpack_ternary_2bit(wp, wp.shape[0] * 4)
+    if fmt == "int4":
+        hi, lo = quant.unpack_int4_hi(wp), quant.unpack_int4_lo(wp)
+        return jnp.stack([hi, lo], axis=1).reshape(wp.shape[0] * 2,
+                                                   wp.shape[1])
+    return wp                                         # int8
+
+
+def imc_dot_ref(x: jax.Array, wp: jax.Array, scale: jax.Array, *,
+                fmt: str = "ternary", abits: int = 8,
+                out_dtype=jnp.bfloat16) -> jax.Array:
+    """Oracle for `imc_dot`: per-row activation quantization, bit-serial
+    accumulation over the format's resident weights, ADC epilogue.
+
+    Bit-exact with the kernel whenever the activation quantization is
+    exact (integer-valued rows with absmax == qmax -> unit scale, no
+    rounding). For general bf16 inputs the eager quantization here and
+    the jitted wrapper's may disagree by 1 ulp on round-to-nearest ties
+    (XLA rewrites x/s to x*rcp(s)), so compare with a tolerance."""
+    from repro.kernels.imc_dot import quantize_activations
+    xq, xs = quantize_activations(x, abits)
+    acc = _imc_bit_serial(xq, _imc_unpack_weights(fmt, wp), abits)
+    return (acc * xs * scale).astype(out_dtype)
+
+
+def imc_dual_dot_ref(x: jax.Array, buf: jax.Array, hi_scale: jax.Array,
+                     lo_scale: jax.Array, *, abits: int = 8,
+                     out_dtype=jnp.bfloat16):
+    """Oracle for `imc_dual_dot`: one activation stream, both planes."""
+    from repro.kernels.imc_dot import quantize_activations
+    xq, xs = quantize_activations(x, abits)
+    acc_hi = _imc_bit_serial(xq, quant.unpack_int4_hi(buf), abits)
+    acc_lo = _imc_bit_serial(xq, quant.unpack_int4_lo(buf), abits)
+    return ((acc_hi * xs * hi_scale).astype(out_dtype),
+            (acc_lo * xs * lo_scale).astype(out_dtype))
+
+
 def quantize_pack_kv_ref(kv: jax.Array):
     """kv (..., D) bf16 -> (packed (..., D//2) uint8, scale (..., 1) f32).
     Same per-row int4 quantization + nibble interleave as

@@ -31,6 +31,13 @@ def main():
                     help="paged-pool byte budget (the modeled SRAM array "
                          "size; small budgets exercise augmentation "
                          "pressure and preemption)")
+    ap.add_argument("--matmul-impl", default=None,
+                    choices=["dense", "packed", "imc"],
+                    help="consumer for packed weight matmuls (imc = "
+                         "bit-serial in-array dot product)")
+    ap.add_argument("--imc-abits", type=int, default=None,
+                    choices=[1, 4, 8],
+                    help="IMC activation precision (bit-serial cycles)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -39,7 +46,9 @@ def main():
     mesh = mesh_lib.make_local_mesh()
     eng = ServeEngine(cfg, mesh, max_batch=args.max_batch,
                       max_seq=args.max_seq, pool_mode=args.pool_mode,
-                      pool_budget_bytes=args.pool_budget_bytes)
+                      pool_budget_bytes=args.pool_budget_bytes,
+                      matmul_impl=args.matmul_impl,
+                      imc_abits=args.imc_abits)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
                     max_new_tokens=args.max_new, id=i)
@@ -50,6 +59,10 @@ def main():
     print(f"[serve] kv_mode={eng.cfg.amc.kv_mode} "
           f"(augmented KV capacity factor "
           f"{ {'normal':1,'int8':2,'int4':4}[eng.cfg.amc.kv_mode] }x)")
+    imc = eng.stats()["imc"]
+    print(f"[serve] matmul_impl={imc['matmul_impl']} "
+          f"abits={imc['imc_abits']} "
+          f"modeled_energy_pj_per_token={imc['energy_pj_per_token']:.1f}")
     if eng.paged:
         st = eng.stats()
         print(f"[serve] pool={eng.pool.pool_mode} "

@@ -22,8 +22,15 @@ against.  Packed contraction dims carry the replicated "packed" logical
 axis (a 2-bit-packed dim cannot take the FSDP embed sharding); output dims
 keep their original TP axes.
 
-Applies to the transformer family (dense/MoE attention + dense MLP); MoE
-expert banks and the other families keep dense weights for now.
+Applies to the transformer family: attention + dense-MLP matmuls, and in
+ternary mode also the 4-D MoE expert banks (the dominant bytes of a MoE
+checkpoint; consumed per expert via `expert_proj`). Dual mode pairs 3-D
+weights only; the other families keep dense weights.
+
+Consumption is routed by `cfg.amc.matmul_impl`: "packed" streams through
+the Pallas matmul kernels, "imc" evaluates bit-serially in the array
+(`kernels/imc_dot.py`, activation precision `cfg.amc.imc_abits`), and
+"dense" takes the dequantize-then-XLA reference path.
 """
 from __future__ import annotations
 
@@ -57,51 +64,98 @@ def _as_rows(x: jax.Array, bm: int = 128):
     return x2, lead, M, bm
 
 
-def ternary_apply(x: jax.Array, packed: jax.Array, scale: jax.Array):
+def _impl_of(amc) -> str:
+    impl = "packed" if amc is None else amc.matmul_impl
+    if impl not in ("dense", "packed", "imc"):
+        raise ValueError(f"unknown matmul_impl {impl!r}")
+    return impl
+
+
+def ternary_apply(x: jax.Array, packed: jax.Array, scale: jax.Array,
+                  amc=None):
     """x (..., K) @ unpack(packed (K//4, N)) * scale (1, N) -> (..., N).
 
-    The weight stays 2 bits/value in HBM; `K.ternary_matmul` unpacks in
-    VMEM registers on the way into the MXU."""
+    The weight stays 2 bits/value in HBM. `amc.matmul_impl` picks the
+    consumer: "packed" unpacks in VMEM registers on the way into the MXU
+    (`K.ternary_matmul`); "imc" evaluates in-array, wordline-serial at
+    `amc.imc_abits` activation bits (`K.imc_dot`); "dense" is the
+    dequantize-then-XLA reference."""
+    impl = _impl_of(amc)
     x2, lead, M, bm = _as_rows(x)
     K, N = packed.shape[0] * 4, packed.shape[1]
-    y = kops.ternary_matmul(x2, packed, scale, bm=bm,
-                            bk=math.gcd(K, 512), bn=math.gcd(N, 256))
+    if impl == "imc":
+        y = kops.imc_dot(x2, packed, scale, fmt="ternary",
+                         abits=amc.imc_abits, bm=bm,
+                         bk=math.gcd(K, 512), bn=math.gcd(N, 256))
+    else:
+        y = kops.ternary_matmul(x2, packed, scale, bm=bm,
+                                bk=math.gcd(K, 512), bn=math.gcd(N, 256),
+                                use_ref=impl == "dense")
     return y[:M].reshape(*lead, N)
 
 
 def dual_apply(x: jax.Array, buf: jax.Array, hi_scale: jax.Array,
-               lo_scale: jax.Array):
+               lo_scale: jax.Array, amc=None):
     """x (..., K) @ BOTH int4 planes of buf (K, N): one byte stream read
-    from HBM, two results — ((..., N), (..., N))."""
+    from HBM, two results — ((..., N), (..., N)). Under "imc" one
+    wordline-serial activation stream drives both planes' bitlines."""
+    impl = _impl_of(amc)
     x2, lead, M, bm = _as_rows(x)
     K, N = buf.shape
-    y_hi, y_lo = kops.dual_plane_matmul(x2, buf, hi_scale, lo_scale, bm=bm,
-                                        bk=math.gcd(K, 256),
-                                        bn=math.gcd(N, 256))
+    if impl == "imc":
+        y_hi, y_lo = kops.imc_dual_dot(x2, buf, hi_scale, lo_scale,
+                                       abits=amc.imc_abits, bm=bm,
+                                       bk=math.gcd(K, 256),
+                                       bn=math.gcd(N, 256))
+    else:
+        y_hi, y_lo = kops.dual_plane_matmul(x2, buf, hi_scale, lo_scale,
+                                            bm=bm, bk=math.gcd(K, 256),
+                                            bn=math.gcd(N, 256),
+                                            use_ref=impl == "dense")
     return y_hi[:M].reshape(*lead, N), y_lo[:M].reshape(*lead, N)
 
 
-def proj(p: dict, name: str, x: jax.Array) -> jax.Array:
-    """x @ p[name], dispatching to the ternary kernel when the weight is
-    stored packed (`{name}_packed` / `{name}_scale`)."""
+def proj(p: dict, name: str, x: jax.Array, amc=None) -> jax.Array:
+    """x @ p[name], dispatching to the packed/IMC consumer when the weight
+    is stored packed (`{name}_packed` / `{name}_scale`)."""
     if f"{name}_packed" in p:
-        return ternary_apply(x, p[f"{name}_packed"], p[f"{name}_scale"])
+        return ternary_apply(x, p[f"{name}_packed"], p[f"{name}_scale"],
+                             amc=amc)
     return x @ p[name]
+
+
+def expert_proj(p: dict, name: str, xe: jax.Array, amc=None) -> jax.Array:
+    """Batched expert matmul xe (E, ..., K) @ p[name] (E, K, N), consuming
+    ternary-packed expert banks per expert when present (the MoE form of
+    `proj`; each expert's packed bank is one kernel call via lax.map)."""
+    if f"{name}_packed" not in p:
+        return jnp.einsum("e...k,ekn->e...n", xe, p[name])
+    E, lead, K = xe.shape[0], xe.shape[1:-1], xe.shape[-1]
+    N = p[f"{name}_packed"].shape[-1]
+    x2 = xe.reshape(E, -1, K)
+
+    def one(args):
+        packed, scale, x = args
+        return ternary_apply(x, packed, scale, amc=amc)
+
+    y = jax.lax.map(one, (p[f"{name}_packed"], p[f"{name}_scale"], x2))
+    return y.reshape(E, *lead, N)
 
 
 def ternary_mlp(cfg: ModelConfig, p: dict, h: jax.Array) -> jax.Array:
     """MLP with all weights 2-bit packed (h is already normed)."""
+    amc = cfg.amc
     if cfg.act == "swiglu":
-        mid = jax.nn.silu(proj(p, "w_gate", h)) * proj(p, "w_up", h)
+        mid = jax.nn.silu(proj(p, "w_gate", h, amc)) * proj(p, "w_up", h, amc)
     else:
-        mid = jax.nn.gelu(proj(p, "w_up", h), approximate=True)
-    return proj(p, "w_down", mid)
+        mid = jax.nn.gelu(proj(p, "w_up", h, amc), approximate=True)
+    return proj(p, "w_down", mid, amc)
 
 
 def dual_mlp(cfg: ModelConfig, p: dict, h: jax.Array) -> jax.Array:
     """swiglu MLP with w_gate + w_up sharing one dual-plane buffer."""
     gate, up = dual_apply(h, p["w_gate_up_buf"], p["w_gate_scale"],
-                          p["w_up_scale"])
+                          p["w_up_scale"], amc=cfg.amc)
     return (jax.nn.silu(gate) * up) @ p["w_down"]
 
 
@@ -110,15 +164,29 @@ def dual_mlp(cfg: ModelConfig, p: dict, h: jax.Array) -> jax.Array:
 # ---------------------------------------------------------------------------
 
 def _ternary_pack(w: jax.Array):
-    """(n, K, N) dense -> (packed (n, K//4, N) u8, scale (n, 1, N) f32)."""
-    t, scale = ternary.ternarize(w.astype(jnp.float32), axis=1)
-    return jax.vmap(ternary.pack_ternary_2bit)(t), scale
+    """(..., K, N) dense -> (packed (..., K//4, N) u8, scale (..., 1, N)
+    f32). Leading dims (layer stack, expert banks) are vmapped over."""
+    t, scale = ternary.ternarize(w.astype(jnp.float32), axis=-2)
+    pack = ternary.pack_ternary_2bit
+    for _ in range(w.ndim - 2):
+        pack = jax.vmap(pack)
+    return pack(t), scale
+
+
+def _ternary_unpack(packed: jax.Array) -> jax.Array:
+    """Inverse of `_ternary_pack` (without the scale): (..., K//4, N) u8
+    -> (..., K, N) int8 trits."""
+    K = packed.shape[-2] * 4
+    unpack = lambda p_: ternary.unpack_ternary_2bit(p_, K)  # noqa: E731
+    for _ in range(packed.ndim - 2):
+        unpack = jax.vmap(unpack)
+    return unpack(packed)
 
 
 def _dual_pack(w_hi: jax.Array, w_lo: jax.Array):
     """Two (n, K, N) dense weights -> one (n, K, N) u8 buffer + scales."""
-    qh, sh = quant.quantize_int4(w_hi.astype(jnp.float32), axis=1)
-    ql, sl = quant.quantize_int4(w_lo.astype(jnp.float32), axis=1)
+    qh, sh = quant.quantize_int4(w_hi.astype(jnp.float32), axis=-2)
+    ql, sl = quant.quantize_int4(w_lo.astype(jnp.float32), axis=-2)
     return quant.pack_int4_pair(qh, ql), sh, sl
 
 
@@ -132,15 +200,20 @@ def _transform(cfg: ModelConfig, params: dict, pack_tern, pack_dual) -> dict:
     layers = dict(params["layers"])
     attn = dict(layers["attn"])
     mlp = dict(layers["mlp"]) if "mlp" in layers else None
-    groups = [g for g in (attn, mlp) if g is not None]
+    moe = dict(layers["moe"]) if "moe" in layers else None
     if mode == "ternary":
-        for g in groups:
+        # ternary packs every matmul weight, including the 4-D MoE expert
+        # banks (the dominant bytes of a MoE checkpoint — each expert's
+        # (d, f) slab becomes 2-bit trits, consumed via expert_proj)
+        for g in (g for g in (attn, mlp, moe) if g is not None):
             for key in TERNARY_KEYS:
                 if key in g:
                     g[f"{key}_packed"], g[f"{key}_scale"] = pack_tern(
                         g.pop(key))
     elif mode == "dual":
-        for g in groups:
+        # dual pairs naturally-coupled 3-D weights; expert banks stay
+        # dense (no per-expert pairing is defined for them)
+        for g in (g for g in (attn, mlp) if g is not None):
             for (hi, lo), buf_key in DUAL_PAIRS:
                 if hi in g and lo in g:
                     (g[buf_key], g[f"{hi}_scale"],
@@ -150,6 +223,8 @@ def _transform(cfg: ModelConfig, params: dict, pack_tern, pack_dual) -> dict:
     layers["attn"] = attn
     if mlp is not None:
         layers["mlp"] = mlp
+    if moe is not None:
+        layers["moe"] = moe
     out = dict(params)
     out["layers"] = layers
     return out
@@ -173,10 +248,11 @@ def augment_pspecs(cfg: ModelConfig, pspecs: dict) -> dict:
         return pspecs
 
     def pack_tern(spec: PSpec):
-        n, K, N = spec.shape
-        out_ax = spec.axes[2]
-        return (PSpec((n, K // 4, N), (None, "packed", out_ax), dtype="u8"),
-                PSpec((n, 1, N), (None, None, out_ax), dtype="f32",
+        *lead, K, N = spec.shape
+        lead_ax, out_ax = spec.axes[:-2], spec.axes[-1]
+        return (PSpec((*lead, K // 4, N), (*lead_ax, "packed", out_ax),
+                      dtype="u8"),
+                PSpec((*lead, 1, N), (*lead_ax, None, out_ax), dtype="f32",
                       init="ones"))
 
     def pack_dual(hi: PSpec, lo: PSpec):
@@ -195,7 +271,7 @@ def dequant_params(cfg: ModelConfig, params: dict) -> dict:
     if not is_augmented(params):
         return params
     layers = dict(params["layers"])
-    for group_key in ("attn", "mlp"):
+    for group_key in ("attn", "mlp", "moe"):
         if group_key not in layers:
             continue
         g = dict(layers[group_key])
@@ -203,10 +279,8 @@ def dequant_params(cfg: ModelConfig, params: dict) -> dict:
             if key.endswith("_packed"):
                 name = key[:-len("_packed")]
                 packed, scale = g.pop(key), g.pop(f"{name}_scale")
-                K = packed.shape[1] * 4
-                t = jax.vmap(lambda p_: ternary.unpack_ternary_2bit(p_, K)
-                             )(packed)
-                g[name] = ternary.ternary_dequant(t, scale)
+                g[name] = ternary.ternary_dequant(_ternary_unpack(packed),
+                                                  scale)
         for (hi, lo), buf_key in DUAL_PAIRS:
             if buf_key in g:
                 buf = g.pop(buf_key)

@@ -22,6 +22,7 @@ import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ModelConfig
+from repro.models import augment
 from repro.models import layers as L
 from repro.models.params import PSpec
 
@@ -117,15 +118,16 @@ def moe_ffn(cfg: ModelConfig, p: dict, x: jax.Array, rules=None,
                                           if rules is not None else None)
     xe = cst(xe, P(e_ax, g2, None, None))
 
-    # --- expert FFN (batched over E) ---
+    # --- expert FFN (batched over E; banks may be ternary-packed —
+    # augment.expert_proj consumes them as stored, per expert) ---
     if cfg.act == "swiglu":
-        h = jax.nn.silu(jnp.einsum("egcd,edf->egcf", xe, p["w_gate"]))
-        h = h * jnp.einsum("egcd,edf->egcf", xe, p["w_up"])
+        h = jax.nn.silu(augment.expert_proj(p, "w_gate", xe, cfg.amc))
+        h = h * augment.expert_proj(p, "w_up", xe, cfg.amc)
     else:
-        h = jax.nn.gelu(jnp.einsum("egcd,edf->egcf", xe, p["w_up"]),
+        h = jax.nn.gelu(augment.expert_proj(p, "w_up", xe, cfg.amc),
                         approximate=True)
     h = cst(h, P(e_ax, g2, None, f_ax))
-    ye = jnp.einsum("egcf,efd->egcd", h, p["w_down"])       # (E,G,C,d)
+    ye = augment.expert_proj(p, "w_down", h, cfg.amc)       # (E,G,C,d)
     ye = cst(ye, P(e_ax, g2, None, None))
 
     # --- combine: expert-sharded slots -> group-sharded tokens (a2a) ---

@@ -85,13 +85,13 @@ def _project_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions):
     if "wkv_buf" in p:
         # dual-plane: wk (static nibble) + wv (dynamic nibble) share ONE
         # uint8 stream — one HBM read, two MXU dots
-        q = augment.proj(p, "wq", h)
+        q = augment.proj(p, "wq", h, cfg.amc)
         k, v = augment.dual_apply(h, p["wkv_buf"], p["wk_scale"],
-                                  p["wv_scale"])
+                                  p["wv_scale"], amc=cfg.amc)
     else:
-        q = augment.proj(p, "wq", h)
-        k = augment.proj(p, "wk", h)
-        v = augment.proj(p, "wv", h)
+        q = augment.proj(p, "wq", h, cfg.amc)
+        k = augment.proj(p, "wk", h, cfg.amc)
+        v = augment.proj(p, "wv", h, cfg.amc)
     if "bq" in p:
         q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
     q = q.reshape(B, S, H, hd)
@@ -111,7 +111,7 @@ def attn_block(cfg: ModelConfig, p: dict, x: jax.Array, positions,
     B, S, _ = x.shape
     q, k, v = _project_qkv(cfg, p, x, positions)
     o = L.attention(q, k, v, causal=causal, window=window, q_chunk=q_chunk)
-    o = augment.proj(p, "wo", o.reshape(B, S, -1))
+    o = augment.proj(p, "wo", o.reshape(B, S, -1), cfg.amc)
     return o.astype(x.dtype), (k, v)
 
 
@@ -178,7 +178,7 @@ def attn_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
             vd = unpack(v_cache, v_scale)
             o = L.decode_attention_kvmajor(q, kd, vd, positions,
                                            window=window)
-    o = augment.proj(p, "wo", o.reshape(B, 1, -1))
+    o = augment.proj(p, "wo", o.reshape(B, 1, -1), cfg.amc)
     return o.astype(x.dtype), new_cache
 
 
@@ -271,7 +271,7 @@ def attn_block_decode_paged(cfg: ModelConfig, p: dict, x: jax.Array,
     else:  # reference: gather + dense attention
         kd, vd = _paged_gather(cfg, new_arenas, meta)
         o = L.decode_attention_kvmajor(q, kd, vd, positions)
-    o = augment.proj(p, "wo", o.reshape(B, 1, -1))
+    o = augment.proj(p, "wo", o.reshape(B, 1, -1), cfg.amc)
     return o.astype(x.dtype), new_arenas
 
 
@@ -291,7 +291,7 @@ def attn_block_prefill_paged(cfg: ModelConfig, p: dict, x: jax.Array,
                                 meta, write)
     kd, vd = _paged_gather(cfg, new_arenas, meta)
     o = L.prefill_attention_kvmajor(q, kd, vd, starts)
-    o = augment.proj(p, "wo", o.reshape(B, C, -1))
+    o = augment.proj(p, "wo", o.reshape(B, C, -1), cfg.amc)
     return o.astype(x.dtype), new_arenas
 
 
@@ -344,7 +344,7 @@ def attn_block_prefill(cfg: ModelConfig, p: dict, x: jax.Array,
         kd = unpack(k_cache, k_scale)
         vd = unpack(v_cache, v_scale)
         o = L.prefill_attention_kvmajor(q, kd, vd, starts)
-    o = augment.proj(p, "wo", o.reshape(B, C, -1))
+    o = augment.proj(p, "wo", o.reshape(B, C, -1), cfg.amc)
     return o.astype(x.dtype), new_cache
 
 

@@ -34,6 +34,7 @@ import numpy as np
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import amc
 from repro.distributed.sharding import Rules
+from repro.imc import energy as imc_energy
 from repro.launch.mesh import mesh_context
 from repro.models import augment
 from repro.models import model as M
@@ -67,16 +68,21 @@ class ServeEngine:
                  pool_pages_normal: Optional[int] = None,
                  pool_pages_packed: Optional[int] = None,
                  retention_steps: Optional[int] = None,
-                 paged: Optional[bool] = None):
+                 paged: Optional[bool] = None,
+                 matmul_impl: Optional[str] = None,
+                 imc_abits: Optional[int] = None):
         # engine-level AMC knobs override the config (e.g. serve a dense
         # checkpoint with ternary weights without touching the arch file)
         if weight_mode is not None or kv_mode is not None \
-                or pool_mode is not None:
+                or pool_mode is not None or matmul_impl is not None \
+                or imc_abits is not None:
             cfg = dataclasses.replace(cfg, amc=dataclasses.replace(
                 cfg.amc,
                 weight_mode=weight_mode or cfg.amc.weight_mode,
                 kv_mode=kv_mode or cfg.amc.kv_mode,
-                pool_mode=pool_mode or cfg.amc.pool_mode))
+                pool_mode=pool_mode or cfg.amc.pool_mode,
+                matmul_impl=matmul_impl or cfg.amc.matmul_impl,
+                imc_abits=imc_abits or cfg.amc.imc_abits))
         self.cfg, self.mesh = cfg, mesh
         self.max_batch, self.max_seq = max_batch, max_seq
         self.prefill_chunk = min(prefill_chunk, max_seq)
@@ -144,6 +150,85 @@ class ServeEngine:
         self.outputs: dict[int, list[int]] = {}
         self.dispatch_count = 0   # jitted device dispatches (prefill+decode)
         self.step_idx = 0         # decode-step clock (retention time base)
+        # array-level event/energy ledger (imc/energy.py): weight-side
+        # events follow cfg.amc.matmul_impl, cache-side events follow the
+        # per-page mode (Normal pages cost 6T reads, Augmented pages the
+        # 8T dynamic reads). Analytic, host-side — per real dispatch.
+        self.energy_ledger = imc_energy.ImcEventLedger()
+        self._account = cfg.family in ("dense", "moe")
+        self._refresh_bytes_seen = 0
+
+    def _sync_refresh_events(self) -> None:
+        """Fold pool refresh traffic accrued since the last sync into the
+        ledger's "refresh" group, so energy totals include maintenance."""
+        if not (self.paged and self._account):
+            return
+        rb = self.pool.stats["refresh_bytes"]
+        if rb > self._refresh_bytes_seen:
+            self.energy_ledger.add(
+                imc_energy.refresh_events(rb - self._refresh_bytes_seen),
+                "refresh")
+            self._refresh_bytes_seen = rb
+
+    # -- array event accounting ------------------------------------------------
+
+    def _kv_value_counts(self, rows: np.ndarray,
+                         lengths: np.ndarray) -> tuple[int, int]:
+        """(normal, augmented) cache VALUES held by `rows` up to
+        `lengths` tokens — split by page mode for the paged pool, by
+        kv_mode for the contiguous cache."""
+        cfg = self.cfg
+        per_tok = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
+        if rows.size == 0:
+            return 0, 0
+        if not self.paged:
+            tok = int(lengths.sum())
+            if cfg.amc.kv_mode == "normal":
+                return tok * per_tok, 0
+            return 0, tok * per_tok
+        page = cfg.amc.page_size
+        tok_per_page = np.clip(
+            lengths[:, None] - np.arange(self.pool.max_pages)[None, :] * page,
+            0, page)
+        alloc = self.pool.allocated[rows]
+        modes = self.pool.page_mode[rows]
+        n_norm = int((tok_per_page * (alloc & (modes == 0))).sum())
+        n_aug = int((tok_per_page * (alloc & (modes == 1))).sum())
+        return n_norm * per_tok, n_aug * per_tok
+
+    def _account_dispatch(self, rows: np.ndarray, n_new: int,
+                          read_lengths: Optional[np.ndarray],
+                          write_starts: np.ndarray) -> None:
+        """Fold one dispatch into the event ledger: weight-side matmul
+        events for `n_new` useful tokens per row, cache reads over
+        `read_lengths` (None for write-only accounting), and the write of
+        the `n_new` tokens from `write_starts`, costed by the mode of the
+        page each token lands in."""
+        if not self._account or rows.size == 0:
+            return
+        cfg, a = self.cfg, self.cfg.amc
+        n_tok = int(rows.size) * n_new
+        self.energy_ledger.add(
+            imc_energy.decode_matmul_events(cfg, n_tok), "weights")
+        if read_lengths is not None:
+            nn, na = self._kv_value_counts(rows, read_lengths)
+            self.energy_ledger.add(
+                imc_energy.kv_read_events(nn, na, aug_bits=a.aug_bits),
+                "kv_read")
+        per_tok = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
+        if self.paged:
+            pos = write_starts[:, None] + np.arange(n_new)[None, :]
+            lp = np.minimum(pos // a.page_size, self.pool.max_pages - 1)
+            mode = self.pool.page_mode[rows[:, None], lp]
+            alive = self.pool.allocated[rows[:, None], lp]
+            wn = int((alive & (mode == 0)).sum()) * per_tok
+            wa = int((alive & (mode == 1)).sum()) * per_tok
+        else:
+            wn, wa = ((n_tok * per_tok, 0) if a.kv_mode == "normal"
+                      else (0, n_tok * per_tok))
+        self.energy_ledger.add(
+            imc_energy.kv_write_events(wn, wa, aug_bits=a.aug_bits),
+            "kv_write")
 
     # -- cache view -----------------------------------------------------------
 
@@ -333,6 +418,9 @@ class ServeEngine:
                                     {"tokens": jnp.asarray(tok),
                                      "positions": jnp.asarray(positions),
                                      "write_mask": jnp.asarray(write_mask)})
+            self._account_dispatch(np.array([slot]), n,
+                                   np.array([p + n]), np.array([p]))
+            self.energy_ledger.note_tokens(n)
             self.positions[slot] += n
             if self.paged:
                 page = self.cfg.amc.page_size
@@ -371,6 +459,10 @@ class ServeEngine:
             self.pool.note_writes(np.array([slot]),
                                   np.array([self.positions[slot] // page]),
                                   self.step_idx)
+        self._account_dispatch(np.array([slot]), 1,
+                               np.array([self.positions[slot] + 1]),
+                               np.array([self.positions[slot]]))
+        self.energy_ledger.note_tokens(1)
         self.positions[slot] += 1
         return int(jnp.argmax(logits[slot, -1]))
 
@@ -409,6 +501,7 @@ class ServeEngine:
         self._admit()
         if self.paged:
             self.scheduler.refresh_pass(self.step_idx)
+            self._sync_refresh_events()
             self._ensure_decode_capacity()
         tokens = np.where(self.active, self.last_token, 0
                           ).astype(np.int32)[:, None]
@@ -417,6 +510,10 @@ class ServeEngine:
         if self.paged:
             batch["write_mask"] = jnp.asarray(self.active)
         logits = self._dispatch(self._decode, batch)
+        rows = np.flatnonzero(self.active)
+        self._account_dispatch(rows, 1, self.positions[rows] + 1,
+                               self.positions[rows])
+        self.energy_ledger.note_tokens(rows.size)
         arg = np.asarray(jnp.argmax(logits[:, -1], axis=-1)).astype(np.int32)
         # vectorized slot bookkeeping: no per-slot Python for the numeric
         # state, only the per-request output append below
@@ -488,6 +585,22 @@ class ServeEngine:
                                / (weight_phys + cache_phys),
             "dispatches": self.dispatch_count,
         }
+        # array-level event/energy accounting (imc/energy.py): weight-side
+        # events follow matmul_impl (IMC wordline/bitline/ADC vs fetch),
+        # cache reads are split by page mode — Normal pages cost 6T read
+        # events, Augmented pages the 8T dynamic-read events (the paper's
+        # Tables III/IV structure)
+        E = imc_energy.EVENT_ENERGY_FJ
+        self._sync_refresh_events()
+        imc = self.energy_ledger.describe()
+        imc["matmul_impl"] = a.matmul_impl
+        imc["imc_abits"] = a.imc_abits
+        imc["kv_read_fj_per_value_normal_mode"] = 16 * E["read_6t"]
+        imc["kv_read_fj_per_value_augmented_mode"] = (
+            a.aug_bits * E["read_8t_dynamic"])
+        imc["refresh_energy_fj"] = imc["groups"].get(
+            "refresh", {}).get("energy_fj", 0.0)
+        out["imc"] = imc
         if self.paged:
             pool = self.pool.describe()
             out["pool"] = pool

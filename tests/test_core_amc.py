@@ -47,6 +47,7 @@ except ImportError:
             return run                        # treats params as fixtures
         return deco
 
+from repro.core import amc
 from repro.core import dual_plane as dp
 from repro.core import quant, ternary
 from repro.core.amc import AugmentedStore, FILOViolation, Mode, RetentionExpired
@@ -185,6 +186,66 @@ def test_store_capacity_factors():
     assert st_.physical_bytes() == 160      # 1 byte per logical index
     st_.set_mode(Mode.AUGMENTED_TERNARY)
     assert st_.capacity_factor() == 10.0    # base3: 1.6 bits/value
+
+
+# ---------------------------------------------------------------------------
+# capacity math: mode_physical_bytes and capacity_factor must agree for
+# every mode x ternary format (property-based)
+# ---------------------------------------------------------------------------
+
+def _pack_granule(mode: Mode, fmt: str) -> int:
+    if mode is Mode.AUGMENTED_TERNARY:
+        return 5 if fmt == "base3" else 4
+    return 1
+
+
+@given(st.integers(1, 1 << 20), st.sampled_from(["base3", "2bit"]))
+@settings(max_examples=50, deadline=None)
+def test_capacity_factor_and_physical_bytes_agree(n, fmt):
+    """For every mode: capacity_factor * bits_per_value == 16 (the bf16
+    Normal word), and at packing-granule multiples the byte count equals
+    logical_values * bits_per_value / 8 exactly. One AUGMENTED_DUAL byte
+    holds TWO logical int4 values (static + dynamic plane)."""
+    for mode in Mode:
+        bpv = amc.mode_bits_per_value(mode, fmt)
+        assert amc.capacity_factor(mode, fmt) * bpv == pytest.approx(16.0)
+        g = _pack_granule(mode, fmt)
+        nn = -(-n // g) * g
+        phys = amc.mode_physical_bytes(nn, mode, fmt)
+        values = 2 * nn if mode is Mode.AUGMENTED_DUAL else nn
+        assert phys * 8 == pytest.approx(values * bpv), (mode, fmt, nn)
+        # non-multiples may pay at most one extra packed byte (ceil)
+        exact = amc.mode_physical_bytes(n, mode, fmt)
+        lower = (2 * n if mode is Mode.AUGMENTED_DUAL else n) * bpv / 8
+        assert lower <= exact < lower + 1 + 1e-9, (mode, fmt, n)
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_base3_pack_roundtrip_shapes_property(seed, kmul, cols):
+    """base-3 trit packing round-trips over arbitrary (5k, cols) shapes."""
+    K = 5 * kmul
+    k = jax.random.PRNGKey(seed)
+    t = jax.random.randint(k, (K, cols), -1, 2).astype(jnp.int8)
+    r = ternary.unpack_ternary_base3(ternary.pack_ternary_base3(t), K)
+    assert (np.asarray(r) == np.asarray(t)).all()
+    # the packed byte really holds 5 trits: physical bytes match the
+    # capacity ledger
+    packed = ternary.pack_ternary_base3(t)
+    assert packed.size == amc.mode_physical_bytes(
+        t.size, Mode.AUGMENTED_TERNARY, "base3")
+
+
+@given(st.integers(0, 2**31 - 1), st.integers(1, 12), st.integers(1, 8))
+@settings(max_examples=25, deadline=None)
+def test_2bit_pack_roundtrip_shapes_property(seed, kmul, cols):
+    K = 4 * kmul
+    k = jax.random.PRNGKey(seed)
+    t = jax.random.randint(k, (K, cols), -1, 2).astype(jnp.int8)
+    r = ternary.unpack_ternary_2bit(ternary.pack_ternary_2bit(t), K)
+    assert (np.asarray(r) == np.asarray(t)).all()
+    assert ternary.pack_ternary_2bit(t).size == amc.mode_physical_bytes(
+        t.size, Mode.AUGMENTED_TERNARY, "2bit")
 
 
 # ---------------------------------------------------------------------------

@@ -1,0 +1,357 @@
+"""IMC subsystem: bit-serial kernel goldens (bit-exact vs the packed
+matmul kernels at 8-bit activations), oracle parity across formats and
+precisions, the array event/energy model, and engine-level routing +
+accounting (interpret mode on CPU)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import AMCConfig
+from repro.core import quant, ternary
+from repro.imc import BitSerialArray, ImcEventLedger, energy
+from repro.kernels import ops, ref
+from repro.kernels.imc_dot import mag_bits, qmax_for, quantize_activations
+
+
+def _int_activations(rng, M, K, q=127):
+    """Integer-valued bf16 activations with row absmax == q (the abits
+    qmax), so the activation scale is exactly 1.0, quantization is exact,
+    and the IMC path is bit-exact."""
+    x = rng.integers(-q, q + 1, size=(M, K)).astype(np.float32)
+    x[:, 0] = q
+    return jnp.asarray(x, jnp.bfloat16)
+
+
+def _ternary_weights(key, K, N):
+    t, scale = ternary.ternarize(jax.random.normal(key, (K, N)))
+    return ternary.pack_ternary_2bit(t), scale
+
+
+# ---------------------------------------------------------------------------
+# bit-exact goldens vs the packed matmul kernels (the acceptance bar)
+# ---------------------------------------------------------------------------
+
+def test_imc_dot_bit_exact_vs_ternary_matmul():
+    M, K, N = 128, 512, 256
+    wp, scale = _ternary_weights(jax.random.PRNGKey(0), K, N)
+    x = _int_activations(np.random.default_rng(0), M, K)
+    y = ops.imc_dot(x, wp, scale, fmt="ternary", abits=8)
+    golden = ops.ternary_matmul(x, wp, scale)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(golden, np.float32))
+
+
+def test_imc_dual_dot_bit_exact_vs_dual_plane_matmul():
+    M, K, N = 128, 256, 256
+    k = jax.random.PRNGKey(1)
+    qh, sh = quant.quantize_int4(jax.random.normal(k, (K, N)), axis=0)
+    ql, sl = quant.quantize_int4(
+        jax.random.normal(jax.random.fold_in(k, 1), (K, N)), axis=0)
+    buf = quant.pack_int4_pair(qh, ql)
+    x = _int_activations(np.random.default_rng(1), M, K)
+    yh, yl = ops.imc_dual_dot(x, buf, sh, sl, abits=8)
+    gh, gl = ops.dual_plane_matmul(x, buf, sh, sl)
+    np.testing.assert_array_equal(np.asarray(yh, np.float32),
+                                  np.asarray(gh, np.float32))
+    np.testing.assert_array_equal(np.asarray(yl, np.float32),
+                                  np.asarray(gl, np.float32))
+
+
+# ---------------------------------------------------------------------------
+# oracle parity across formats, precisions and blocks
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fmt", ["ternary", "int4", "int8"])
+@pytest.mark.parametrize("abits", [1, 4, 8])
+def test_imc_dot_matches_oracle_exact(fmt, abits):
+    """Bit-exact kernel==oracle wherever activation quantization is exact
+    (integer rows at the precision's qmax -> unit scale)."""
+    M, K, N = 128, 256, 128
+    key = jax.random.PRNGKey(2)
+    if fmt == "ternary":
+        wp, scale = _ternary_weights(key, K, N)
+    elif fmt == "int4":
+        q, scale = quant.quantize_int4(jax.random.normal(key, (K, N)),
+                                       axis=0)
+        wp = quant.pack_int4_pair(q[0::2], q[1::2])
+    else:
+        wp, scale = quant.quantize_int8(jax.random.normal(key, (K, N)),
+                                        axis=0)
+    x = _int_activations(np.random.default_rng(2), M, K, q=qmax_for(abits))
+    y = ops.imc_dot(x, wp, scale, fmt=fmt, abits=abits)
+    r = ref.imc_dot_ref(x, wp, scale, fmt=fmt, abits=abits)
+    np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                  np.asarray(r, np.float32))
+
+
+def test_imc_dot_matches_oracle_random_inputs():
+    """General bf16 inputs: the jitted wrapper's quantization may differ
+    from the eager oracle's by 1 ulp on rounding ties, so tolerance."""
+    M, K, N = 128, 256, 128
+    wp, scale = _ternary_weights(jax.random.PRNGKey(3), K, N)
+    x = jax.random.normal(jax.random.PRNGKey(4), (M, K), jnp.bfloat16)
+    y = ops.imc_dot(x, wp, scale, fmt="ternary", abits=8)
+    r = ref.imc_dot_ref(x, wp, scale, fmt="ternary", abits=8)
+    assert ref.rel_err(y, r) < 0.02
+
+
+def test_imc_dot_block_sweep():
+    M, K, N = 256, 1024, 256
+    wp, scale = _ternary_weights(jax.random.PRNGKey(4), K, N)
+    x = _int_activations(np.random.default_rng(5), M, K)
+    r = ref.imc_dot_ref(x, wp, scale, fmt="ternary", abits=8)
+    for bm, bk, bn in ((64, 256, 64), (128, 512, 256), (128, 1024, 128)):
+        y = ops.imc_dot(x, wp, scale, fmt="ternary", abits=8, bm=bm, bk=bk,
+                        bn=bn)
+        np.testing.assert_array_equal(np.asarray(y, np.float32),
+                                      np.asarray(r, np.float32))
+
+
+def test_imc_dual_dot_matches_oracle():
+    M, K, N = 128, 256, 128
+    k = jax.random.PRNGKey(6)
+    qh, sh = quant.quantize_int4(jax.random.normal(k, (K, N)), axis=0)
+    ql, sl = quant.quantize_int4(
+        jax.random.normal(jax.random.fold_in(k, 1), (K, N)), axis=0)
+    buf = quant.pack_int4_pair(qh, ql)
+    for abits in (4, 8):
+        x = _int_activations(np.random.default_rng(6), M, K,
+                             q=qmax_for(abits))
+        yh, yl = ops.imc_dual_dot(x, buf, sh, sl, abits=abits)
+        rh, rl = ref.imc_dual_dot_ref(x, buf, sh, sl, abits=abits)
+        np.testing.assert_array_equal(np.asarray(yh, np.float32),
+                                      np.asarray(rh, np.float32))
+        np.testing.assert_array_equal(np.asarray(yl, np.float32),
+                                      np.asarray(rl, np.float32))
+
+
+def test_imc_precision_reconfigurable_monotone():
+    """arXiv:2008.03378: more activation bits -> strictly better fidelity
+    (on a fixed random problem)."""
+    M, K, N = 128, 512, 128
+    wp, scale = _ternary_weights(jax.random.PRNGKey(7), K, N)
+    x = jax.random.normal(jax.random.PRNGKey(8), (M, K), jnp.bfloat16)
+    dense = ref.ternary_matmul_ref(x, wp, scale)
+    errs = [ref.rel_err(ops.imc_dot(x, wp, scale, fmt="ternary", abits=a),
+                        dense) for a in (1, 4, 8)]
+    assert errs[2] < errs[1] < errs[0], errs
+
+
+def test_quantize_activations_ranges():
+    x = jax.random.normal(jax.random.PRNGKey(9), (8, 64), jnp.bfloat16)
+    for abits in (1, 4, 8):
+        xq, xs = quantize_activations(x, abits)
+        q = qmax_for(abits)
+        assert int(jnp.max(jnp.abs(xq.astype(jnp.int32)))) <= q
+        assert mag_bits(abits) == (1 if abits == 1 else abits - 1)
+        # dequantized activations approximate the input
+        err = ref.rel_err(xq.astype(jnp.float32) * xs, x)
+        assert err < 1.0 / max(q - 1, 1) + 0.05, (abits, err)
+
+
+# ---------------------------------------------------------------------------
+# event/energy model invariants
+# ---------------------------------------------------------------------------
+
+def test_imc_event_counts_scale_with_precision():
+    e4 = energy.imc_dot_events(2, 64, 32, abits=4)
+    e8 = energy.imc_dot_events(2, 64, 32, abits=8)
+    assert e4["wordline"] == 2 * 64 * 3 and e8["wordline"] == 2 * 64 * 7
+    assert e4["adc"] == 2 * 32 * 3
+    assert energy.energy_fj(e4) < energy.energy_fj(e8)
+
+
+def test_dual_plane_shares_wordlines():
+    """ONE wordline stream drives BOTH planes: 2x bitline/ADC, 1x WL."""
+    e1 = energy.imc_dot_events(1, 64, 32, abits=8, planes=1)
+    e2 = energy.imc_dot_events(1, 64, 32, abits=8, planes=2)
+    assert e2["wordline"] == e1["wordline"]
+    assert e2["bitline"] == 2 * e1["bitline"]
+    assert e2["adc"] == 2 * e1["adc"]
+
+
+def test_augmented_reads_cost_differently_from_normal():
+    """Tables III/IV structure: augmented cells cost MORE per cell but
+    fewer cells per value -> cheaper per value."""
+    E = energy.EVENT_ENERGY_FJ
+    assert E["read_8t_dynamic"] > E["read_6t"]
+    assert E["read_7t"] > E["read_6t"]
+    per_value_normal = 16 * E["read_6t"]
+    per_value_int4 = 4 * E["read_8t_dynamic"]
+    per_value_trit = 1 * E["read_7t"]
+    assert per_value_int4 < per_value_normal
+    assert per_value_trit < per_value_int4
+    ev = energy.kv_read_events(10, 10, aug_bits=4)
+    assert ev["read_6t"] == 160 and ev["read_8t_dynamic"] == 40
+
+
+def test_matmul_events_by_impl():
+    # packed impl fetches the array; imc impl computes in it
+    fetch = energy.matmul_events(4, 256, 128, storage="ternary",
+                                 impl="packed")
+    imc = energy.matmul_events(4, 256, 128, storage="ternary", impl="imc",
+                               abits=8)
+    assert fetch == {"read_7t": 256 * 128}
+    assert "wordline" in imc and "read_7t" not in imc
+    # dense storage has no resident array: imc falls back to the fetch
+    dense = energy.matmul_events(4, 256, 128, storage="dense", impl="imc")
+    assert dense == {"read_6t": 16 * 256 * 128}
+
+
+def test_bit_serial_array_logs_events():
+    w = jax.random.normal(jax.random.PRNGKey(10), (256, 128))
+    ledger = ImcEventLedger()
+    arr = BitSerialArray.from_dense(w, fmt="ternary", abits=8,
+                                    ledger=ledger)
+    x = jax.random.normal(jax.random.PRNGKey(11), (8, 256), jnp.bfloat16)
+    y = arr.dot(x)
+    assert y.shape == (8, 128)
+    d = ledger.describe()
+    assert d["groups"]["imc_dot"]["events"]["wordline"] == 8 * 256 * 7
+    assert d["energy_fj_total"] > 0
+    # dual array: one WL stream, two outputs
+    arr2 = BitSerialArray.from_dense_pair(
+        w, jax.random.normal(jax.random.PRNGKey(12), (256, 128)),
+        ledger=ImcEventLedger())
+    yh, yl = arr2.dot(x)
+    assert yh.shape == yl.shape == (8, 128)
+    ev = arr2.ledger.counts
+    assert ev[("imc_dot", "bitline")] == 2 * ev[("imc_dot", "wordline")] \
+        * 128 // 256
+
+
+def test_augmented_store_access_events():
+    from repro.core.amc import AugmentedStore, Mode
+    st_ = AugmentedStore((8, 8))
+    st_.write_static(jnp.ones((8, 8)))
+    assert st_.events == {"write_6t": 16 * 64}
+    st_.set_mode(Mode.AUGMENTED_DUAL)
+    st_.push_dynamic(jnp.ones((8, 8)) * 0.5)
+    _ = st_.pop_dynamic()
+    assert st_.events["write_8t_dynamic"] == 4 * 64
+    assert st_.events["read_8t_dynamic"] == 4 * 64
+    assert st_.energy_fj() > 0
+
+
+# ---------------------------------------------------------------------------
+# engine-level routing + accounting
+# ---------------------------------------------------------------------------
+
+def _engine(**amc_kw):
+    from repro.launch.mesh import make_local_mesh
+    from repro.serve import ServeEngine
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    return ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=64,
+                       prefill_chunk=16, **amc_kw)
+
+
+def test_engine_imc_routing_decodes_and_accounts():
+    from repro.serve import Request
+    eng = _engine(weight_mode="ternary", matmul_impl="imc", imc_abits=8)
+    out = eng.generate([Request(prompt=np.array([3, 5, 7], np.int32),
+                                max_new_tokens=4, id=0)])
+    assert len(out[0]) == 4
+    imc = eng.stats()["imc"]
+    assert imc["matmul_impl"] == "imc" and imc["imc_abits"] == 8
+    w = imc["groups"]["weights"]["events"]
+    assert "wordline" in w and "adc" in w      # in-array compute
+    assert imc["energy_fj_total"] > 0 and imc["tokens"] > 0
+    assert imc["energy_pj_per_token"] > 0
+
+
+def test_engine_imc_logits_close_to_packed():
+    """abits=8 activation quantization is a small perturbation of the
+    packed kernel path on the same packed weights."""
+    import jax as _jax
+    from repro.models import model as M
+    from repro.models.params import init_params
+    from repro.models import augment
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    cfg_p = dataclasses.replace(cfg, amc=AMCConfig(weight_mode="ternary"))
+    cfg_i = dataclasses.replace(cfg, amc=AMCConfig(weight_mode="ternary",
+                                                   matmul_impl="imc",
+                                                   imc_abits=8))
+    dense = init_params(M.abstract_params(cfg), _jax.random.PRNGKey(0))
+    packed = augment.augment_params(cfg_p, dense)
+    tokens = _jax.random.randint(_jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab)
+    y_p = M.forward(cfg_p, packed, {"tokens": tokens})
+    y_i = M.forward(cfg_i, packed, {"tokens": tokens})
+    assert ref.rel_err(y_i, y_p) < 0.1
+
+
+def test_engine_kv_read_event_classes_follow_page_mode():
+    """Normal pools bill read_6t for cache reads, augmented pools the 8T
+    dynamic-read events — at different per-value cost (acceptance)."""
+    from repro.serve import Request
+    req = Request(prompt=np.array([3, 5, 7], np.int32), max_new_tokens=3,
+                  id=0)
+    eng_n = _engine(kv_mode="normal")
+    eng_a = _engine(kv_mode="int4")
+    eng_n.generate([req])
+    eng_a.generate([Request(prompt=req.prompt.copy(), max_new_tokens=3,
+                            id=0)])
+    kv_n = eng_n.stats()["imc"]["groups"]["kv_read"]["events"]
+    kv_a = eng_a.stats()["imc"]["groups"]["kv_read"]["events"]
+    assert set(kv_n) == {"read_6t"}
+    assert set(kv_a) == {"read_8t_dynamic"}
+    sn, sa = eng_n.stats()["imc"], eng_a.stats()["imc"]
+    assert sn["kv_read_fj_per_value_normal_mode"] \
+        != sa["kv_read_fj_per_value_augmented_mode"]
+
+
+def test_refresh_traffic_folds_into_energy_total():
+    """Pool refresh maintenance must show up in the ledger's "refresh"
+    group and hence in energy_fj_total (not as a side number)."""
+    from repro.serve import Request
+    eng = _engine(kv_mode="int4", retention_steps=2)
+    # span several pages (page_size=16) so non-tail pages age and expire
+    eng.generate([Request(prompt=np.array([3, 5, 7], np.int32),
+                          max_new_tokens=40, id=0)])
+    imc = eng.stats()["imc"]
+    assert eng.pool.stats["refreshes"] > 0
+    refresh_fj = imc["groups"]["refresh"]["energy_fj"]
+    assert refresh_fj > 0 and imc["refresh_energy_fj"] == refresh_fj
+    others = sum(d["energy_fj"] for g, d in imc["groups"].items()
+                 if g != "refresh")
+    assert imc["energy_fj_total"] == pytest.approx(others + refresh_fj)
+
+
+def test_moe_ternary_expert_banks_pack_and_match_golden():
+    """Ternary mode packs the 4-D expert banks; the packed forward matches
+    the dequantized dense golden."""
+    import jax as _jax
+    from repro.models import augment, model as M
+    from repro.models.params import init_params
+    cfg = get_arch("qwen3-moe-30b-a3b").reduced()
+    cfg_t = dataclasses.replace(cfg, amc=AMCConfig(weight_mode="ternary"))
+    dense = init_params(M.abstract_params(cfg), _jax.random.PRNGKey(0))
+    packed = augment.augment_params(cfg_t, dense)
+    moe_p = packed["layers"]["moe"]
+    assert "w_up_packed" in moe_p and "w_up" not in moe_p
+    assert moe_p["w_up_packed"].dtype == jnp.uint8
+    assert moe_p["w_up_packed"].shape[-2] * 4 == cfg_t.d_model
+    # pspec view matches the packed tree
+    ps = augment.augment_pspecs(cfg_t, M.abstract_params(cfg_t))
+    assert ps["layers"]["moe"]["w_up_packed"].shape \
+        == moe_p["w_up_packed"].shape
+    deq = augment.dequant_params(cfg_t, packed)
+    tokens = _jax.random.randint(_jax.random.PRNGKey(1), (2, 8), 0,
+                                 cfg.vocab)
+    y_pack = M.forward(cfg_t, packed, {"tokens": tokens})
+    cfg_n = dataclasses.replace(cfg, amc=AMCConfig(weight_mode="normal"))
+    y_deq = M.forward(cfg_n, deq, {"tokens": tokens})
+    assert ref.rel_err(y_pack, y_deq) < 0.03
+
+
+def test_unknown_matmul_impl_raises():
+    from repro.models import augment
+    amc = AMCConfig(matmul_impl="nonsense")
+    x = jnp.ones((4, 8), jnp.bfloat16)
+    wp, scale = _ternary_weights(jax.random.PRNGKey(13), 8, 8)
+    with pytest.raises(ValueError, match="matmul_impl"):
+        augment.ternary_apply(x, wp, scale, amc=amc)
