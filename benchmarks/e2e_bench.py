@@ -122,7 +122,7 @@ def bench_serve_prefill_decode() -> dict:
         "config": {"arch": "qwen1.5-0.5b(reduced)", "prefill_chunk": chunk,
                    "max_batch": 2, "max_seq": 64, "kv_mode": cfg.amc.kv_mode,
                    "weight_mode": cfg.amc.weight_mode,
-                   "pool_mode": eng.pool.pool_mode if eng.paged else None},
+                   "pool_mode": eng.pool.pool_mode},
         "prefill": {"tokens": prefill_tokens,
                     "dispatches": prefill_dispatches,
                     "per_token_path_dispatches": prefill_tokens,

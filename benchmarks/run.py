@@ -3,42 +3,60 @@ Prints ``name,us_per_call,derived`` CSV (see DESIGN.md SS7 experiment index)
 and writes BENCH_serve.json (prefill/decode throughput, the kv_mode x
 weight_mode serving matrix + modeled HBM traffic), BENCH_kernels.json
 (per-kernel modeled bytes + Pallas-interpret parity),
-BENCH_scheduler.json (pool modes x offered load), BENCH_paper_tables.json
-(the Tables I-VI analog rows, structured) and BENCH_imc.json (storage
-matrix x activation precision: modeled energy/token + throughput) so the
-serving perf trajectory is tracked across PRs.
+BENCH_scheduler.json (pool modes x offered load + the per-family arch
+sweep), BENCH_paper_tables.json (the Tables I-VI analog rows, structured)
+and BENCH_imc.json (storage matrix x activation precision: modeled
+energy/token + throughput) so the serving perf trajectory is tracked
+across PRs.
+
+A failing emitter no longer takes the others down silently: every section
+runs, tracebacks are printed, the surviving payloads are written, and the
+process exits non-zero if ANY emitter threw — CI fails loudly instead of
+uploading a quietly truncated artifact set.
 """
 from __future__ import annotations
 
 import json
 import os
 import sys
+import traceback
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     from benchmarks import e2e_bench, imc_bench, kernels_bench, paper_tables
     from benchmarks import scheduler_bench
-    print("# -- paper tables I-VI analogs --")
-    tables = paper_tables.run_all()
-    print("# -- pallas kernels (bytes/roofline; CPU ref wall-time) --")
-    kernels = kernels_bench.run_all()
-    print("# -- end-to-end (reduced configs, CPU) --")
-    serve = e2e_bench.run_all()
-    print("# -- continuous-batching scheduler (pool modes x offered load) --")
-    sched = scheduler_bench.run_all()
-    print("# -- in-memory compute (storage matrix x activation precision) --")
-    imc = imc_bench.run_all()
+    sections = (
+        ("BENCH_paper_tables.json", "paper tables I-VI analogs",
+         paper_tables.run_all),
+        ("BENCH_kernels.json", "pallas kernels (bytes/roofline)",
+         kernels_bench.run_all),
+        ("BENCH_serve.json", "end-to-end (reduced configs, CPU)",
+         e2e_bench.run_all),
+        ("BENCH_scheduler.json",
+         "continuous-batching scheduler (pool modes x load x arch)",
+         scheduler_bench.run_all),
+        ("BENCH_imc.json", "in-memory compute (storage x precision)",
+         imc_bench.run_all),
+    )
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    for name, payload in (("BENCH_serve.json", serve),
-                          ("BENCH_kernels.json", kernels),
-                          ("BENCH_scheduler.json", sched),
-                          ("BENCH_paper_tables.json", tables),
-                          ("BENCH_imc.json", imc)):
+    failures: list[str] = []
+    for name, title, emit in sections:
+        print(f"# -- {title} --")
+        try:
+            payload = emit()
+        except Exception:
+            failures.append(name)
+            print(f"# EMITTER FAILED: {name}", file=sys.stderr)
+            traceback.print_exc()
+            continue
         out = os.path.join(root, name)
         with open(out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {out}")
+    if failures:
+        print(f"# FAILED emitters: {', '.join(failures)}", file=sys.stderr)
+        sys.exit(1)
     print("# done")
 
 

@@ -6,8 +6,12 @@ The acceptance sweep offers up to 4x `max_batch` concurrent requests and
 verifies (a) every request completes — zero drops — and (b) at EQUAL byte
 budget the augment-on-pressure pool reaches strictly higher peak
 concurrency than normal-only (the paper's on-demand capacity, measured at
-the allocator). CPU wall-clock on the reduced config: relative numbers
-only; the step-count latencies are machine-independent.
+the allocator). The ``--arch`` family sweep (dense / moe / ssm / hybrid /
+encdec) proves the same claim for every decode-state type of the unified
+store — augmenting cold recurrent-state SLABS admits more concurrent
+sequences exactly like augmenting cold KV pages. CPU wall-clock on the
+reduced configs: relative numbers only; the step-count latencies are
+machine-independent.
 """
 from __future__ import annotations
 
@@ -113,6 +117,76 @@ def bench_refresh() -> dict:
                                 "refresh_overhead_pct", "decode_steps")}
 
 
+# arch sweep: one member per model family — the unified state store gives
+# recurrent-state (ssm/hybrid) and encdec rows the same admission control
+# and augment-on-pressure capacity as dense/MoE KV pages
+SWEEP_ARCHS = {
+    "dense": "qwen1.5-0.5b",
+    "moe": "qwen3-moe-30b-a3b",
+    "ssm": "mamba2-130m",
+    "hybrid": "recurrentgemma-9b",
+    "encdec": "whisper-tiny",
+}
+
+
+def _equal_budget(cfg, max_batch, max_seq) -> int:
+    """A budget that pressures the allocator at 4x load: the smallest
+    Normal-mode budget a single full-grown row needs (short rows use
+    less, so normal-only admits ~2 and augmentation must buy the rest),
+    whatever the store kind."""
+    from repro.serve.state_store import make_store
+    store = make_store(cfg, max_batch=max_batch, max_seq=max_seq)
+    if store.kind == "slab":
+        return 2 * store.slab_bytes_normal
+    if store.kind == "composite":
+        return 2 * (store.budget_bytes // max_batch)
+    return ((store.max_pages + store.prefix_pages)
+            * store.geom.page_bytes_normal)
+
+
+def bench_arch_sweep() -> dict:
+    """Augment-on-pressure vs normal-only at EQUAL byte budget, across
+    the family zoo: the unified store must admit strictly more
+    concurrent sequences under pressure for every decode-state type —
+    recurrent-state slabs included, not just KV pages."""
+    out: dict = {}
+    rng = np.random.default_rng(2)
+    max_batch, max_seq = 4, 32
+    for family, arch in SWEEP_ARCHS.items():
+        base = get_arch(arch).reduced()
+        budget = _equal_budget(base, max_batch, max_seq)
+        peaks, loads = {}, {}
+        for mode in ("normal-only", "augment-on-pressure"):
+            cfg = dataclasses.replace(
+                base, amc=dataclasses.replace(base.amc, kv_mode="normal",
+                                              pool_mode=mode,
+                                              retention_steps=4))
+            eng = ServeEngine(cfg, make_local_mesh(), max_batch=max_batch,
+                              max_seq=max_seq, prefill_chunk=16,
+                              pool_budget_bytes=budget, seed=1)
+            reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(8,))
+                            .astype(np.int32), max_new_tokens=4, id=i)
+                    for i in range(4 * max_batch)]
+            res = _drive(eng, reqs)
+            peaks[mode] = res["peak_concurrency"]
+            loads[mode] = res
+            row(f"sched_{family}_{mode}_4x", res["total_s"] * 1e6,
+                f"arch={arch} peak_conc={res['peak_concurrency']} "
+                f"drops={res['drops']} augments={res['augment_events']}")
+        out[family] = {
+            "arch": arch,
+            "budget_bytes": budget,
+            "modes": loads,
+            "normal_only_peak_concurrency": peaks["normal-only"],
+            "augment_on_pressure_peak_concurrency":
+                peaks["augment-on-pressure"],
+            "augment_admits_strictly_more":
+                peaks["augment-on-pressure"] > peaks["normal-only"],
+            "zero_drops": all(m["drops"] == 0 for m in loads.values()),
+        }
+    return out
+
+
 def run_all() -> dict:
     base = get_arch("qwen1.5-0.5b").reduced()
     max_batch, max_seq, plen, max_new = 4, 32, 8, 4
@@ -162,6 +236,9 @@ def run_all() -> dict:
         "augment_on_pressure_peak_concurrency_at_4x": peak_ap,
         "augment_admits_strictly_more": peak_ap > peak_no,
     }
+    sweep = bench_arch_sweep()
+    acceptance["arch_sweep_augment_admits_more"] = {
+        fam: d["augment_admits_strictly_more"] for fam, d in sweep.items()}
     return {
         "config": {"arch": "qwen1.5-0.5b(reduced)", "max_batch": max_batch,
                    "max_seq": max_seq, "page_size": base.amc.page_size,
@@ -169,5 +246,34 @@ def run_all() -> dict:
                    "retention_steps": 4},
         "modes": modes,
         "refresh": bench_refresh(),
+        "arch_sweep": sweep,
         "acceptance": acceptance,
     }
+
+
+def main() -> None:
+    """Standalone entry: ``python benchmarks/scheduler_bench.py [--arch
+    dense moe ...]`` runs just the family sweep (or everything with no
+    flag) and prints the acceptance verdicts."""
+    global SWEEP_ARCHS
+    import argparse
+    import json
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", choices=sorted(SWEEP_ARCHS),
+                    default=None,
+                    help="family subset for the sweep (default: the full "
+                         "BENCH_scheduler.json payload)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    if args.arch is not None:
+        SWEEP_ARCHS = {k: v for k, v in SWEEP_ARCHS.items()
+                       if k in args.arch}
+        payload = {"arch_sweep": bench_arch_sweep()}
+    else:
+        payload = run_all()
+    print(json.dumps(payload.get("arch_sweep", {}), indent=2,
+                     default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -99,6 +99,12 @@ class AMCConfig:
     # the budget has room (augment-on-pressure only); otherwise they are
     # re-written in place (restamped) and the traffic is accounted.
     refresh_promote: bool = True
+    # -- augmented recurrent-state store (serve/state_store.py) -------------
+    # Packed width of an Augmented recurrent-state slab (SSM/LRU/conv state
+    # of ssm/hybrid rows, static prefix KV of vlm rows): int8 stores one
+    # value per byte, int4 nibble-packs pairs — the slab-granularity
+    # analogue of the pool's per-page aug_bits.
+    state_bits: int = 8
 
     @property
     def aug_bits(self) -> int:

@@ -111,6 +111,18 @@ def mode_access_events(mode: Mode, n_values: int, kind: str) -> dict:
     return {cls: cells * n_values}
 
 
+def dynamic_plane_access_events(n_values: int, bits: int,
+                                kind: str = "read") -> dict:
+    """{event_class: count} for `bits`-wide packed DYNAMIC-plane data —
+    one boosted-WL 8T cell per stored bit. This is the shared costing of
+    every dynamic storage class in the serving stack: augmented KV pages
+    (int4/int8 per `aug_bits`) and augmented recurrent-state slabs
+    (`amc.state_bits`, serve/state_store.py) bill through the same
+    event classes."""
+    cls = "read_8t_dynamic" if kind == "read" else "write_8t_dynamic"
+    return {cls: bits * n_values} if n_values else {}
+
+
 class AugmentedStore:
     def __init__(self, shape, *, retention_steps: int = 4,
                  ternary_fmt: str = "base3"):

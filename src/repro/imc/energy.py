@@ -114,24 +114,25 @@ def matmul_events(M: int, K: int, N: int, *, storage: str, impl: str,
 
 def kv_read_events(n_values_normal: int, n_values_aug: int, *,
                    aug_bits: int) -> dict:
-    """Decode-attention cache reads: Normal pages are 6T static data
-    (16 cells/value), Augmented pages are dynamic-plane data (`aug_bits`
-    8T cells/value) — the per-page mode decides the event class."""
+    """Decode-state reads (KV pages AND recurrent-state slabs): Normal
+    storage is 6T static data (16 cells/value), Augmented storage is
+    dynamic-plane data (`aug_bits` 8T cells/value) — the per-page /
+    per-slab mode decides the event class (core.amc owns the mapping)."""
+    from repro.core.amc import dynamic_plane_access_events
     ev: dict = {}
     if n_values_normal:
         ev["read_6t"] = 16 * n_values_normal
-    if n_values_aug:
-        ev["read_8t_dynamic"] = aug_bits * n_values_aug
+    ev.update(dynamic_plane_access_events(n_values_aug, aug_bits, "read"))
     return ev
 
 
 def kv_write_events(n_values_normal: int, n_values_aug: int, *,
                     aug_bits: int) -> dict:
+    from repro.core.amc import dynamic_plane_access_events
     ev: dict = {}
     if n_values_normal:
         ev["write_6t"] = 16 * n_values_normal
-    if n_values_aug:
-        ev["write_8t_dynamic"] = aug_bits * n_values_aug
+    ev.update(dynamic_plane_access_events(n_values_aug, aug_bits, "write"))
     return ev
 
 
@@ -146,8 +147,9 @@ def refresh_events(n_bytes: int) -> dict:
 # ---------------------------------------------------------------------------
 
 def _layer_matmuls(cfg) -> list:
-    """(K, N, storage) of every per-token matmul in one decoder layer,
-    given cfg.amc.weight_mode (mirrors `augment_params`' packing map)."""
+    """(K, N, storage) of every per-token matmul in one transformer
+    decoder layer, given cfg.amc.weight_mode (mirrors `augment_params`'
+    packing map)."""
     d, H, KV, hd, f = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd,
                        cfg.d_ff)
     wm = cfg.amc.weight_mode
@@ -173,15 +175,76 @@ def _layer_matmuls(cfg) -> list:
     return mm
 
 
+def _mlp_matmuls(cfg) -> list:
+    n_ffn = 3 if cfg.act == "swiglu" else 2
+    return ([(cfg.d_model, cfg.d_ff, "dense")] * (n_ffn - 1)
+            + [(cfg.d_ff, cfg.d_model, "dense")])
+
+
+def _attn_matmuls(cfg) -> list:
+    d, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return [(d, H * hd, "dense"), (d, KV * hd, "dense"),
+            (d, KV * hd, "dense"), (H * hd, d, "dense")]
+
+
+def model_decode_matmuls(cfg) -> list:
+    """(K, N, storage, count) of every per-token weight matmul in one
+    decode step, for ANY family — the unified serving engine accounts
+    weight-side array events for ssm/hybrid/encdec/vlm rows too.
+    Families `augment_params` doesn't pack keep "dense" (6T) storage."""
+    fam = cfg.family
+    if fam in ("dense", "moe"):
+        return [(K, N, s, cfg.n_layers) for K, N, s in _layer_matmuls(cfg)]
+    d = cfg.d_model
+    if fam == "ssm":
+        s = cfg.ssm
+        din = s.expand * d
+        H = din // s.head_dim
+        GN = s.n_groups * s.state_dim
+        per = [(d, din, "dense"), (d, din, "dense"),        # z, x
+               (d, GN, "dense"), (d, GN, "dense"),          # b, c
+               (d, H, "dense"), (din, d, "dense")]          # dt, out
+        return [(K, N, st, cfg.n_layers) for K, N, st in per]
+    if fam == "hybrid":
+        h = cfg.hybrid
+        n_att = cfg.n_layers // len(h.pattern)
+        n_rec = cfg.n_layers - n_att
+        rec = [(d, h.lru_width, "dense"), (d, h.lru_width, "dense"),
+               (h.lru_width, d, "dense")] + _mlp_matmuls(cfg)
+        att = _attn_matmuls(cfg) + _mlp_matmuls(cfg)
+        return ([(K, N, st, n_rec) for K, N, st in rec]
+                + [(K, N, st, n_att) for K, N, st in att])
+    if fam == "audio":
+        # decode-side: self attn + cross q/o (cross K/V precomputed at
+        # prefill — the static plane) + mlp, per decoder layer
+        H, hd = cfg.n_heads, cfg.hd
+        per = (_attn_matmuls(cfg)
+               + [(d, H * hd, "dense"), (H * hd, d, "dense")]
+               + _mlp_matmuls(cfg))
+        return [(K, N, st, cfg.n_layers) for K, N, st in per]
+    if fam == "vlm":
+        from repro.models.vision import N_SELF_PER_BLOCK, _n_blocks
+        nb = _n_blocks(cfg)
+        H, hd = cfg.n_heads, cfg.hd
+        self_l = _attn_matmuls(cfg) + _mlp_matmuls(cfg)
+        cross = ([(d, H * hd, "dense"), (H * hd, d, "dense")]
+                 + _mlp_matmuls(cfg))
+        return ([(K, N, st, nb * N_SELF_PER_BLOCK) for K, N, st in self_l]
+                + [(K, N, st, nb) for K, N, st in cross])
+    raise ValueError(f"no decode matmul model for family {fam!r}")
+
+
 def decode_matmul_events(cfg, n_tokens: int) -> dict:
     """Weight-side events of one decode dispatch over `n_tokens` useful
     tokens (padding rows are not counted — this is the per-token model)."""
     a = cfg.amc
     ev: Counter = Counter()
-    for K, N, storage in _layer_matmuls(cfg):
-        ev.update(matmul_events(n_tokens, K, N, storage=storage,
-                                impl=a.matmul_impl, abits=a.imc_abits))
-    return {cls: n * cfg.n_layers for cls, n in ev.items()}
+    for K, N, storage, count in model_decode_matmuls(cfg):
+        for cls, n in matmul_events(n_tokens, K, N, storage=storage,
+                                    impl=a.matmul_impl,
+                                    abits=a.imc_abits).items():
+            ev[cls] += n * count
+    return dict(ev)
 
 
 # ---------------------------------------------------------------------------

@@ -131,6 +131,28 @@ def paged_kv_attention(q, kn, vn, kp, vp, k_scale, v_scale, lengths, modes,
                                      interpret=_auto_interpret(interpret))
 
 
+@functools.partial(jax.jit, static_argnames=("page", "kv_bits", "interpret",
+                                             "use_ref"))
+def paged_prefix_attention(q, kn, vn, kp, vp, k_scale, v_scale, lengths,
+                           modes, normal_idx, packed_idx, *, page,
+                           kv_bits=4, interpret=None, use_ref=False):
+    """Cross-attention / STATIC-LENGTH variant of `paged_kv_attention`.
+
+    Serves the encoder-decoder cross KV (and any other fixed-length
+    prefix band): one un-roped query token per row attends non-causally
+    over a page-table band whose valid length is pinned per row
+    (`lengths` = prefix tokens, NOT positions + 1). For a single query
+    a non-causal read over `lengths` tokens is exactly the causal
+    kernel's masked walk, so the same grid and online softmax are reused
+    — the page tables just come from the store's prefix band. Rows whose
+    prefix is unallocated (length 0) read the write-dump page; callers
+    ignore their logits."""
+    return paged_kv_attention(q, kn, vn, kp, vp, k_scale, v_scale,
+                              lengths, modes, normal_idx, packed_idx,
+                              page=page, kv_bits=kv_bits,
+                              interpret=interpret, use_ref=use_ref)
+
+
 @functools.partial(jax.jit, static_argnames=("bn", "interpret", "use_ref"))
 def quantize_pack_kv(kv, *, bn=256, interpret=None, use_ref=False):
     """Fused bf16 -> int4-packed cache rows + per-token scales, one pass.

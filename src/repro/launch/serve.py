@@ -38,6 +38,10 @@ def main():
     ap.add_argument("--imc-abits", type=int, default=None,
                     choices=[1, 4, 8],
                     help="IMC activation precision (bit-serial cycles)")
+    ap.add_argument("--state-bits", type=int, default=None,
+                    choices=[4, 8],
+                    help="augmented recurrent-state slab width "
+                         "(ssm/hybrid/vlm-prefix stores)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -48,7 +52,8 @@ def main():
                       max_seq=args.max_seq, pool_mode=args.pool_mode,
                       pool_budget_bytes=args.pool_budget_bytes,
                       matmul_impl=args.matmul_impl,
-                      imc_abits=args.imc_abits)
+                      imc_abits=args.imc_abits,
+                      state_bits=args.state_bits)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
                     max_new_tokens=args.max_new, id=i)
@@ -63,14 +68,20 @@ def main():
     print(f"[serve] matmul_impl={imc['matmul_impl']} "
           f"abits={imc['imc_abits']} "
           f"modeled_energy_pj_per_token={imc['energy_pj_per_token']:.1f}")
-    if eng.paged:
-        st = eng.stats()
-        print(f"[serve] pool={eng.pool.pool_mode} "
-              f"pages(norm/aug)={st['pool']['pages_live_normal']}/"
-              f"{st['pool']['pages_live_augmented']} "
-              f"augments={st['augment_events']} refreshes={st['refreshes']} "
-              f"preemptions={st['preemptions']} "
-              f"queue_peak={st['scheduler']['peak_queue_depth']}")
+    st = eng.stats()
+    live = st["pool"]
+    if eng.store.kind == "paged":
+        occupancy = (f"pages(norm/aug)={live['pages_live_normal']}/"
+                     f"{live['pages_live_augmented']}")
+    elif eng.store.kind == "slab":
+        occupancy = (f"slabs(norm/aug)={live['slabs_live_normal']}/"
+                     f"{live['slabs_live_augmented']}")
+    else:
+        occupancy = f"parts={sorted(live['parts'])}"
+    print(f"[serve] store={eng.store.kind} {occupancy} "
+          f"augments={st['augment_events']} refreshes={st['refreshes']} "
+          f"preemptions={st['preemptions']} "
+          f"queue_peak={st['scheduler']['peak_queue_depth']}")
 
 
 if __name__ == "__main__":

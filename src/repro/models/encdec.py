@@ -142,3 +142,71 @@ def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
     c["cross_k"] = PSpec((n, batch, e.n_frames, KV, hd), ax)
     c["cross_v"] = PSpec((n, batch, e.n_frames, KV, hd), ax)
     return c
+
+
+# ---------------------------------------------------------------------------
+# paged serving path: self-KV decode pages + STATIC-LENGTH cross pages
+# ---------------------------------------------------------------------------
+
+def cross_block_decode_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                             arena_layer: dict, meta: dict) -> jax.Array:
+    """Single-token cross-attention against the pool's static prefix band.
+
+    The cross KV lives in the SAME paged arenas as the decoder self-KV —
+    rows [B, 2B) of the page table, allocated once at admission and read
+    with the fixed ``cross_lengths`` every step (the paper's static plane;
+    under pressure these cold pages are the first to be augmented). The
+    kernel is `paged_kv_attention`'s static-length variant: no rope on q,
+    lengths pinned to the prefix length instead of positions + 1."""
+    from repro.kernels import ops as K
+    B = x.shape[0]
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    h = L.rms_norm(x, p["norm"], cfg.norm_eps)
+    q = (h @ p["wq"]).reshape(B, H, hd)
+    if cfg.amc.kv_impl == "kernel":
+        qk = q.reshape(B, KV, H // KV, hd)
+        o = K.paged_prefix_attention(
+            qk, arena_layer["kn"], arena_layer["vn"], arena_layer["kp"],
+            arena_layer["vp"], arena_layer["ks"], arena_layer["vs"],
+            meta["cross_lengths"], meta["cross_modes"],
+            meta["cross_normal_idx"], meta["cross_packed_idx"],
+            page=cfg.amc.page_size, kv_bits=cfg.amc.aug_bits)
+        o = o.reshape(B, 1, H, hd)
+    else:   # reference: gather the prefix band densely, mask by length
+        from repro.kernels.ref import paged_gather_kv_ref
+        kd, vd = paged_gather_kv_ref(
+            arena_layer["kn"], arena_layer["vn"], arena_layer["kp"],
+            arena_layer["vp"], arena_layer["ks"], arena_layer["vs"],
+            meta["cross_table"], meta["cross_modes"],
+            kv_bits=cfg.amc.aug_bits)
+        o = L.decode_attention_kvmajor(
+            q[:, None], kd.astype(jnp.bfloat16), vd.astype(jnp.bfloat16),
+            meta["cross_lengths"] - 1)
+    return (o.reshape(B, 1, -1) @ p["wo"]).astype(x.dtype)
+
+
+def paged_decode_step(cfg: ModelConfig, params: dict, arenas: dict,
+                      tokens: jax.Array, positions: jax.Array, meta: dict,
+                      *, rules=None):
+    """One decode step against the paged pool: self-attention walks the
+    decode band, cross-attention the static prefix band. Same math as
+    `decode_step` (the cross output over a zeroed prefix is exactly 0)."""
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    x = x + L.sinusoidal_positions(positions.astype(jnp.float32),
+                                   cfg.d_model)[:, None].astype(x.dtype)
+
+    def body(x, scanned):
+        lp, arena_layer = scanned
+        a, new_arenas = T.attn_block_decode_paged(cfg, lp["attn"], x,
+                                                  arena_layer, positions,
+                                                  meta)
+        x = x + a
+        x = x + cross_block_decode_paged(cfg, lp["cross"], x, new_arenas,
+                                         meta)
+        x = x + T.mlp_block(cfg, lp["mlp"], x)
+        return x, new_arenas
+
+    x, new_arenas = jax.lax.scan(body, x, (params["layers"], arenas))
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(x, params["head"], cfg.vocab)
+    return logits, new_arenas

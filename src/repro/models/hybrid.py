@@ -10,6 +10,14 @@ RG-LRU (diagonal-gated variant, gates per channel from the branch input):
 computed over the sequence with an associative scan (first-order linear
 recurrence), O(S log S) depth — the sub-quadratic path that makes
 long_500k decode feasible (O(1) per token, bounded state).
+
+AMC note (DESIGN.md SS9): the decode state (`abstract_cache`) is a
+FIXED-SIZE slab per row — LRU h (f32), conv tails, and the window ring
+KV (packed per `kv_mode` by this module; those integer leaves pass
+through the serving store unchanged). The unified store can hold a whole
+slab as Augmented dynamic storage (int8/int4 via `amc.state_bits`) under
+pressure, giving hybrid rows the same admit-more-by-augmenting behavior
+as paged KV.
 """
 from __future__ import annotations
 

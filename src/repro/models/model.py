@@ -67,22 +67,18 @@ def prefill_step(cfg: ModelConfig, params, cache, batch: dict, *,
               batch.get("write_mask"), rules=rules)
 
 
-def supports_paging(cfg: ModelConfig) -> bool:
-    """Whether the family's decode state is a transformer KV cache the
-    paged augmented pool (serve/cache_pool.py) can manage. Recurrent /
-    conv / cross-attention states keep the contiguous slot cache."""
-    return cfg.family in ("dense", "moe")
-
-
 def paged_decode_step(cfg: ModelConfig, params, arenas, batch: dict, *,
                       rules=None):
-    """One decode step against the paged pool. batch adds the pool's
-    device tables (page_table/page_modes/normal_idx/packed_idx) and
-    write_mask to the decode operands."""
+    """One decode step against the paged pool. batch adds the store's
+    device tables (page_table/page_modes/normal_idx/packed_idx, plus the
+    cross_* prefix tables for encdec and the dense patch KV for vlm) and
+    write_mask to the decode operands; everything that is not a token or
+    a position is forwarded as kernel/table meta."""
+    meta = {k: v for k, v in batch.items()
+            if k not in ("tokens", "positions")}
     return _family_mod(cfg).paged_decode_step(
-        cfg, params, arenas, batch["tokens"], batch["positions"],
-        {k: batch[k] for k in ("page_table", "page_modes", "normal_idx",
-                               "packed_idx", "write_mask")}, rules=rules)
+        cfg, params, arenas, batch["tokens"], batch["positions"], meta,
+        rules=rules)
 
 
 def paged_prefill_step(cfg: ModelConfig, params, arenas, batch: dict, *,

@@ -7,9 +7,15 @@ dim can carry its own sharding axis (the fused dim 2*din+2GN+H doesn't
 divide a 16-way axis). Gates on dt are per-head; conv is causal depthwise
 width-4 implemented as shifted adds.
 
-AMC note (DESIGN.md SS5): weights take ternary/dual-plane augmented storage;
-there is NO KV cache (the paper's packed-KV plane is inapplicable), and the
-recurrent state is accumulated into, so it must stay high-precision.
+AMC note (DESIGN.md SS5/SS9): weights take ternary/dual-plane augmented
+storage; there is NO KV cache (the paper's packed-KV plane is
+inapplicable). The recurrent state (`abstract_cache`: ssd_state f32 +
+conv_state) accumulates, so it defaults to high precision — but in
+serving it is a fixed-size slab the unified store
+(`serve/state_store.AugmentedStatePool`) can hold as Augmented dynamic
+data (packed int8/int4, quantize-on-write / dequantize-on-read every
+decode step, RefreshPolicy-restamped) when the pool-mode policy opts
+into the capacity.
 """
 from __future__ import annotations
 

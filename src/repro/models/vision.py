@@ -157,3 +157,57 @@ def abstract_cache(cfg: ModelConfig, batch: int, seq: int) -> dict:
     c["patch_k"] = PSpec((nb, batch, v.n_patches, KV, hd), ax)
     c["patch_v"] = PSpec((nb, batch, v.n_patches, KV, hd), ax)
     return c
+
+
+def prefix_state_specs(cfg: ModelConfig, batch: int) -> dict:
+    """The STATIC per-row decode state (patch-embedding cross KV, computed
+    once per image at prefill) — the slab the serving engine stores in an
+    `AugmentedStatePool` against the same byte budget as the KV pages."""
+    v = cfg.vision
+    nb = _n_blocks(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    ax = (None, "cache_batch", "frames", "kv_heads", None)
+    return {"patch_k": PSpec((nb, batch, v.n_patches, KV, hd), ax),
+            "patch_v": PSpec((nb, batch, v.n_patches, KV, hd), ax)}
+
+
+def paged_decode_step(cfg: ModelConfig, params: dict, arenas: dict,
+                      tokens: jax.Array, positions: jax.Array, meta: dict,
+                      *, rules=None):
+    """One decode step against the paged pool: the nb*4 self-attention
+    layers walk the decode band (arena leaves carry the flat layer dim,
+    reshaped to (nb, 4, ...) for the macro-block scan); the gated
+    cross-attention reads the dense patch KV the engine reconstitutes
+    from its static prefix slab (``meta["patch_k"/"patch_v"]``)."""
+    nb = _n_blocks(cfg)
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+    pk, pv = meta["patch_k"], meta["patch_v"]
+    ar = {k: v.reshape((nb, N_SELF_PER_BLOCK) + v.shape[1:])
+          for k, v in arenas.items()}
+
+    def self_body(x, scanned):
+        lp, arena_layer = scanned
+        a, new_arenas = T.attn_block_decode_paged(cfg, lp["attn"], x,
+                                                  arena_layer, positions,
+                                                  meta)
+        x = x + a
+        x = x + T.mlp_block(cfg, lp["mlp"], x)
+        return x, new_arenas
+
+    def block_body(x, scanned):
+        bp, bar, bpk, bpv = scanned
+        x, nar = jax.lax.scan(self_body, x,
+                              ({"attn": bp["self_attn"],
+                                "mlp": bp["self_mlp"]}, bar))
+        x = x + _cross_attn(cfg, bp["cross"], x, bpk, bpv)
+        g = jnp.tanh(bp["cross"]["gate_ffn"]).astype(x.dtype)
+        x = x + g * T.mlp_block(cfg, bp["cross_mlp"], x)
+        return x, nar
+
+    x, new_ar = jax.lax.scan(block_body, x,
+                             (params["blocks"], ar, pk, pv))
+    new_arenas = {k: v.reshape((-1,) + v.shape[2:])
+                  for k, v in new_ar.items()}
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.lm_head(x, params["head"], cfg.vocab)
+    return logits, new_arenas

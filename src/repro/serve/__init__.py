@@ -1,6 +1,9 @@
 from repro.serve.cache_pool import PagedKVPool
 from repro.serve.engine import Request, ServeEngine
 from repro.serve.scheduler import QueueEntry, Scheduler
+from repro.serve.state_store import (AugmentedStatePool, CompositeStore,
+                                     make_store)
 
 __all__ = ["Request", "ServeEngine", "PagedKVPool", "Scheduler",
-           "QueueEntry"]
+           "QueueEntry", "AugmentedStatePool", "CompositeStore",
+           "make_store"]

@@ -30,6 +30,16 @@ device-side arenas (jax arrays, donated through the jitted decode step).
 `device_tables()` emits the scalar-prefetch operands of the paged
 attention kernel, including the HOLD-PREVIOUS gather indices that let the
 mode-mismatched arena skip its DMA.
+
+`PagedKVPool` implements the `serve.state_store.StateStore` interface
+(alloc / free / gather-tables / augment / promote / refresh / bytes) — it
+is the attention-KV member of the per-family store registry. With
+``prefix_tokens > 0`` the page table grows a second band of rows
+(``max_batch`` .. ``2*max_batch``) holding each slot's STATIC-LENGTH
+prefix pages — the encoder-decoder cross-attention KV, written once at
+admission and read with a fixed length every decode step (the paper's
+static plane; cold by construction, so these are the first pages the
+pressure policy augments).
 """
 from __future__ import annotations
 
@@ -101,30 +111,38 @@ class PagedKVPool:
                  pages_normal: Optional[int] = None,
                  pages_packed: Optional[int] = None,
                  budget_bytes: Optional[int] = None,
-                 retention_steps: Optional[int] = None):
+                 retention_steps: Optional[int] = None,
+                 prefix_tokens: int = 0, n_layers: Optional[int] = None):
         a = cfg.amc
         self.cfg = cfg
         self.pool_mode = resolve_pool_mode(cfg)
-        self.geom = PageGeometry(cfg.n_layers, cfg.n_kv_heads, cfg.hd,
+        self.geom = PageGeometry(cfg.n_layers if n_layers is None
+                                 else n_layers, cfg.n_kv_heads, cfg.hd,
                                  a.page_size, aug_bits_for(cfg))
         self.max_batch = max_batch
         self.max_pages = -(-max_seq // a.page_size)          # ceil
+        self.prefix_tokens = prefix_tokens
+        self.prefix_pages = -(-prefix_tokens // a.page_size) \
+            if prefix_tokens else 0
         self.retention_steps = (a.retention_steps if retention_steps is None
                                 else retention_steps)
         B, maxP = max_batch, self.max_pages
         pbn, pba = self.geom.page_bytes_normal, self.geom.page_bytes_aug
+        # per-row page cost: decode band + (optional) static prefix band
+        row_pages = maxP + self.prefix_pages
         # default arena sizing: legacy-equivalent capacity (every row can
         # reach max_seq tokens in any mode the policy may choose)
         if pages_normal is None:
             pages_normal = 0 if self.pool_mode == "always-augmented" \
-                else B * maxP
+                else B * row_pages
         if pages_packed is None:
             pages_packed = 0 if self.pool_mode == "normal-only" \
-                else B * maxP
+                else B * row_pages
         self.pages_normal, self.pages_packed = pages_normal, pages_packed
-        self.budget_bytes = (B * maxP * pbn if budget_bytes is None
+        self.budget_bytes = (B * row_pages * pbn if budget_bytes is None
                              else budget_bytes)
-        seq_cost = maxP * (pbn if self.pool_mode == "normal-only" else pba)
+        seq_cost = row_pages * (pbn if self.pool_mode == "normal-only"
+                                else pba)
         if self.budget_bytes < seq_cost:
             raise ValueError(
                 f"budget_bytes={self.budget_bytes} cannot hold one full "
@@ -147,11 +165,17 @@ class PagedKVPool:
             "vs": jnp.zeros((Lg, Np, KV, P), jnp.bfloat16),
         }
 
-        # host page tables (numpy; mirrored to device per dispatch)
-        self.page_table = np.zeros((B, maxP), np.int32)
-        self.page_mode = np.zeros((B, maxP), np.int32)   # 0 normal, 1 aug
-        self.allocated = np.zeros((B, maxP), bool)
-        self.last_write = np.full((B, maxP), -1, np.int64)
+        # host page tables (numpy; mirrored to device per dispatch).
+        # Rows [0, B) are the decode band; with prefix_tokens > 0 rows
+        # [B, 2B) are each slot's static prefix band (table width covers
+        # the wider of the two bands).
+        n_rows = 2 * B if self.prefix_pages else B
+        tw = max(maxP, self.prefix_pages)
+        self.table_width = tw
+        self.page_table = np.zeros((n_rows, tw), np.int32)
+        self.page_mode = np.zeros((n_rows, tw), np.int32)  # 0 normal, 1 aug
+        self.allocated = np.zeros((n_rows, tw), bool)
+        self.last_write = np.full((n_rows, tw), -1, np.int64)
         self.free_normal = list(range(Nn - 1, 0, -1))    # pop() -> low first
         self.free_packed = list(range(Np - 1, 0, -1))
         self.policies: dict[tuple[int, int], RefreshPolicy] = {}
@@ -175,8 +199,9 @@ class PagedKVPool:
 
     def can_admit_tokens(self, n_tokens: int) -> bool:
         """Admission check: could `n_tokens` more tokens be stored right
-        now, augmenting cold pages if the policy allows?"""
-        pages = -(-n_tokens // self.geom.page_size)
+        now, augmenting cold pages if the policy allows? Counts the
+        static prefix band's pages on top of the prompt's own."""
+        pages = -(-n_tokens // self.geom.page_size) + self.prefix_pages
         free_b = self.budget_bytes - self.live_bytes
         if self.pool_mode == "normal-only":
             return (pages <= self.free_page_count(0)
@@ -248,6 +273,144 @@ class PagedKVPool:
     def free_row(self, row: int) -> None:
         for lp in np.flatnonzero(self.allocated[row]):
             self._release(row, int(lp))
+
+    # -- StateStore interface --------------------------------------------------
+    # (serve/state_store.py documents the contract; the scheduler and the
+    # engine talk to every decode-state store through these.)
+
+    kind = "paged"
+
+    def _prefix_row(self, row: int) -> int:
+        return self.max_batch + row
+
+    def admit_row(self, row: int, n_tokens: int, step: int) -> bool:
+        """All-or-nothing admission: the prompt's decode-band pages plus
+        (when this pool carries a static prefix) the row's prefix pages,
+        zero-initialized so recycled physical pages never leak a previous
+        row's KV through the static-length read."""
+        pages = -(-max(n_tokens, 1) // self.geom.page_size)
+        done: list[tuple[int, int]] = []
+        for lp in range(pages):
+            if not self.alloc_page(row, lp, step):
+                for r, d in done:
+                    self._release(r, d)
+                return False
+            done.append((row, lp))
+        prow = self._prefix_row(row)
+        for lp in range(self.prefix_pages):
+            if not self.alloc_page(prow, lp, step):
+                for r, d in done:
+                    self._release(r, d)
+                return False
+            done.append((prow, lp))
+            self._zero_physical(prow, lp)
+        return True
+
+    def _zero_physical(self, row: int, lp: int) -> None:
+        """Zero the physical page behind (row, lp) in its current plane —
+        prefix pages are read to their full static length, so stale data
+        from a recycled page must be scrubbed at allocation."""
+        phys = int(self.page_table[row, lp])
+        mode = int(self.page_mode[row, lp])
+        self.arenas = _zero_page_op(self.arenas, phys, mode=mode)
+        self.stats["maintenance_dispatches"] += 1
+
+    def ensure_position(self, row: int, pos: int, step: int) -> bool:
+        """Guarantee the decode-band page holding `pos` exists before a
+        dispatch writes it (growth is one token per decode step)."""
+        lp = pos // self.geom.page_size
+        assert lp < self.max_pages, (
+            f"position {pos} past the page table ({self.max_pages} pages): "
+            f"the engine's max_seq done-condition should retire rows "
+            f"before this")
+        if self.allocated[row, lp]:
+            return True
+        return self.alloc_page(row, lp, step)
+
+    def release_row(self, row: int) -> None:
+        self.free_row(row)
+        if self.prefix_pages:
+            self.free_row(self._prefix_row(row))
+
+    def note_token_writes(self, rows: np.ndarray, positions: np.ndarray,
+                          step: int) -> None:
+        """Stamp the decode-band pages the given absolute `positions`
+        land in (one entry per row)."""
+        rows = np.asarray(rows).ravel()
+        lps = np.asarray(positions).ravel() // self.geom.page_size
+        self.note_writes(rows, lps, step)
+
+    def refresh(self, key: tuple, step: int) -> None:
+        self.refresh_page(key[0], key[1], step)
+
+    @property
+    def state(self):
+        """Device-side decode-state tree (donated through the jitted step)."""
+        return self.arenas
+
+    @state.setter
+    def state(self, new) -> None:
+        self.arenas = new
+
+    @property
+    def aug_bits(self) -> int:
+        return self.geom.aug_bits
+
+    def physical_bytes(self) -> int:
+        """Usable staged capacity of both planes (write-dump lines
+        excluded; `arena_bytes()` reports the raw allocation)."""
+        return (self.pages_normal * self.geom.page_bytes_normal
+                + self.pages_packed * self.geom.page_bytes_aug)
+
+    # -- array event accounting (engine folds these into the IMC ledger) -----
+
+    @property
+    def _values_per_token(self) -> int:
+        g = self.geom
+        return 2 * g.n_layers * g.kv_heads * g.head_dim
+
+    def read_value_counts(self, rows: np.ndarray,
+                          lengths: np.ndarray) -> tuple[int, int]:
+        """(normal, augmented) cache VALUES a decode dispatch reads for
+        `rows` at valid `lengths`, split by page mode — prefix-band pages
+        are read to their full static length every step."""
+        if rows.size == 0:
+            return 0, 0
+        page = self.geom.page_size
+        tw = self.table_width
+        tok_per_page = np.clip(
+            lengths[:, None] - np.arange(tw)[None, :] * page, 0, page)
+        bands = [(rows, tok_per_page)]
+        if self.prefix_pages:
+            prows = self.max_batch + rows
+            ptok = np.clip(
+                self.prefix_tokens - np.arange(tw)[None, :] * page, 0, page)
+            bands.append((prows, np.broadcast_to(ptok, (rows.size, tw))))
+        n_norm = n_aug = 0
+        for band_rows, tok in bands:
+            alloc = self.allocated[band_rows]
+            modes = self.page_mode[band_rows]
+            n_norm += int((tok * (alloc & (modes == 0))).sum())
+            n_aug += int((tok * (alloc & (modes == 1))).sum())
+        v = self._values_per_token
+        return n_norm * v, n_aug * v
+
+    def write_value_counts(self, rows: np.ndarray, n_new: int,
+                           write_starts: np.ndarray) -> tuple[int, int]:
+        """(normal, augmented) cache VALUES one dispatch writes: `n_new`
+        tokens per row from `write_starts`, costed by the mode of the
+        decode-band page each token lands in."""
+        if rows.size == 0:
+            return 0, 0
+        page = self.geom.page_size
+        pos = write_starts[:, None] + np.arange(n_new)[None, :]
+        lp = np.minimum(pos // page, self.max_pages - 1)
+        mode = self.page_mode[rows[:, None], lp]
+        alive = self.allocated[rows[:, None], lp]
+        v = self._values_per_token
+        wn = int((alive & (mode == 0)).sum()) * v
+        wa = int((alive & (mode == 1)).sum()) * v
+        return wn, wa
 
     def _release(self, row: int, lp: int) -> None:
         mode = int(self.page_mode[row, lp])
@@ -373,24 +536,39 @@ class PagedKVPool:
     def device_tables(self) -> dict:
         """Scalar-prefetch operands for the paged kernel + write tables.
         normal_idx / packed_idx carry HOLD-PREVIOUS semantics per row so
-        the mode-mismatched arena never issues a DMA."""
+        the mode-mismatched arena never issues a DMA. With a prefix band,
+        the same tables are also emitted for rows [B, 2B) under the
+        ``cross_*`` keys together with the static ``cross_lengths``."""
         if self._tables_cache is not None:
             return self._tables_cache
         pt, md = self.page_table, self.page_mode
-        B, maxP = pt.shape
-        nidx = np.zeros((B, maxP), np.int32)
-        pidx = np.zeros((B, maxP), np.int32)
-        lastn = np.zeros(B, np.int32)
-        lastp = np.zeros(B, np.int32)
-        for s in range(maxP):
+        n_rows, tw = pt.shape
+        nidx = np.zeros((n_rows, tw), np.int32)
+        pidx = np.zeros((n_rows, tw), np.int32)
+        lastn = np.zeros(n_rows, np.int32)
+        lastp = np.zeros(n_rows, np.int32)
+        for s in range(tw):
             live = self.allocated[:, s]
             lastn = np.where(live & (md[:, s] == 0), pt[:, s], lastn)
             lastp = np.where(live & (md[:, s] == 1), pt[:, s], lastp)
             nidx[:, s], pidx[:, s] = lastn, lastp
-        self._tables_cache = {"page_table": jnp.asarray(pt),
-                              "page_modes": jnp.asarray(md),
-                              "normal_idx": jnp.asarray(nidx),
-                              "packed_idx": jnp.asarray(pidx)}
+        B, maxP = self.max_batch, self.max_pages
+        tables = {"page_table": jnp.asarray(pt[:B, :maxP]),
+                  "page_modes": jnp.asarray(md[:B, :maxP]),
+                  "normal_idx": jnp.asarray(nidx[:B, :maxP]),
+                  "packed_idx": jnp.asarray(pidx[:B, :maxP])}
+        if self.prefix_pages:
+            Pc = self.prefix_pages
+            clen = np.where(self.allocated[B:, :Pc].any(axis=1),
+                            self.prefix_tokens, 0).astype(np.int32)
+            tables.update({
+                "cross_table": jnp.asarray(pt[B:, :Pc]),
+                "cross_modes": jnp.asarray(md[B:, :Pc]),
+                "cross_normal_idx": jnp.asarray(nidx[B:, :Pc]),
+                "cross_packed_idx": jnp.asarray(pidx[B:, :Pc]),
+                "cross_lengths": jnp.asarray(clen),
+            })
+        self._tables_cache = tables
         return self._tables_cache
 
     def arena_bytes(self) -> int:
@@ -401,9 +579,11 @@ class PagedKVPool:
         live_n = int((self.allocated & (self.page_mode == 0)).sum())
         live_a = int((self.allocated & (self.page_mode == 1)).sum())
         return {
+            "kind": self.kind,
             "pool_mode": self.pool_mode,
             "page_size": g.page_size,
             "aug_bits": g.aug_bits,
+            "prefix_tokens": self.prefix_tokens,
             "pages_live_normal": live_n,
             "pages_live_augmented": live_a,
             "page_bytes_normal": g.page_bytes_normal,
@@ -434,6 +614,16 @@ def _augment_page_op(arenas: dict, src: int, dst: int, *, aug_bits: int):
             p, s = L.pack_kv_int8(x)
         out[packed] = out[packed].at[:, dst].set(p)
         out[scale] = out[scale].at[:, dst].set(s[..., 0].astype(jnp.bfloat16))
+    return out
+
+
+@functools.partial(jax.jit, static_argnames=("mode",), donate_argnums=(0,))
+def _zero_page_op(arenas: dict, phys: int, *, mode: int):
+    """Scrub one physical page in its plane (prefix-page allocation)."""
+    out = dict(arenas)
+    keys = ("kn", "vn") if mode == 0 else ("kp", "vp", "ks", "vs")
+    for k in keys:
+        out[k] = out[k].at[:, phys].set(jnp.zeros_like(out[k][:, phys]))
     return out
 
 

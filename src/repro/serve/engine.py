@@ -1,24 +1,34 @@
-"""Serving engine: continuous batching over the paged augmented KV pool.
+"""Serving engine: continuous batching over unified augmented state stores.
 
-Transformer families (dense/MoE) serve from `cache_pool.PagedKVPool` — a
-two-plane paged cache whose pages mode-switch between Normal (bf16) and
-Augmented (packed int4/int8, capacity_factor > 1) — driven by
-`scheduler.Scheduler`: a FIFO request queue with admission control,
-slot-free sequence lifecycle (join/leave the running batch between decode
-steps), preemption-by-augmentation, and a retention-driven refresh pass
-interleaved with decode (`core/retention.py`'s RefreshPolicy clocks every
-augmented page). Families whose decode state is not a transformer KV
-cache (ssm/hybrid/audio/vlm) keep the legacy contiguous slot cache.
+EVERY model family serves through the same path: a `Scheduler` (FIFO
+admission, slot-free join/leave, preemption-with-recompute, refresh pass)
+driving a per-family `state_store.StateStore`:
 
-Requests are never dropped: `add_request` enqueues when the pool or the
+  dense / moe   PagedKVPool — two-plane paged KV whose pages mode-switch
+                between Normal (bf16) and Augmented (packed int4/int8)
+  audio         PagedKVPool with a STATIC prefix band: decoder self-KV
+                pages plus the cross-attention KV as fixed-length pages
+  vlm           CompositeStore: PagedKVPool (self-KV) + AugmentedStatePool
+                (static patch-KV prefix slabs)
+  ssm / hybrid  AugmentedStatePool — fixed-size recurrent-state slabs
+                (SSD/LRU/conv state, window ring KV) stored per-slot as
+                Normal native dtype or Augmented packed int8/int4
+
+All of them budget bytes against the same modeled SRAM array, augment
+cold storage under pressure to admit more concurrent sequences, clock
+augmented (dynamic) storage with `core/retention.RefreshPolicy`, and feed
+the array-level event/energy ledger (`stats()["imc"]`).
+
+Requests are never dropped: `add_request` enqueues when the store or the
 running batch is full and returns the row index on immediate admission or
 None when queued; `generate` drains the queue to completion. Empty
 prompts require an explicit `bos_id` — there is no silent token-0 feed.
 
-Hot-path shape is unchanged from the contiguous engine: a P-token prompt
-costs ceil(P / prefill_chunk) jitted dispatches, one batched decode
-dispatch serves every running row, and host bookkeeping is vectorized
-numpy. Pool maintenance (augment / promote / refresh) dispatches are
+Hot-path shape is unchanged: a P-token prompt costs ceil(P /
+prefill_chunk) jitted dispatches on families with chunked prefill (P
+decode steps otherwise, as before), one batched decode dispatch serves
+every running row, and host bookkeeping is vectorized numpy. Store
+maintenance (augment / promote / refresh / slab reset) dispatches are
 accounted separately (`stats()["pool"]["maintenance_dispatches"]`).
 """
 from __future__ import annotations
@@ -39,7 +49,7 @@ from repro.launch.mesh import mesh_context
 from repro.models import augment
 from repro.models import model as M
 from repro.models.params import init_params, is_pspec
-from repro.serve.cache_pool import PagedKVPool
+from repro.serve import state_store
 from repro.serve.scheduler import QueueEntry, Scheduler
 
 
@@ -68,26 +78,26 @@ class ServeEngine:
                  pool_pages_normal: Optional[int] = None,
                  pool_pages_packed: Optional[int] = None,
                  retention_steps: Optional[int] = None,
-                 paged: Optional[bool] = None,
                  matmul_impl: Optional[str] = None,
-                 imc_abits: Optional[int] = None):
+                 imc_abits: Optional[int] = None,
+                 state_bits: Optional[int] = None):
         # engine-level AMC knobs override the config (e.g. serve a dense
         # checkpoint with ternary weights without touching the arch file)
         if weight_mode is not None or kv_mode is not None \
                 or pool_mode is not None or matmul_impl is not None \
-                or imc_abits is not None:
+                or imc_abits is not None or state_bits is not None:
             cfg = dataclasses.replace(cfg, amc=dataclasses.replace(
                 cfg.amc,
                 weight_mode=weight_mode or cfg.amc.weight_mode,
                 kv_mode=kv_mode or cfg.amc.kv_mode,
                 pool_mode=pool_mode or cfg.amc.pool_mode,
                 matmul_impl=matmul_impl or cfg.amc.matmul_impl,
-                imc_abits=imc_abits or cfg.amc.imc_abits))
+                imc_abits=imc_abits or cfg.amc.imc_abits,
+                state_bits=state_bits or cfg.amc.state_bits))
         self.cfg, self.mesh = cfg, mesh
         self.max_batch, self.max_seq = max_batch, max_seq
         self.prefill_chunk = min(prefill_chunk, max_seq)
         self.bos_id = bos_id
-        self.paged = M.supports_paging(cfg) if paged is None else paged
         shape = ShapeConfig("serve", max_seq, max_batch, "decode")
         self.rules = Rules.make(mesh, cfg, shape)
         dense_cfg = dataclasses.replace(
@@ -99,47 +109,23 @@ class ServeEngine:
             # pack the matmul weights into augmented storage (no-op for
             # weight_mode="normal", already-packed trees, other families)
             self.params = augment.augment_params(cfg, params)
-            if self.paged:
-                self.pool = PagedKVPool(
-                    cfg, max_batch=max_batch, max_seq=max_seq,
-                    pages_normal=pool_pages_normal,
-                    pages_packed=pool_pages_packed,
-                    budget_bytes=pool_budget_bytes,
-                    retention_steps=retention_steps)
-                self.scheduler = Scheduler(self.pool, max_batch=max_batch)
-            else:
-                self.pool, self.scheduler = None, None
-                self._legacy_queue: deque[QueueEntry] = deque()
-                ca = M.abstract_cache(cfg, shape)
-                self._cache = jax.tree.map(
-                    lambda l: jnp.zeros(l.shape, l.jdtype), ca,
-                    is_leaf=lambda x: hasattr(x, "jdtype"))
+            self.store = state_store.make_store(
+                cfg, max_batch=max_batch, max_seq=max_seq,
+                budget_bytes=pool_budget_bytes,
+                pages_normal=pool_pages_normal,
+                pages_packed=pool_pages_packed,
+                retention_steps=retention_steps)
+        self.scheduler = Scheduler(self.store, max_batch=max_batch)
         self._logical_weight_bytes = _abstract_bytes(
             M.abstract_params(dense_cfg))
         self._logical_cache_bytes = _abstract_bytes(M.abstract_cache(
             dataclasses.replace(
                 cfg, amc=dataclasses.replace(cfg.amc, kv_mode="normal")),
             shape))
-        if self.paged:
-            self._decode = jax.jit(
-                lambda p, c, b: M.paged_decode_step(cfg, p, c, b,
-                                                    rules=self.rules),
-                donate_argnums=(1,))
-            self._prefill = jax.jit(
-                lambda p, c, b: M.paged_prefill_step(cfg, p, c, b,
-                                                     rules=self.rules),
-                donate_argnums=(1,))
-        else:
-            self._decode = jax.jit(
-                lambda p, c, b: M.decode_step(cfg, p, c, b,
-                                              rules=self.rules),
-                donate_argnums=(1,))
-            self._prefill = None
-            if M.supports_prefill(cfg):
-                self._prefill = jax.jit(
-                    lambda p, c, b: M.prefill_step(cfg, p, c, b,
-                                                   rules=self.rules),
-                    donate_argnums=(1,))
+        fns = state_store.make_step_fns(cfg, self.store, rules=self.rules)
+        self._decode = jax.jit(fns["decode"], donate_argnums=(1,))
+        self._prefill = (jax.jit(fns["prefill"], donate_argnums=(1,))
+                         if fns["prefill"] is not None else None)
         # slot bookkeeping (host side, int32 once — dispatched as-is)
         self.positions = np.zeros(max_batch, np.int32)
         self.remaining = np.zeros(max_batch, np.int32)
@@ -151,19 +137,41 @@ class ServeEngine:
         self.dispatch_count = 0   # jitted device dispatches (prefill+decode)
         self.step_idx = 0         # decode-step clock (retention time base)
         # array-level event/energy ledger (imc/energy.py): weight-side
-        # events follow cfg.amc.matmul_impl, cache-side events follow the
-        # per-page mode (Normal pages cost 6T reads, Augmented pages the
-        # 8T dynamic reads). Analytic, host-side — per real dispatch.
+        # events follow cfg.amc.matmul_impl, state-side events follow the
+        # per-page / per-slab mode (Normal storage costs 6T accesses,
+        # Augmented the 8T dynamic ones). Analytic, host-side — per real
+        # dispatch, for every family.
         self.energy_ledger = imc_energy.ImcEventLedger()
-        self._account = cfg.family in ("dense", "moe")
         self._refresh_bytes_seen = 0
 
+    # -- store views -----------------------------------------------------------
+
+    @property
+    def pool(self):
+        """The row's decode-state store (historic name kept: benches and
+        tests address the byte budget / page geometry through it)."""
+        return self.store
+
+    @property
+    def cache(self):
+        """The decode-state device tree (arenas and/or slab planes)."""
+        return self.store.state
+
+    @property
+    def _queue(self) -> deque:
+        return self.scheduler.queue
+
+    def _store_parts(self) -> list:
+        """The store's billable units (composite stores bill each part at
+        its own augmented width)."""
+        if self.store.kind == "composite":
+            return list(self.store.parts.values())
+        return [self.store]
+
     def _sync_refresh_events(self) -> None:
-        """Fold pool refresh traffic accrued since the last sync into the
+        """Fold store refresh traffic accrued since the last sync into the
         ledger's "refresh" group, so energy totals include maintenance."""
-        if not (self.paged and self._account):
-            return
-        rb = self.pool.stats["refresh_bytes"]
+        rb = sum(p.stats["refresh_bytes"] for p in self._store_parts())
         if rb > self._refresh_bytes_seen:
             self.energy_ledger.add(
                 imc_energy.refresh_events(rb - self._refresh_bytes_seen),
@@ -172,74 +180,32 @@ class ServeEngine:
 
     # -- array event accounting ------------------------------------------------
 
-    def _kv_value_counts(self, rows: np.ndarray,
-                         lengths: np.ndarray) -> tuple[int, int]:
-        """(normal, augmented) cache VALUES held by `rows` up to
-        `lengths` tokens — split by page mode for the paged pool, by
-        kv_mode for the contiguous cache."""
-        cfg = self.cfg
-        per_tok = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
-        if rows.size == 0:
-            return 0, 0
-        if not self.paged:
-            tok = int(lengths.sum())
-            if cfg.amc.kv_mode == "normal":
-                return tok * per_tok, 0
-            return 0, tok * per_tok
-        page = cfg.amc.page_size
-        tok_per_page = np.clip(
-            lengths[:, None] - np.arange(self.pool.max_pages)[None, :] * page,
-            0, page)
-        alloc = self.pool.allocated[rows]
-        modes = self.pool.page_mode[rows]
-        n_norm = int((tok_per_page * (alloc & (modes == 0))).sum())
-        n_aug = int((tok_per_page * (alloc & (modes == 1))).sum())
-        return n_norm * per_tok, n_aug * per_tok
-
     def _account_dispatch(self, rows: np.ndarray, n_new: int,
                           read_lengths: Optional[np.ndarray],
                           write_starts: np.ndarray) -> None:
         """Fold one dispatch into the event ledger: weight-side matmul
-        events for `n_new` useful tokens per row, cache reads over
+        events for `n_new` useful tokens per row, state reads over
         `read_lengths` (None for write-only accounting), and the write of
-        the `n_new` tokens from `write_starts`, costed by the mode of the
-        page each token lands in."""
-        if not self._account or rows.size == 0:
+        the `n_new` tokens, costed by the mode of the storage each lands
+        in (the store splits the counts by page/slab mode)."""
+        if rows.size == 0:
             return
-        cfg, a = self.cfg, self.cfg.amc
         n_tok = int(rows.size) * n_new
         self.energy_ledger.add(
-            imc_energy.decode_matmul_events(cfg, n_tok), "weights")
-        if read_lengths is not None:
-            nn, na = self._kv_value_counts(rows, read_lengths)
+            imc_energy.decode_matmul_events(self.cfg, n_tok), "weights")
+        # each part bills at ITS augmented width (a vlm engine's int4 KV
+        # pages and int8 prefix slabs cost different 8T cells/value)
+        for part in self._store_parts():
+            if read_lengths is not None:
+                nn, na = part.read_value_counts(rows, read_lengths)
+                self.energy_ledger.add(
+                    imc_energy.kv_read_events(nn, na,
+                                              aug_bits=part.aug_bits),
+                    "kv_read")
+            wn, wa = part.write_value_counts(rows, n_new, write_starts)
             self.energy_ledger.add(
-                imc_energy.kv_read_events(nn, na, aug_bits=a.aug_bits),
-                "kv_read")
-        per_tok = 2 * cfg.n_layers * cfg.n_kv_heads * cfg.hd
-        if self.paged:
-            pos = write_starts[:, None] + np.arange(n_new)[None, :]
-            lp = np.minimum(pos // a.page_size, self.pool.max_pages - 1)
-            mode = self.pool.page_mode[rows[:, None], lp]
-            alive = self.pool.allocated[rows[:, None], lp]
-            wn = int((alive & (mode == 0)).sum()) * per_tok
-            wa = int((alive & (mode == 1)).sum()) * per_tok
-        else:
-            wn, wa = ((n_tok * per_tok, 0) if a.kv_mode == "normal"
-                      else (0, n_tok * per_tok))
-        self.energy_ledger.add(
-            imc_energy.kv_write_events(wn, wa, aug_bits=a.aug_bits),
-            "kv_write")
-
-    # -- cache view -----------------------------------------------------------
-
-    @property
-    def cache(self):
-        """The decode-state tree: paged arenas or the contiguous cache."""
-        return self.pool.arenas if self.paged else self._cache
-
-    @property
-    def _queue(self) -> deque:
-        return self.scheduler.queue if self.paged else self._legacy_queue
+                imc_energy.kv_write_events(wn, wa, aug_bits=part.aug_bits),
+                "kv_write")
 
     # -- continuous batching ---------------------------------------------------
 
@@ -250,6 +216,20 @@ class ServeEngine:
         immediately, else None — meaning queued, never dropped: the
         scheduler admits it between later decode steps (`generate` and
         `step_all` both drain the queue)."""
+        if req.max_new_tokens < 1:
+            raise ValueError(
+                f"max_new_tokens must be >= 1, got {req.max_new_tokens} "
+                f"(a request that generates nothing would occupy a row "
+                f"forever)")
+        if req.id in self.outputs or any(
+                e.req.id == req.id for e in self.scheduler.queue):
+            # outputs covers running AND completed ids: reusing either
+            # would silently append the new request's tokens onto the
+            # old one's list
+            raise ValueError(
+                f"request id {req.id} is already queued, running or "
+                f"completed on this engine — ids key the output map, so "
+                f"reusing one would silently merge two requests' tokens")
         prompt = np.asarray(req.prompt, np.int32).reshape(-1)
         if prompt.size == 0:
             if self.bos_id is None:
@@ -267,35 +247,27 @@ class ServeEngine:
         entry = QueueEntry(req=req, prompt=prompt,
                            remaining=req.max_new_tokens,
                            enqueue_step=self.step_idx)
-        if self.paged:
-            self.scheduler.enqueue(entry)
-        else:
-            self._legacy_queue.append(entry)
+        self.scheduler.enqueue(entry)
         admitted = self._admit()
         return admitted.get(req.id)
 
     def _admit(self) -> dict[int, int]:
         """Admission pass: move queued requests into free rows while both
-        a row and (paged) pool capacity exist. FIFO, head-of-line."""
+        a row and store capacity exist. FIFO, head-of-line."""
         admitted: dict[int, int] = {}
         while True:
             free = np.flatnonzero(~self.active)
             if free.size == 0:
                 break
             row = int(free[0])
-            if self.paged:
-                entry = self.scheduler.pop_admittable(self.step_idx)
-                if entry is None:
-                    break
-                if not self.scheduler.admit(row, len(entry.prompt),
-                                            self.step_idx):
-                    # can_admit_tokens raced a concurrent change; requeue
-                    self.scheduler.enqueue(entry, front=True)
-                    break
-            else:
-                if not self._legacy_queue:
-                    break
-                entry = self._legacy_queue.popleft()
+            entry = self.scheduler.pop_admittable(self.step_idx)
+            if entry is None:
+                break
+            if not self.scheduler.admit(row, len(entry.prompt),
+                                        self.step_idx):
+                # can_admit_tokens raced a concurrent change; requeue
+                self.scheduler.enqueue(entry, front=True)
+                break
             self._start_row(row, entry)
             admitted[entry.req.id] = row
         return admitted
@@ -316,7 +288,7 @@ class ServeEngine:
         self.last_token[row] = int(prompt[-1])
 
     def _preempt(self, victim: int) -> None:
-        """Preemption: release the victim's pages and requeue it with
+        """Preemption: release the victim's storage and requeue it with
         prompt := prompt + generated-so-far (greedy recompute on resume —
         work is lost, tokens are not)."""
         entry = self._slot_entry[victim]
@@ -340,22 +312,14 @@ class ServeEngine:
 
     # -- prefill ---------------------------------------------------------------
 
-    def _paged_batch(self, extra: dict) -> dict:
-        return {**self.pool.device_tables(), **extra}
-
     def _dispatch(self, fn, batch: dict):
-        """One jitted dispatch against the backend's state tree (the paged
-        arenas or the contiguous cache), with the paged device tables
-        merged in. The ONE place the two backends' dispatch plumbing
-        lives."""
-        if self.paged:
-            batch = self._paged_batch(batch)
+        """One jitted dispatch against the store's state tree, with the
+        store's device tables merged in. The ONE place dispatch plumbing
+        lives — every family, every store kind."""
+        batch = {**self.store.device_tables(), **batch}
         with mesh_context(self.mesh):
-            if self.paged:
-                logits, self.pool.arenas = fn(self.params, self.pool.arenas,
-                                              batch)
-            else:
-                logits, self._cache = fn(self.params, self._cache, batch)
+            logits, self.store.state = fn(self.params, self.store.state,
+                                          batch)
         self.dispatch_count += 1
         return logits
 
@@ -368,15 +332,16 @@ class ServeEngine:
             if not self.scheduler.ensure_position(slot, lp * page,
                                                   self.step_idx):
                 raise RuntimeError(
-                    f"pool exhausted allocating prefill page {lp} of row "
+                    f"store exhausted allocating prefill page {lp} of row "
                     f"{slot}")
 
     def prefill(self, slot: int, tokens: np.ndarray,
                 return_next: bool = False) -> Optional[int]:
-        """Feed `tokens` into the slot's cache rows/pages.
+        """Feed `tokens` into the slot's decode state.
 
         One jitted dispatch per `prefill_chunk` tokens — ceil(P / chunk)
-        total, vs P decode steps for the per-token warmup loop. With
+        total, vs P decode steps for the per-token warmup loop — on
+        families with a chunked prefill step; per-token elsewhere. With
         `return_next` also returns the greedy continuation of the last
         prefilled token — that argmax blocks on the async dispatches, so
         the admission hot path (`add_request`) leaves it off.
@@ -412,8 +377,7 @@ class ServeEngine:
             tok[slot, :shift + n] = tokens[start - shift:start + n]
             positions = self.positions.copy()
             positions[slot] = p - shift
-            if self.paged:
-                self._ensure_prefill_pages(slot, p - shift, p + n - 1)
+            self._ensure_prefill_pages(slot, p - shift, p + n - 1)
             logits = self._dispatch(self._prefill,
                                     {"tokens": jnp.asarray(tok),
                                      "positions": jnp.asarray(positions),
@@ -422,11 +386,9 @@ class ServeEngine:
                                    np.array([p + n]), np.array([p]))
             self.energy_ledger.note_tokens(n)
             self.positions[slot] += n
-            if self.paged:
-                page = self.cfg.amc.page_size
-                lps = np.unique(np.arange(p - shift, p + n) // page)
-                self.pool.note_writes(np.full(lps.size, slot), lps,
-                                      self.step_idx)
+            self.store.note_token_writes(
+                np.full(n + shift, slot), np.arange(p - shift, p + n),
+                self.step_idx)
             last_logits, last_n = logits, shift + n
         if not return_next:
             return None
@@ -439,26 +401,22 @@ class ServeEngine:
         return last
 
     def _step_slot(self, slot: int, token: int) -> int:
-        if self.paged:
-            # defensive: direct prefill() callers may outrun the pages
-            # allocated at admission
-            if not self.scheduler.ensure_position(
-                    slot, int(self.positions[slot]), self.step_idx):
-                raise RuntimeError("pool exhausted during stepwise prefill")
+        # defensive: direct prefill() callers may outrun the storage
+        # reserved at admission
+        if not self.scheduler.ensure_position(
+                slot, int(self.positions[slot]), self.step_idx):
+            raise RuntimeError("store exhausted during stepwise prefill")
         tokens = np.zeros((self.max_batch, 1), np.int32)
         tokens[slot, 0] = token
+        mask = np.zeros(self.max_batch, bool)
+        mask[slot] = True
         batch = {"tokens": jnp.asarray(tokens),
-                 "positions": jnp.asarray(self.positions)}
-        if self.paged:
-            mask = np.zeros(self.max_batch, bool)
-            mask[slot] = True
-            batch["write_mask"] = jnp.asarray(mask)
+                 "positions": jnp.asarray(self.positions),
+                 "write_mask": jnp.asarray(mask)}
         logits = self._dispatch(self._decode, batch)
-        if self.paged:
-            page = self.cfg.amc.page_size
-            self.pool.note_writes(np.array([slot]),
-                                  np.array([self.positions[slot] // page]),
-                                  self.step_idx)
+        self.store.note_token_writes(np.array([slot]),
+                                     np.array([self.positions[slot]]),
+                                     self.step_idx)
         self._account_dispatch(np.array([slot]), 1,
                                np.array([self.positions[slot] + 1]),
                                np.array([self.positions[slot]]))
@@ -469,8 +427,8 @@ class ServeEngine:
     # -- decode ----------------------------------------------------------------
 
     def _ensure_decode_capacity(self) -> None:
-        """Every active row must own the page its next token lands in;
-        under pressure the pool augments cold pages, and when even that
+        """Every active row must own the storage its next token lands in;
+        under pressure the store augments cold storage, and when even that
         fails the youngest-admitted row is preempted (requeued, not
         dropped)."""
         for row in np.flatnonzero(self.active):
@@ -482,13 +440,13 @@ class ServeEngine:
                 victim = self.scheduler.preemption_victim(row, self.active)
                 if victim is None:
                     raise RuntimeError(
-                        "paged pool cannot hold one growing sequence — "
+                        "state store cannot hold one growing sequence — "
                         "budget_bytes too small for max_seq")
                 self._preempt(victim)
 
     def step_all(self, last_tokens: Optional[dict[int, int]] = None) -> dict:
         """One scheduler pass + one batched decode step for every active
-        row: refresh expired augmented pages, admit queued requests into
+        row: refresh expired augmented storage, admit queued requests into
         free rows, grow/augment/preempt for capacity, then dispatch.
 
         `last_tokens` optionally overrides the tracked per-slot feed
@@ -499,16 +457,14 @@ class ServeEngine:
             for s, t in last_tokens.items():
                 self.last_token[s] = t
         self._admit()
-        if self.paged:
-            self.scheduler.refresh_pass(self.step_idx)
-            self._sync_refresh_events()
-            self._ensure_decode_capacity()
+        self.scheduler.refresh_pass(self.step_idx)
+        self._sync_refresh_events()
+        self._ensure_decode_capacity()
         tokens = np.where(self.active, self.last_token, 0
                           ).astype(np.int32)[:, None]
         batch = {"tokens": jnp.asarray(tokens),
-                 "positions": jnp.asarray(self.positions)}
-        if self.paged:
-            batch["write_mask"] = jnp.asarray(self.active)
+                 "positions": jnp.asarray(self.positions),
+                 "write_mask": jnp.asarray(self.active)}
         logits = self._dispatch(self._decode, batch)
         rows = np.flatnonzero(self.active)
         self._account_dispatch(rows, 1, self.positions[rows] + 1,
@@ -518,11 +474,10 @@ class ServeEngine:
         # vectorized slot bookkeeping: no per-slot Python for the numeric
         # state, only the per-request output append below
         act = self.active.copy()
-        if self.paged and act.any():
+        if act.any():
             rows = np.flatnonzero(act)
-            self.pool.note_writes(
-                rows, self.positions[rows] // self.cfg.amc.page_size,
-                self.step_idx)
+            self.store.note_token_writes(rows, self.positions[rows],
+                                         self.step_idx)
         self.positions[act] += 1
         self.remaining[act] -= 1
         self.last_token = np.where(act, arg, self.last_token)
@@ -534,8 +489,7 @@ class ServeEngine:
         for s in np.flatnonzero(done):
             self.slot_req[s] = None          # release row (cont. batching)
             self._slot_entry[s] = None
-            if self.paged:
-                self.scheduler.release_row(int(s))
+            self.scheduler.release_row(int(s))
         self.step_idx += 1
         return {int(s): int(arg[s]) for s in np.flatnonzero(act & ~done)}
 
@@ -545,20 +499,14 @@ class ServeEngine:
         """Augmented-storage accounting (the paper's capacity headline).
 
         Logical bytes = what the dense bf16 representation would occupy;
-        physical bytes = what the augmented planes actually occupy. For
-        the paged pool, cache bytes are the USABLE page capacity (the two
-        one-page write-dump lines are excluded; `pool.arena_bytes`
-        reports the raw allocation). Pool/scheduler/refresh counters ride
-        along under "pool" and "scheduler".
+        physical bytes = what the store's staged planes actually occupy
+        (paged pools exclude the write-dump lines; `describe()` has the
+        raw numbers). Store/scheduler/refresh counters ride along under
+        "pool" and "scheduler".
         """
         a = self.cfg.amc
         weight_phys = sum(x.nbytes for x in jax.tree.leaves(self.params))
-        if self.paged:
-            g = self.pool.geom
-            cache_phys = (self.pool.pages_normal * g.page_bytes_normal
-                          + self.pool.pages_packed * g.page_bytes_aug)
-        else:
-            cache_phys = sum(x.nbytes for x in jax.tree.leaves(self._cache))
+        cache_phys = self.store.physical_bytes()
         # families augment_params doesn't cover keep dense weights: report
         # the physical reality, not the requested mode
         weight_mode = (a.weight_mode if augment.is_augmented(self.params)
@@ -587,9 +535,9 @@ class ServeEngine:
         }
         # array-level event/energy accounting (imc/energy.py): weight-side
         # events follow matmul_impl (IMC wordline/bitline/ADC vs fetch),
-        # cache reads are split by page mode — Normal pages cost 6T read
-        # events, Augmented pages the 8T dynamic-read events (the paper's
-        # Tables III/IV structure)
+        # state reads are split by page/slab mode — Normal storage costs
+        # 6T read events, Augmented the 8T dynamic-read events (the
+        # paper's Tables III/IV structure)
         E = imc_energy.EVENT_ENERGY_FJ
         self._sync_refresh_events()
         imc = self.energy_ledger.describe()
@@ -597,18 +545,17 @@ class ServeEngine:
         imc["imc_abits"] = a.imc_abits
         imc["kv_read_fj_per_value_normal_mode"] = 16 * E["read_6t"]
         imc["kv_read_fj_per_value_augmented_mode"] = (
-            a.aug_bits * E["read_8t_dynamic"])
+            self.store.aug_bits * E["read_8t_dynamic"])
         imc["refresh_energy_fj"] = imc["groups"].get(
             "refresh", {}).get("energy_fj", 0.0)
         out["imc"] = imc
-        if self.paged:
-            pool = self.pool.describe()
-            out["pool"] = pool
-            out["scheduler"] = self.scheduler.describe()
-            for k in ("refreshes", "refresh_bytes", "augment_events",
-                      "promote_events", "maintenance_dispatches"):
-                out[k] = pool[k]
-            out["preemptions"] = self.scheduler.stats["preemptions"]
+        pool = self.store.describe()
+        out["pool"] = pool
+        out["scheduler"] = self.scheduler.describe()
+        for k in ("refreshes", "refresh_bytes", "augment_events",
+                  "promote_events", "maintenance_dispatches"):
+            out[k] = pool[k]
+        out["preemptions"] = self.scheduler.stats["preemptions"]
         return out
 
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
@@ -622,7 +569,7 @@ class ServeEngine:
                 self._admit()
                 if not self.active.any():
                     raise RuntimeError(
-                        "queued requests but nothing admittable — pool "
+                        "queued requests but nothing admittable — store "
                         "misconfigured (budget below one sequence?)")
             self.step_all()
         return self.outputs

@@ -1,26 +1,32 @@
-"""Continuous-batching scheduler over the paged augmented KV pool.
+"""Continuous-batching scheduler over the unified augmented state stores.
 
 Requests enter a FIFO queue and are admitted into the running batch
 between decode steps (slot-free lifecycle: a sequence joins whenever a
-row AND enough pool capacity exist, and leaves the moment it finishes —
+row AND enough store capacity exist, and leaves the moment it finishes —
 `ServeEngine.step_all` drives one scheduler pass per decode dispatch).
 
-Admission control asks the pool whether the request's prompt could be
-stored *right now*, counting the headroom that augmenting cold pages
-would release (`PagedKVPool.can_admit_tokens`). Under pressure the pool
-augments cold Normal pages in place — the paper's on-demand capacity —
-so load beyond the Normal-mode capacity queues briefly instead of being
-rejected; nothing is ever dropped.
+The scheduler is STORE-AGNOSTIC: it talks to any `state_store.StateStore`
+(the paged KV pool of dense/MoE/encdec/vlm rows, the fixed-size augmented
+slab pool of ssm/hybrid rows, or a composite of both) through the same
+interface — can_admit_tokens / admit_row / ensure_position / release_row /
+refresh_due / refresh.
 
-Preemption-by-augmentation: when a RUNNING sequence grows into a new
-page and even augmentation cannot free room, the engine preempts the
-youngest-admitted victim — its pages return to the pool and its request
-re-enters the queue *front* with prompt := prompt + generated-so-far
-(deterministic greedy recompute on resume), so preemption costs work,
-never tokens.
+Admission control asks the store whether the request's decode state could
+be held *right now*, counting the headroom that augmenting cold storage
+would release. Under pressure the store augments cold pages or slabs in
+place — the paper's on-demand capacity — so load beyond the Normal-mode
+capacity queues briefly instead of being rejected; nothing is ever
+dropped.
 
-The refresh scheduler runs first in every pass: augmented pages whose
-`RefreshPolicy` expired (age >= retention_steps decode steps) are
+Preemption-by-augmentation: when a RUNNING sequence grows into new
+storage and even augmentation cannot free room, the engine preempts the
+youngest-admitted victim — its storage returns to the store and its
+request re-enters the queue *front* with prompt := prompt +
+generated-so-far (deterministic greedy recompute on resume), so
+preemption costs work, never tokens.
+
+The refresh scheduler runs first in every pass: augmented storage whose
+`RefreshPolicy` expired (age >= retention_steps decode steps) is
 re-materialized in place or promoted back to Normal, with the traffic
 accounted in `stats()` — interleaved with decode exactly like DRAM
 refresh cycles steal array bandwidth.
@@ -32,8 +38,6 @@ from collections import deque
 from typing import Optional
 
 import numpy as np
-
-from repro.serve.cache_pool import PagedKVPool
 
 
 @dataclasses.dataclass
@@ -56,8 +60,8 @@ class QueueEntry:
 
 
 class Scheduler:
-    def __init__(self, pool: PagedKVPool, *, max_batch: int):
-        self.pool = pool
+    def __init__(self, store, *, max_batch: int):
+        self.store = store
         self.max_batch = max_batch
         self.queue: deque[QueueEntry] = deque()
         self._admit_ticket = 0
@@ -80,30 +84,25 @@ class Scheduler:
                                              len(self.queue))
 
     def pop_admittable(self, step: int) -> Optional[QueueEntry]:
-        """FIFO head if the pool could hold its prompt right now (counting
-        augmentation headroom); head-of-line order is preserved — a big
-        request is never starved by smaller ones jumping the queue."""
+        """FIFO head if the store could hold its decode state right now
+        (counting augmentation headroom); head-of-line order is preserved
+        — a big request is never starved by smaller ones jumping the
+        queue."""
         if not self.queue:
             return None
         entry = self.queue[0]
-        if not self.pool.can_admit_tokens(max(len(entry.prompt), 1)):
+        if not self.store.can_admit_tokens(max(len(entry.prompt), 1)):
             return None
         self.queue.popleft()
         self.stats["queue_wait_steps"] += step - entry.enqueue_step
         return entry
 
-    # -- page lifecycle -------------------------------------------------------
+    # -- state lifecycle ------------------------------------------------------
 
     def admit(self, row: int, n_tokens: int, step: int) -> bool:
-        """Allocate the prompt's pages for a fresh row; all-or-nothing."""
-        pages = -(-max(n_tokens, 1) // self.pool.geom.page_size)
-        done = []
-        for lp in range(pages):
-            if not self.pool.alloc_page(row, lp, step):
-                for d in done:
-                    self.pool._release(row, d)
-                return False
-            done.append(lp)
+        """Reserve the row's decode state in the store; all-or-nothing."""
+        if not self.store.admit_row(row, n_tokens, step):
+            return False
         self._admit_ticket += 1
         self.row_ticket[row] = self._admit_ticket
         self.stats["admitted"] += 1
@@ -113,20 +112,13 @@ class Scheduler:
         return True
 
     def ensure_position(self, row: int, pos: int, step: int) -> bool:
-        """Guarantee the page holding `pos` exists before a decode writes
-        it (sequences grow one token per step; augmentation pressure is
-        applied inside the pool's allocator)."""
-        lp = pos // self.pool.geom.page_size
-        assert lp < self.pool.max_pages, (
-            f"position {pos} past the page table ({self.pool.max_pages} "
-            f"pages): the engine's max_seq done-condition should retire "
-            f"rows before this")
-        if self.pool.allocated[row, lp]:
-            return True
-        return self.pool.alloc_page(row, lp, step)
+        """Guarantee storage for the token at `pos` exists before a decode
+        writes it (paged stores grow a page at a time; slab stores are
+        fixed-size and always succeed for admitted rows)."""
+        return self.store.ensure_position(row, pos, step)
 
     def release_row(self, row: int) -> None:
-        self.pool.free_row(row)
+        self.store.release_row(row)
         self.row_ticket[row] = -1
 
     def preemption_victim(self, protect: int,
@@ -141,11 +133,11 @@ class Scheduler:
     # -- refresh --------------------------------------------------------------
 
     def refresh_pass(self, step: int) -> int:
-        """Drain every expired augmented page (DRAM-style refresh cycle,
-        interleaved with decode). Returns pages refreshed."""
-        due = self.pool.refresh_due(step)
-        for row, lp in due:
-            self.pool.refresh_page(row, lp, step)
+        """Drain every expired augmented page/slab (DRAM-style refresh
+        cycle, interleaved with decode). Returns units refreshed."""
+        due = self.store.refresh_due(step)
+        for key in due:
+            self.store.refresh(key, step)
         if due:
             self.stats["refresh_passes"] += 1
         return len(due)

@@ -148,11 +148,11 @@ def test_double_preemption_does_not_duplicate_tokens():
 # queue-backed add_request (regression: full batch used to drop to None)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("paged", [True, False])
-def test_add_request_enqueues_when_full_never_drops(paged):
-    cfg = _cfg(kv_mode="normal")
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "mamba2-130m"])
+def test_add_request_enqueues_when_full_never_drops(arch):
+    cfg = get_arch(arch).reduced()
     eng = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=32,
-                      prefill_chunk=8, paged=paged)
+                      prefill_chunk=8)
     rng = np.random.default_rng(5)
     r0, r1, r2 = _reqs(rng, cfg, 3, plen=4, max_new=3)
     assert eng.add_request(r0) == 0          # admitted immediately
@@ -165,6 +165,44 @@ def test_add_request_enqueues_when_full_never_drops(paged):
         eng.step_all()
     assert sorted(eng.outputs) == [0, 1, 2]
     assert all(len(eng.outputs[i]) == 3 for i in range(3))
+
+
+# ---------------------------------------------------------------------------
+# add_request validation (regression: bad requests used to grow the queue
+# silently — a max_new_tokens=0 row would occupy its slot forever, and a
+# duplicate id would merge two requests' outputs)
+# ---------------------------------------------------------------------------
+
+def test_add_request_rejects_nonpositive_budget():
+    cfg = _cfg(kv_mode="normal")
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=16)
+    with pytest.raises(ValueError, match="max_new_tokens"):
+        eng.add_request(Request(prompt=np.array([1, 2], np.int32),
+                                max_new_tokens=0, id=0))
+    assert len(eng._queue) == 0              # rejected, not queued
+
+
+def test_add_request_rejects_duplicate_inflight_id():
+    cfg = _cfg(kv_mode="normal")
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=1, max_seq=16)
+    rng = np.random.default_rng(11)
+    r0, r1, r2 = _reqs(rng, cfg, 3, plen=3, max_new=2)
+    r1.id = r0.id                            # same id, running
+    assert eng.add_request(r0) == 0
+    with pytest.raises(ValueError, match="already queued"):
+        eng.add_request(r1)
+    r2.id = 7
+    eng.add_request(r2)                      # queued (batch full)
+    dup = Request(prompt=r2.prompt, max_new_tokens=2, id=7)
+    with pytest.raises(ValueError, match="already queued"):
+        eng.add_request(dup)
+    while eng.active.any() or eng._queue:
+        eng.step_all()
+    assert sorted(eng.outputs) == [0, 7]
+    # COMPLETED ids are reserved too: outputs keys the token lists, so a
+    # recycled id would append the new request's tokens onto the old ones
+    with pytest.raises(ValueError, match="completed"):
+        eng.add_request(Request(prompt=r2.prompt, max_new_tokens=2, id=0))
 
 
 # ---------------------------------------------------------------------------
@@ -194,22 +232,166 @@ def test_empty_prompt_with_bos_matches_explicit_prompt():
 
 
 # ---------------------------------------------------------------------------
-# paged engine vs legacy contiguous engine (single-mode golden)
+# unified engine vs the pre-refactor contiguous engine (pinned goldens)
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("kv_mode", ["normal", "int8"])
-def test_paged_engine_matches_legacy_contiguous(kv_mode):
-    """With page_size == max_seq the paged kernel's block walk matches the
-    contiguous kernel's, so greedy outputs must agree exactly."""
-    cfg = _cfg(kv_mode=kv_mode, page_size=32)
-    rng = np.random.default_rng(7)
+# Greedy tokens captured from the PRE-REFACTOR engine (legacy contiguous
+# slot cache for ssm/hybrid/audio/vlm, paged pool for dense/moe), one
+# ISOLATED single-request run per prompt: prompts = default_rng(42) of
+# lengths (5, 9), seed=0, max_batch=2, max_seq=32, prefill_chunk=8,
+# max_new_tokens=6. The unified engine must reproduce these tokens in a
+# BATCHED run: the legacy engine leaked one request's pad-token
+# dispatches into co-scheduled rows' recurrent state (no write masking,
+# no admission reset — its batched ssm/hybrid outputs depended on
+# traffic), while the unified slab store write-masks store-back and
+# resets slabs at admission, so every request decodes exactly as if it
+# were alone. For the paged families the legacy batched run already
+# equalled these isolated tokens (write-masked scatter predates this
+# refactor).
+_PRE_REFACTOR_GOLDENS = {
+    "qwen1.5-0.5b": {0: [34, 34, 34, 139, 139, 139],               # dense
+                     1: [84, 226, 226, 226, 226, 226]},
+    "qwen3-moe-30b-a3b": {0: [263, 390, 55, 55, 55, 55],           # moe
+                          1: [300, 316, 217, 300, 300, 9]},
+    "mamba2-130m": {0: [59, 376, 223, 235, 253, 266],              # ssm
+                    1: [361, 384, 297, 505, 179, 44]},
+    "recurrentgemma-9b": {0: [430, 373, 307, 305, 84, 392],        # hybrid
+                          1: [392, 336, 316, 170, 10, 316]},
+    "whisper-tiny": {0: [126, 126, 126, 296, 296, 126],            # audio
+                     1: [296, 126, 126, 126, 315, 126]},
+    "llama-3.2-vision-11b": {0: [46] * 6,                          # vlm
+                             1: [409, 234, 461, 461, 461, 461]},
+}
+
+
+@pytest.mark.parametrize("arch", sorted(_PRE_REFACTOR_GOLDENS))
+def test_unified_engine_matches_pre_refactor_golden(arch):
+    """Every family decodes through Scheduler + state store now; greedy
+    outputs must stay token-identical to the pinned pre-refactor run."""
+    cfg = get_arch(arch).reduced()
+    rng = np.random.default_rng(42)
     prompts = [rng.integers(0, cfg.vocab, size=(n,)).astype(np.int32)
                for n in (5, 9)]
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                      prefill_chunk=8, seed=0)
+    outs = eng.generate([Request(prompt=p, max_new_tokens=6, id=i)
+                         for i, p in enumerate(prompts)])
+    assert outs == _PRE_REFACTOR_GOLDENS[arch]
 
-    def run(paged):
+
+# ---------------------------------------------------------------------------
+# unified-store admission / refresh / preemption for the non-KV families
+# ---------------------------------------------------------------------------
+
+def _slab_cfg(arch, pool_mode, **amc):
+    cfg = get_arch(arch).reduced()
+    return dataclasses.replace(
+        cfg, amc=dataclasses.replace(cfg.amc, pool_mode=pool_mode, **amc))
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "recurrentgemma-9b",
+                                  "whisper-tiny"])
+def test_zero_drops_at_4x_offered_load_all_families(arch):
+    """The acceptance sweep holds for recurrent-state and encdec rows
+    too: 4x max_batch offered at once, everything completes."""
+    cfg = get_arch(arch).reduced()
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                      prefill_chunk=16)
+    rng = np.random.default_rng(0)
+    reqs = _reqs(rng, cfg, 4 * eng.max_batch)
+    outs = eng.generate(reqs)
+    assert sorted(outs) == list(range(8))
+    assert all(len(outs[i]) == 4 for i in range(8))
+    assert len(eng.scheduler.queue) == 0
+    assert eng.scheduler.stats["peak_queue_depth"] >= 6
+
+
+def test_slab_augment_on_pressure_admits_more_at_equal_bytes():
+    """The paper's on-demand capacity, for RECURRENT state: at the same
+    byte budget the augment-on-pressure slab pool reaches strictly higher
+    peak concurrency than normal-only (cold slabs quantized in place)."""
+    rng = np.random.default_rng(1)
+    probe = ServeEngine(get_arch("mamba2-130m").reduced(),
+                        make_local_mesh(), max_batch=4, max_seq=32)
+    budget = 2 * probe.store.slab_bytes_normal
+    del probe
+    peaks, stores = {}, {}
+    for mode in ("normal-only", "augment-on-pressure"):
+        cfg = _slab_cfg("mamba2-130m", mode)
+        eng = ServeEngine(cfg, make_local_mesh(), max_batch=4, max_seq=32,
+                          prefill_chunk=16, pool_budget_bytes=budget)
+        outs = eng.generate(_reqs(rng, cfg, 8, plen=8, max_new=4))
+        assert all(len(outs[i]) == 4 for i in range(8)), mode
+        peaks[mode] = eng.scheduler.stats["peak_concurrency"]
+        stores[mode] = eng.stats()["pool"]
+    assert peaks["augment-on-pressure"] > peaks["normal-only"], peaks
+    assert stores["augment-on-pressure"]["augment_events"] > 0
+    assert stores["normal-only"]["augment_events"] == 0
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "recurrentgemma-9b"])
+def test_slab_refresh_invariant_always_augmented(arch):
+    """Augmented slabs are dynamic storage: decode re-writes (restamps)
+    them every step, so no slab may outlive retention_steps unrefreshed
+    — and the requests still complete (the quantize/dequantize round
+    trip is lossy but serving-stable)."""
+    cfg = _slab_cfg(arch, "always-augmented", retention_steps=2)
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                      prefill_chunk=16)
+    rng = np.random.default_rng(2)
+    for r in _reqs(rng, cfg, 2, plen=6, max_new=6):
+        eng.add_request(r)
+    assert int(eng.store.slot_mode[eng.active].sum()) == 2  # all augmented
+    while eng.active.any():
+        eng.step_all()
+        age = eng.store.max_augmented_age(eng.step_idx)
+        assert age <= cfg.amc.retention_steps, (age, eng.step_idx)
+    assert all(len(v) == 6 for v in eng.outputs.values())
+
+
+def test_static_prefix_pages_refresh_and_account():
+    """The encdec cross-KV prefix band is COLD storage: under an
+    always-augmented pool its pages expire every retention_steps and the
+    refresh pass restamps them — genuine refresh traffic in stats()."""
+    cfg = get_arch("whisper-tiny").reduced()
+    cfg = dataclasses.replace(
+        cfg, amc=dataclasses.replace(cfg.amc, kv_mode="int8",
+                                     retention_steps=2))
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
+                      prefill_chunk=16)
+    assert eng.store.prefix_pages > 0
+    rng = np.random.default_rng(3)
+    outs = eng.generate(_reqs(rng, cfg, 2, plen=6, max_new=8))
+    assert all(len(v) == 8 for v in outs.values())
+    st = eng.stats()
+    assert st["refreshes"] > 0
+    assert st["refresh_bytes"] > 0
+
+
+@pytest.mark.parametrize("arch", ["mamba2-130m", "recurrentgemma-9b"])
+def test_preemption_recompute_token_identity_slab_families(arch):
+    """Mirror of the dense preemption golden for recurrent-state rows:
+    preempt a running request mid-generation, let greedy recompute
+    resume it, and require the exact tokens of an unpreempted run."""
+    cfg = get_arch(arch).reduced()
+    rng = np.random.default_rng(4)
+    prompt = rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+
+    def run(preempt: bool):
         eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
-                          prefill_chunk=8, seed=8, paged=paged)
-        return eng.generate([Request(prompt=p, max_new_tokens=4, id=i)
-                             for i, p in enumerate(prompts)])
+                          prefill_chunk=8, seed=5)
+        eng.add_request(Request(prompt=prompt, max_new_tokens=6, id=0))
+        eng.step_all()
+        eng.step_all()                       # 2 tokens generated
+        if preempt:
+            eng._preempt(0)                  # slab freed, entry requeued
+            assert not eng.active.any()
+        while eng.active.any() or eng._queue:
+            eng.step_all()
+        return eng.outputs[0], eng.scheduler.stats["preemptions"]
 
-    assert run(True) == run(False)
+    plain, p0 = run(False)
+    resumed, p1 = run(True)
+    assert p0 == 0 and p1 == 1
+    assert len(plain) == 6
+    assert plain == resumed                  # recompute reproduced tokens

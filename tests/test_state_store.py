@@ -1,0 +1,300 @@
+"""Unified decode-state stores: slab quantization roundtrips, mode
+switching, the shared byte-budget invariant (hypothesis), composite
+admission atomicity, and the store registry."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import ShapeConfig
+from repro.models import model as M
+from repro.serve.cache_pool import PagedKVPool
+from repro.serve.state_store import (AugmentedStatePool, CompositeStore,
+                                     make_store, slab_reconstitute,
+                                     slab_store_back)
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _amc(cfg, **kw):
+    return dataclasses.replace(cfg, amc=dataclasses.replace(cfg.amc, **kw))
+
+
+def _slab_pool(pool_mode="augment-on-pressure", *, max_batch=4,
+               budget_slabs=None, state_bits=8, arch="mamba2-130m",
+               retention_steps=4):
+    cfg = _amc(get_arch(arch).reduced(), pool_mode=pool_mode,
+               state_bits=state_bits)
+    shape = ShapeConfig("t", 32, max_batch, "decode")
+    specs = M.abstract_cache(cfg, shape)
+    pool = AugmentedStatePool(cfg, specs, max_batch=max_batch,
+                              retention_steps=retention_steps)
+    if budget_slabs is not None:
+        pool.budget_bytes = budget_slabs * pool.slab_bytes_normal
+    return pool
+
+
+# ---------------------------------------------------------------------------
+# slab plane roundtrips
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bits", [8, 4])
+def test_slab_quant_roundtrip_accuracy(bits):
+    """reconstitute(store_back(x)) on an augmented slot approximates x
+    within the symmetric-quant error bound; a Normal slot is exact."""
+    pool = _slab_pool(state_bits=bits, max_batch=2)
+    key = jax.random.PRNGKey(0)
+    cache = jax.tree.map(
+        lambda l: (jax.random.normal(key, l.shape, jnp.float32)
+                   .astype(l.dtype) if jnp.issubdtype(l.dtype, jnp.floating)
+                   else l),
+        pool.state["normal"])
+    modes = jnp.array([0, 1], jnp.int32)
+    state = slab_store_back(pool.state, cache, modes, bits)
+    back = slab_reconstitute(state, modes, bits)
+    qmax = 127 if bits == 8 else 7
+    for path, (a, b) in zip(
+            jax.tree_util.tree_flatten_with_path(cache)[0],
+            zip(jax.tree.leaves(cache), jax.tree.leaves(back))):
+        a32, b32 = a.astype(jnp.float32), b.astype(jnp.float32)
+        # Normal slot: bit-identical
+        np.testing.assert_array_equal(np.asarray(a32[:, 0]),
+                                      np.asarray(b32[:, 0]))
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            continue
+        # Augmented slot: within ~1 LSB of the per-vector scale (bf16
+        # scale storage adds a relative half-percent on top)
+        amax = jnp.max(jnp.abs(a32[:, 1]), axis=-1, keepdims=True)
+        tol = np.asarray(amax / qmax + 0.01 * amax + 1e-6)
+        err = np.asarray(jnp.abs(a32[:, 1] - b32[:, 1]))
+        assert (err <= tol).all(), (path, float(err.max()))
+
+
+def test_slab_scale_leaves_pass_through_state_bits4():
+    """Regression: a packed ring-KV's companion scale tensors (trailing
+    dim 1) must NOT be swept into the quantizable set — with
+    state_bits=4 that used to crash at construction (odd trailing dim),
+    and at int8 it silently re-quantized the scales."""
+    cfg = _amc(get_arch("recurrentgemma-9b").reduced(), kv_mode="int4",
+               pool_mode="always-augmented", state_bits=4)
+    shape = ShapeConfig("t", 32, 2, "decode")
+    pool = AugmentedStatePool(cfg, M.abstract_cache(cfg, shape),
+                              max_batch=2)           # must not raise
+    assert all(not k.endswith("_scale']") for k in pool.state["packed"])
+    cache = jax.tree.map(
+        lambda l: jnp.full_like(l, 2) if l.dtype == jnp.bfloat16
+        and l.shape[-1] == 1 else l, pool.state["normal"])
+    modes = jnp.array([1, 1], jnp.int32)
+    back = slab_reconstitute(slab_store_back(pool.state, cache, modes, 4),
+                             modes, 4)
+    for (path, a), b in zip(jax.tree_util.tree_flatten_with_path(cache)[0],
+                            jax.tree.leaves(back)):
+        if a.shape[-1] == 1 and jnp.issubdtype(a.dtype, jnp.floating):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_slab_int_leaves_pass_through_unchanged():
+    """Already-packed integer leaves (hybrid int8 ring KV) are packed
+    storage: augmentation must not touch them."""
+    cfg = _amc(get_arch("recurrentgemma-9b").reduced(), kv_mode="int8",
+               pool_mode="always-augmented")
+    shape = ShapeConfig("t", 32, 2, "decode")
+    pool = AugmentedStatePool(cfg, M.abstract_cache(cfg, shape),
+                              max_batch=2)
+    int_leaves = [l for l in jax.tree.leaves(pool.state["normal"])
+                  if not jnp.issubdtype(l.dtype, jnp.floating)]
+    assert int_leaves, "expected packed ring-KV leaves"
+    cache = jax.tree.map(
+        lambda l: jnp.ones_like(l) if not jnp.issubdtype(
+            l.dtype, jnp.floating) else l, pool.state["normal"])
+    modes = jnp.array([1, 1], jnp.int32)
+    state = slab_store_back(pool.state, cache, modes, 8)
+    back = slab_reconstitute(state, modes, 8)
+    for a, b in zip(jax.tree.leaves(cache), jax.tree.leaves(back)):
+        if not jnp.issubdtype(a.dtype, jnp.floating):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# slab lifecycle: admit / augment / promote / refresh / release
+# ---------------------------------------------------------------------------
+
+def test_slab_admission_prefers_normal_then_augments_under_pressure():
+    pool = _slab_pool(budget_slabs=2, max_batch=4)
+    step = 0
+    assert pool.admit_row(0, 5, step) and pool.slot_mode[0] == 0
+    assert pool.admit_row(1, 5, step) and pool.slot_mode[1] == 0
+    assert pool.live_bytes == 2 * pool.slab_bytes_normal
+    # third admission: no normal room -> coldest slabs augmented in place
+    assert pool.can_admit_tokens(5)
+    assert pool.admit_row(2, 5, step)
+    assert pool.slot_mode[2] == 1
+    assert pool.stats["augment_events"] >= 1
+    assert pool.live_bytes <= pool.budget_bytes
+    pool.release_row(2)
+    assert pool.live_bytes <= 2 * pool.slab_bytes_normal
+
+
+def test_slab_budget_rejects_when_even_augmentation_cannot_fit():
+    pool = _slab_pool(budget_slabs=1, max_batch=4)
+    assert pool.admit_row(0, 5, 0)
+    admitted = []
+    for row in (1, 2, 3):
+        if pool.can_admit_tokens(5) and pool.admit_row(row, 5, 0):
+            admitted.append(row)
+    # an aug slab costs > slab_normal/3 here, so at most 2 more fit —
+    # and the pool must have said no rather than blow the budget
+    assert pool.live_bytes <= pool.budget_bytes
+
+
+def test_slab_refresh_restamps_and_promotes():
+    pool = _slab_pool(budget_slabs=4, max_batch=2, retention_steps=2)
+    assert pool.admit_row(0, 5, 0)
+    pool.augment_slot(0, 0)
+    assert pool.slot_mode[0] == 1
+    assert pool.refresh_due(1) == []
+    due = pool.refresh_due(2)                # age == retention_steps
+    assert due == [0]
+    pool.refresh(0, 2)                       # budget has room -> promote
+    assert pool.slot_mode[0] == 0
+    assert pool.stats["promote_events"] == 1
+    assert pool.stats["refreshes"] == 1
+    assert pool.stats["refresh_bytes"] > 0
+
+
+def test_static_slab_is_never_restamped_by_writes():
+    pool = _slab_pool(budget_slabs=4, max_batch=2, retention_steps=2)
+    pool.static = True
+    assert pool.admit_row(0, 5, 0)
+    pool.augment_slot(0, 0)
+    pool.note_token_writes(np.array([0]), np.array([3]), 1)
+    assert pool.refresh_due(2) == [0]        # write did NOT restamp
+
+
+# ---------------------------------------------------------------------------
+# budget invariant under random admit / preempt / refresh (hypothesis)
+# ---------------------------------------------------------------------------
+
+def _drive_ops(pool, ops):
+    """Replay an op sequence against a store; the invariant under test is
+    live_bytes <= budget_bytes at EVERY boundary (plus non-negativity)."""
+    step = 0
+    for row, op in ops:
+        step += 1
+        if op == 0:                                        # admit
+            if not pool.slot_alloc[row] and pool.can_admit_tokens(5):
+                assert pool.admit_row(row, 5, step)
+        elif op == 1:                                      # release/preempt
+            pool.release_row(row)
+        elif op == 2:                                      # decode write
+            rows = np.flatnonzero(pool.slot_alloc)
+            pool.note_token_writes(rows, np.zeros_like(rows), step)
+        else:                                              # refresh pass
+            for key in pool.refresh_due(step):
+                pool.refresh(key, step)
+        assert 0 <= pool.live_bytes <= pool.budget_bytes, (row, op, step)
+    recount = sum(pool._cost(int(pool.slot_mode[r]))
+                  for r in np.flatnonzero(pool.slot_alloc))
+    assert recount == pool.live_bytes
+
+
+def _random_ops(rng, n=40, rows=4):
+    return [(int(rng.integers(0, rows)), int(rng.integers(0, 4)))
+            for _ in range(n)]
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**31 - 1),
+           budget_slabs=st.integers(1, 4),
+           mode=st.sampled_from(["normal-only", "augment-on-pressure",
+                                 "always-augmented"]))
+    def test_slab_budget_invariant_random_ops(seed, budget_slabs, mode):
+        pool = _slab_pool(mode, budget_slabs=budget_slabs, max_batch=4,
+                          retention_steps=2)
+        _drive_ops(pool, _random_ops(np.random.default_rng(seed)))
+else:
+    @pytest.mark.parametrize("seed,budget_slabs,mode", [
+        (s, b, m) for s in (0, 1, 2)
+        for b in (1, 3)
+        for m in ("normal-only", "augment-on-pressure",
+                  "always-augmented")])
+    def test_slab_budget_invariant_random_ops(seed, budget_slabs, mode):
+        pool = _slab_pool(mode, budget_slabs=budget_slabs, max_batch=4,
+                          retention_steps=2)
+        _drive_ops(pool, _random_ops(np.random.default_rng(seed)))
+
+
+def test_paged_pool_budget_invariant_random_ops():
+    """Same invariant through the unified interface on the PAGED store
+    (the other StateStore implementation)."""
+    cfg = _amc(get_arch("qwen1.5-0.5b").reduced(),
+               pool_mode="augment-on-pressure")
+    rng = np.random.default_rng(7)
+    pool = PagedKVPool(cfg, max_batch=4, max_seq=32,
+                       budget_bytes=3 * 16384)
+    step = 0
+    for row, op in _random_ops(rng, n=60):
+        step += 1
+        if op == 0:
+            if not pool.allocated[row].any() and pool.can_admit_tokens(20):
+                assert pool.admit_row(row, 20, step)
+        elif op == 1:
+            pool.release_row(row)
+        elif op == 2:
+            rows = np.flatnonzero(pool.allocated[:4].any(axis=1))
+            pool.note_token_writes(rows, np.zeros_like(rows), step)
+        else:
+            for key in pool.refresh_due(step):
+                pool.refresh(key, step)
+        assert 0 <= pool.live_bytes <= pool.budget_bytes, (row, op, step)
+
+
+# ---------------------------------------------------------------------------
+# composite store + registry
+# ---------------------------------------------------------------------------
+
+def test_composite_admission_is_atomic():
+    """If one part cannot admit, the other part's reservation rolls
+    back — no orphaned capacity."""
+    cfg = get_arch("llama-3.2-vision-11b").reduced()
+    store = make_store(cfg, max_batch=2, max_seq=32)
+    assert isinstance(store, CompositeStore)
+    # choke the prefix part: one slab budget only
+    prefix = store.parts["prefix"]
+    prefix.budget_bytes = prefix.slab_bytes_normal
+    assert store.admit_row(0, 5, 0)
+    kv_live = store.parts["kv"].live_bytes
+    assert not store.can_admit_tokens(5)
+    assert not store.admit_row(1, 5, 0)
+    assert store.parts["kv"].live_bytes == kv_live     # rolled back
+    assert not store.parts["kv"].allocated[1].any()
+    store.release_row(0)
+    assert store.live_bytes == 0
+
+
+@pytest.mark.parametrize("arch,kind", [
+    ("qwen1.5-0.5b", "paged"), ("qwen3-moe-30b-a3b", "paged"),
+    ("whisper-tiny", "paged"), ("llama-3.2-vision-11b", "composite"),
+    ("mamba2-130m", "slab"), ("recurrentgemma-9b", "slab")])
+def test_store_registry_covers_every_family(arch, kind):
+    cfg = get_arch(arch).reduced()
+    store = make_store(cfg, max_batch=2, max_seq=32)
+    assert store.kind == kind
+    if arch == "whisper-tiny":
+        assert store.prefix_pages > 0       # cross-KV static band
+    # the whole interface surface exists
+    for name in ("can_admit_tokens", "admit_row", "ensure_position",
+                 "release_row", "note_token_writes", "refresh_due",
+                 "refresh", "max_augmented_age", "device_tables",
+                 "read_value_counts", "write_value_counts",
+                 "physical_bytes", "describe"):
+        assert callable(getattr(store, name)), (arch, name)
+    assert store.budget_bytes > 0 and store.live_bytes == 0
