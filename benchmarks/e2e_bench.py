@@ -20,14 +20,14 @@ from repro.optim import adamw
 from repro.train import step as step_lib
 
 
-def bench_train_step():
+def bench_train_step(seed: int = 0):
     cfg = get_arch("qwen1.5-0.5b").reduced()
     B, S = 4, 128
-    params = init_params(M.abstract_params(cfg), jax.random.PRNGKey(0))
-    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (B, S), 0,
-                                          cfg.vocab),
-             "targets": jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
-                                           cfg.vocab)}
+    params = init_params(M.abstract_params(cfg), jax.random.PRNGKey(seed))
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                          (B, S), 0, cfg.vocab),
+             "targets": jax.random.randint(jax.random.PRNGKey(seed + 2),
+                                           (B, S), 0, cfg.vocab)}
     for opt in ("adamw", "amc_adamw"):
         settings = step_lib.TrainSettings(optimizer=opt, q_chunk=64)
         init_fn, _ = adamw.make_optimizer(opt)
@@ -45,13 +45,14 @@ def bench_train_step():
             f"tokens={B*S} opt_state_bytes={opt_bytes}")
 
 
-def bench_decode_kv_modes():
+def bench_decode_kv_modes(seed: int = 0):
     base = get_arch("granite-3-2b").reduced()
     B, S = 4, 256
     shape = ShapeConfig("d", S, B, "decode")
     for mode in ("normal", "int8", "int4"):
         cfg = dataclasses.replace(base, amc=AMCConfig(kv_mode=mode))
-        params = init_params(M.abstract_params(cfg), jax.random.PRNGKey(0))
+        params = init_params(M.abstract_params(cfg),
+                             jax.random.PRNGKey(seed))
         cache = jax.tree.map(
             lambda l: jnp.zeros(l.shape, l.jdtype),
             M.abstract_cache(cfg, shape),
@@ -73,7 +74,7 @@ def bench_decode_kv_modes():
             f"cache_bytes={cache_bytes} tok_per_s={B/(us/1e6):.0f}")
 
 
-def bench_serve_prefill_decode() -> dict:
+def bench_serve_prefill_decode(seed: int = 0) -> dict:
     """Serving hot path on the reduced config: prefill tokens/sec with
     single-dispatch chunked prefill (vs the P-dispatch per-token loop),
     decode steps/sec through `step_all`, and the modeled HBM traffic of
@@ -85,8 +86,8 @@ def bench_serve_prefill_decode() -> dict:
     cfg = get_arch("qwen1.5-0.5b").reduced()
     chunk, plen, new_tokens = 16, 33, 8
     eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=64,
-                      prefill_chunk=chunk)
-    rng = np.random.default_rng(0)
+                      prefill_chunk=chunk, seed=seed)
+    rng = np.random.default_rng(seed)
 
     def mk(i):
         return Request(prompt=rng.integers(0, cfg.vocab, size=(plen,))
@@ -138,7 +139,7 @@ def bench_serve_prefill_decode() -> dict:
     }
 
 
-def bench_serve_matrix() -> dict:
+def bench_serve_matrix(seed: int = 0) -> dict:
     """The kv_mode x weight_mode serving matrix on the reduced config:
     decode steps/s through the real engine (Pallas kernels in interpret
     mode on CPU — relative numbers only) plus the modeled full-scale
@@ -148,7 +149,7 @@ def bench_serve_matrix() -> dict:
     from repro.serve import Request, ServeEngine
 
     base = get_arch("qwen1.5-0.5b").reduced()
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     prompt = rng.integers(0, base.vocab, size=(5,)).astype(np.int32)
     matrix = {}
     for kv_mode in ("normal", "int8", "int4"):
@@ -182,10 +183,90 @@ def bench_serve_matrix() -> dict:
     return matrix
 
 
-def run_all() -> dict:
-    """Runs every e2e bench; returns the BENCH_serve.json payload."""
-    bench_train_step()
-    bench_decode_kv_modes()
-    payload = bench_serve_prefill_decode()
-    payload["matrix"] = bench_serve_matrix()
+def bench_serve_speculative(seed: int = 0, tiny: bool = False) -> dict:
+    """Self-speculative decoding sweep: spec_k x family, against the
+    SAME requests at spec_k=1 (the stepwise baseline). Reports decode
+    tokens/s wall-clock, useful-tokens-per-dispatch, and verifies the
+    emitted streams are token-identical to stepwise — the accept/rollback
+    guarantee, measured end-to-end. Engines are warmed up (all dispatch
+    shapes compiled) before the timed run so interpret-mode compile cost
+    stays out of the tokens/s numbers."""
+    from repro.serve import Request, ServeEngine
+
+    families = {"dense": ("qwen1.5-0.5b", dict(kv_mode="int4")),
+                "moe": ("qwen3-moe-30b-a3b", dict(kv_mode="int4")),
+                "ssm": ("mamba2-130m", {})}
+    if tiny:
+        families = {"dense": families["dense"]}
+    spec_ks = (1, 2) if tiny else (1, 2, 4, 8)
+    max_new = 8 if tiny else 16
+    out: dict = {}
+    for fam, (arch, knobs) in families.items():
+        cfg = get_arch(arch).reduced()
+        rng = np.random.default_rng(seed)
+        prompts = [rng.integers(0, cfg.vocab, size=(6,)).astype(np.int32)
+                   for _ in range(3)]
+        fam_out: dict = {}
+        golden = None
+        for k in spec_ks:
+            eng = ServeEngine(cfg, make_local_mesh(), max_batch=3,
+                              max_seq=64, prefill_chunk=16, spec_k=k,
+                              seed=seed, **knobs)
+            # warmup request compiles prefill + decode + draft + verify
+            eng.generate([Request(prompt=prompts[0].copy(),
+                                  max_new_tokens=2, id=999)])
+            reqs = [Request(prompt=p.copy(), max_new_tokens=max_new, id=i)
+                    for i, p in enumerate(prompts)]
+            t0 = time.perf_counter()
+            outs = eng.generate(reqs)
+            dt = time.perf_counter() - t0
+            outs = {i: outs[i] for i in range(len(prompts))}
+            if golden is None:
+                golden = outs
+            sp = eng.stats()["spec"]
+            tokens = sum(len(v) for v in outs.values())
+            fam_out[f"spec_k={k}"] = {
+                "tokens": tokens,
+                "wall_s": dt,
+                "tokens_per_s": tokens / dt,
+                "accepted_tokens_per_dispatch":
+                    sp["accepted_tokens_per_dispatch"],
+                "accepted_tokens_per_round":
+                    sp["accepted_tokens_per_round"],
+                "draft_dispatches": sp["draft_dispatches"],
+                "verify_dispatches": sp["verify_dispatches"],
+                "token_identical_to_stepwise": outs == golden,
+            }
+            row(f"serve_spec_{fam}_k{k}", dt / max(tokens, 1) * 1e6,
+                f"tok_per_s={tokens/dt:.2f} "
+                f"acc_per_dispatch="
+                f"{sp['accepted_tokens_per_dispatch']:.2f} "
+                f"identical={outs == golden}")
+        base_tps = fam_out[f"spec_k={spec_ks[0]}"]["tokens_per_s"]
+        best = max(spec_ks[1:],
+                   key=lambda k: fam_out[f"spec_k={k}"]["tokens_per_s"])
+        fam_out["best_spec_k"] = best
+        fam_out["best_speedup_vs_stepwise"] = (
+            fam_out[f"spec_k={best}"]["tokens_per_s"] / base_tps)
+        out[fam] = fam_out
+    out["any_family_beats_stepwise"] = any(
+        d["best_speedup_vs_stepwise"] > 1.0
+        for d in out.values() if isinstance(d, dict))
+    return out
+
+
+def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
+    """Runs every e2e bench; returns the BENCH_serve.json payload.
+    ``tiny`` keeps the serving hot path and a dense spec_k in {1, 2}
+    speculative cell."""
+    if tiny:
+        payload = bench_serve_prefill_decode(seed)
+        payload["speculative"] = bench_serve_speculative(seed, tiny=True)
+        payload["tiny"] = True
+        return payload
+    bench_train_step(seed)
+    bench_decode_kv_modes(seed)
+    payload = bench_serve_prefill_decode(seed)
+    payload["matrix"] = bench_serve_matrix(seed)
+    payload["speculative"] = bench_serve_speculative(seed)
     return payload

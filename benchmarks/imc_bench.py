@@ -38,21 +38,21 @@ STORAGE_MATRIX = {
 ABITS_SWEEP = (4, 8)
 
 
-def bench_imc_kernel() -> dict:
+def bench_imc_kernel(seed: int = 0) -> dict:
     """Parity + event model of the bit-serial kernel itself."""
     M, K, N = 128, 512, 256
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     x = rng.integers(-127, 128, size=(M, K)).astype(np.float32)
     x[:, 0] = 127                       # absmax == qmax -> exact path
     x = jnp.asarray(x, jnp.bfloat16)
-    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    w = jax.random.normal(jax.random.PRNGKey(seed), (K, N))
     t, scale = ternary.ternarize(w)
     wp = ternary.pack_ternary_2bit(t)
     y = ops.imc_dot(x, wp, scale, fmt="ternary", abits=8)
     golden = ops.ternary_matmul(x, wp, scale)
     bit_exact = bool(np.array_equal(np.asarray(y, np.float32),
                                     np.asarray(golden, np.float32)))
-    xr = jax.random.normal(jax.random.PRNGKey(1), (M, K), jnp.bfloat16)
+    xr = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, K), jnp.bfloat16)
     dense = ref.ternary_matmul_ref(xr, wp, scale)
     errs = {a: ref.rel_err(ops.imc_dot(xr, wp, scale, fmt="ternary",
                                        abits=a), dense)
@@ -85,17 +85,20 @@ def bench_imc_kernel() -> dict:
             "decode_matmul_model": model}
 
 
-def bench_imc_matrix() -> dict:
+def bench_imc_matrix(seed: int = 0, tiny: bool = False) -> dict:
     """The engine-level matrix: storage mode x activation precision."""
     from repro.launch.mesh import make_local_mesh
     from repro.serve import Request, ServeEngine
 
     base = get_arch("qwen1.5-0.5b").reduced()
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     prompt = rng.integers(0, base.vocab, size=(5,)).astype(np.int32)
+    storage = ({"int4": STORAGE_MATRIX["int4"]} if tiny
+               else STORAGE_MATRIX)
+    abits_sweep = (8,) if tiny else ABITS_SWEEP
     matrix = {}
-    for sname, knobs in STORAGE_MATRIX.items():
-        for abits in ABITS_SWEEP:
+    for sname, knobs in storage.items():
+        for abits in abits_sweep:
             cfg = dataclasses.replace(
                 base, amc=AMCConfig(matmul_impl="imc", imc_abits=abits,
                                     **knobs))
@@ -133,7 +136,9 @@ def bench_imc_matrix() -> dict:
     return matrix
 
 
-def run_all() -> dict:
-    """Returns the BENCH_imc.json payload."""
-    return {"kernel": bench_imc_kernel(), "matrix": bench_imc_matrix(),
+def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
+    """Returns the BENCH_imc.json payload. ``tiny`` keeps the analytic
+    kernel/event section and a single matrix cell (int4 @ 8-bit)."""
+    return {"kernel": bench_imc_kernel(seed),
+            "matrix": bench_imc_matrix(seed, tiny=tiny),
             "event_energy_fj": dict(energy.EVENT_ENERGY_FJ)}

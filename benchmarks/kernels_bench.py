@@ -51,12 +51,12 @@ def _record(name: str, us: float, *, bytes_kernel: int, bytes_baseline: int,
         f"pallas_parity_rel_err={parity_rel_err:.4f} {extra}".strip())
 
 
-def bench_ternary_matmul():
+def bench_ternary_matmul(seed: int = 0):
     M, K, N = 256, 4096, 4096
-    w = jax.random.normal(jax.random.PRNGKey(0), (K, N))
+    w = jax.random.normal(jax.random.PRNGKey(seed), (K, N))
     t, scale = ternary.ternarize(w)
     wp = ternary.pack_ternary_2bit(t)
-    x = jax.random.normal(jax.random.PRNGKey(1), (M, K), jnp.bfloat16)
+    x = jax.random.normal(jax.random.PRNGKey(seed + 1), (M, K), jnp.bfloat16)
     us = _time_us(jax.jit(ref.ternary_matmul_ref), x, wp, scale, n=5)
     # parity on a reduced shape (interpret mode is Python-speed)
     Mp, Kp, Np = 128, 512, 256
@@ -77,9 +77,9 @@ def bench_ternary_matmul():
                   f"vs_bf16_us={roof_bf16:.2f}")
 
 
-def bench_dual_plane_matmul():
+def bench_dual_plane_matmul(seed: int = 0):
     M, K, N = 256, 2048, 2048
-    k = jax.random.PRNGKey(0)
+    k = jax.random.PRNGKey(seed)
     qh, sh = quant.quantize_int4(jax.random.normal(k, (K, N)), axis=0)
     ql, sl = quant.quantize_int4(
         jax.random.normal(jax.random.fold_in(k, 1), (K, N)), axis=0)
@@ -100,9 +100,9 @@ def bench_dual_plane_matmul():
             extra="two_matmuls_one_buffer")
 
 
-def bench_packed_kv_attention():
+def bench_packed_kv_attention(seed: int = 0):
     B, KV, Hg, D, S = 8, 8, 4, 128, 8192
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
     kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D))
     vf = jax.random.normal(jax.random.fold_in(key, 2), (B, KV, S, D))
@@ -129,9 +129,9 @@ def bench_packed_kv_attention():
             extra=f"B{B}xKV{KV}xS{S}xD{D}")
 
 
-def bench_packed_kv_attention_int8():
+def bench_packed_kv_attention_int8(seed: int = 0):
     B, KV, Hg, D, S = 2, 2, 4, 64, 512
-    key = jax.random.PRNGKey(9)
+    key = jax.random.PRNGKey(seed + 9)
     q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
     kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D))
     vf = jax.random.normal(jax.random.fold_in(key, 2), (B, KV, S, D))
@@ -153,11 +153,11 @@ def bench_packed_kv_attention_int8():
             extra=f"B{B}xKV{KV}xS{S}xD{D}")
 
 
-def bench_quantize_pack_kv():
+def bench_quantize_pack_kv(seed: int = 0):
     """Fused bf16 -> packed int4 + scales (one pass) vs the unfused
     quantize-then-pack pipeline whose int8 intermediate round-trips HBM."""
     B, S, KV, D = 8, 4096, 8, 128
-    kv = jax.random.normal(jax.random.PRNGKey(0), (B, S, KV, D),
+    kv = jax.random.normal(jax.random.PRNGKey(seed), (B, S, KV, D),
                            jnp.bfloat16)
     us = _time_us(jax.jit(ref.quantize_pack_kv_ref), kv, n=5)
     small = kv[:1, :16]
@@ -176,11 +176,11 @@ def bench_quantize_pack_kv():
             extra=f"B{B}xS{S}xKV{KV}xD{D} (parity = bit-exactness)")
 
 
-def bench_length_skipping():
+def bench_length_skipping(seed: int = 0):
     """Grid work ∝ length: the attention kernel's block-visit counter on a
     ragged batch, vs the blocks a length-blind kernel would touch."""
     B, KV, Hg, D, S, bs = 4, 2, 4, 64, 1024, 128
-    key = jax.random.PRNGKey(3)
+    key = jax.random.PRNGKey(seed + 3)
     q = jax.random.normal(key, (B, KV, Hg, D), jnp.bfloat16)
     kf = jax.random.normal(jax.random.fold_in(key, 1), (B, KV, S, D),
                            jnp.bfloat16)
@@ -252,13 +252,17 @@ def serve_hbm_model(cfg=None, *, batch=8, seq=8192, kv_mode="int4",
     }
 
 
-def run_all() -> list[dict]:
-    """Runs every kernel bench; returns the BENCH_kernels.json payload."""
+def run_all(*, seed: int = 0, tiny: bool = False) -> list[dict]:
+    """Runs every kernel bench; returns the BENCH_kernels.json payload.
+    ``tiny`` keeps one matmul and one cache kernel (the quantize-pack
+    parity is bit-exactness, the cheapest meaningful smoke)."""
     ROWS.clear()
-    bench_ternary_matmul()
-    bench_dual_plane_matmul()
-    bench_packed_kv_attention()
-    bench_packed_kv_attention_int8()
-    bench_quantize_pack_kv()
-    bench_length_skipping()
+    bench_ternary_matmul(seed)
+    if not tiny:
+        bench_dual_plane_matmul(seed)
+        bench_packed_kv_attention(seed)
+        bench_packed_kv_attention_int8(seed)
+    bench_quantize_pack_kv(seed)
+    if not tiny:
+        bench_length_skipping(seed)
     return ROWS

@@ -43,7 +43,7 @@ def _time_us(fn, *args, n=20):
 # Tables I & II — retention vs temperature
 # ---------------------------------------------------------------------------
 
-def bench_retention():
+def bench_retention(seed: int = 0):
     for cell in ("8T", "7T"):
         m = LeakageModel(cell)
         for t in (85, 65, 45, 25):
@@ -51,7 +51,7 @@ def bench_retention():
                 f"retention_us={m.retention_us(t):.1f}")
     # software analog: steps until sense failure under per-step noise e(T)
     # (noise sigma scales inversely with the paper's retention time)
-    key = jax.random.PRNGKey(0)
+    key = jax.random.PRNGKey(seed)
     level0 = jnp.ones((1024,))
     for t in (85, 25):
         m = LeakageModel("8T")
@@ -70,10 +70,10 @@ def bench_retention():
 # Tables III & IV — read/write "energy" (bytes moved per access)
 # ---------------------------------------------------------------------------
 
-def bench_energy_bytes():
+def bench_energy_bytes(seed: int = 0):
     n = 1024 * 1024  # 1M logical values per access
     shape = (1024, 1024)
-    x = jax.random.normal(jax.random.PRNGKey(0), shape)
+    x = jax.random.normal(jax.random.PRNGKey(seed), shape)
 
     # normal mode (6T analog): bf16 read/write
     bytes_normal = n * 2
@@ -93,7 +93,7 @@ def bench_energy_bytes():
     t_rd = _time_us(jax.jit(dp.read_dynamic), d)
     row("read_augmented_dynamic", t_rd, f"bytes={n}")
     # 7T augmented: ternary write/read (base-3: 0.2 B/value; K % 5 == 0)
-    xt = jax.random.normal(jax.random.PRNGKey(1), (1280, 1024))
+    xt = jax.random.normal(jax.random.PRNGKey(seed + 1), (1280, 1024))
     nt = xt.size
     t7_w = _time_us(jax.jit(
         lambda v: ternary.pack_ternary_base3(ternary.ternarize(v)[0])), xt)
@@ -141,12 +141,15 @@ def bench_capacity():
         f"augmentation={per_tok_bf16/per_tok_int4:.2f}x")
 
 
-def run_all() -> dict:
+def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
     """Runs every paper-table analog; returns the BENCH_paper_tables.json
-    payload (the same rows the CSV prints, structured)."""
+    payload (the same rows the CSV prints, structured). The tables are
+    analytic/cheap, so ``tiny`` only drops the timed byte-movement
+    section."""
     ROWS.clear()
-    bench_retention()
-    bench_energy_bytes()
+    bench_retention(seed)
+    if not tiny:
+        bench_energy_bytes(seed)
     bench_op_latency()
     bench_capacity()
     return {"rows": [{"name": n, "us_per_call": us, "derived": d}

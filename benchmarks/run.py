@@ -16,6 +16,7 @@ uploading a quietly truncated artifact set.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import sys
@@ -23,6 +24,15 @@ import traceback
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--seed", type=int, default=0,
+                    help="base RNG seed threaded into every emitter "
+                         "(prompt/request/weight randomness)")
+    ap.add_argument("--tiny", action="store_true",
+                    help="CI smoke mode: each emitter runs a minimal "
+                         "subset (single cells instead of full sweeps) "
+                         "so the whole harness finishes in minutes")
+    args = ap.parse_args()
     print("name,us_per_call,derived")
     from benchmarks import e2e_bench, imc_bench, kernels_bench, paper_tables
     from benchmarks import scheduler_bench
@@ -44,7 +54,7 @@ def main() -> None:
     for name, title, emit in sections:
         print(f"# -- {title} --")
         try:
-            payload = emit()
+            payload = emit(seed=args.seed, tiny=args.tiny)
         except Exception:
             failures.append(name)
             print(f"# EMITTER FAILED: {name}", file=sys.stderr)

@@ -91,7 +91,7 @@ def _drive(eng: ServeEngine, reqs: list[Request]) -> dict:
     }
 
 
-def bench_refresh() -> dict:
+def bench_refresh(seed: int = 0) -> dict:
     """Refresh-overhead probe: prompts spanning two pages leave page 0
     cold while decode stamps only the tail page, so the cold page expires
     every `retention_steps` steps and the refresh scheduler must
@@ -103,7 +103,7 @@ def bench_refresh() -> dict:
                             retention_steps=2))
     eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=32,
                       prefill_chunk=16, seed=2)
-    rng = np.random.default_rng(3)
+    rng = np.random.default_rng(seed + 3)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(20,))
                     .astype(np.int32), max_new_tokens=8, id=i)
             for i in range(2)]
@@ -144,13 +144,13 @@ def _equal_budget(cfg, max_batch, max_seq) -> int:
             * store.geom.page_bytes_normal)
 
 
-def bench_arch_sweep() -> dict:
+def bench_arch_sweep(seed: int = 0) -> dict:
     """Augment-on-pressure vs normal-only at EQUAL byte budget, across
     the family zoo: the unified store must admit strictly more
     concurrent sequences under pressure for every decode-state type —
     recurrent-state slabs included, not just KV pages."""
     out: dict = {}
-    rng = np.random.default_rng(2)
+    rng = np.random.default_rng(seed + 2)
     max_batch, max_seq = 4, 32
     for family, arch in SWEEP_ARCHS.items():
         base = get_arch(arch).reduced()
@@ -187,10 +187,10 @@ def bench_arch_sweep() -> dict:
     return out
 
 
-def run_all() -> dict:
+def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
     base = get_arch("qwen1.5-0.5b").reduced()
     max_batch, max_seq, plen, max_new = 4, 32, 8, 4
-    rng = np.random.default_rng(0)
+    rng = np.random.default_rng(seed)
     # equal HBM byte budget across ALL modes: two Normal pages' worth —
     # small enough that 4x load actually pressures the allocator
     probe = ServeEngine(
@@ -198,6 +198,31 @@ def run_all() -> dict:
         make_local_mesh(), max_batch=max_batch, max_seq=max_seq)
     budget = 2 * probe.pool.geom.page_bytes_normal
     del probe
+
+    config = {"arch": "qwen1.5-0.5b(reduced)", "max_batch": max_batch,
+              "max_seq": max_seq, "page_size": base.amc.page_size,
+              "prompt_len": plen, "max_new_tokens": max_new,
+              "retention_steps": 4}
+    if tiny:
+        # one pressure-pool cell at 1x load: exercises the whole
+        # admit/refresh/augment path without the full mode x load sweep
+        cfg = dataclasses.replace(
+            base, amc=AMCConfig(kv_mode="normal",
+                                pool_mode="augment-on-pressure",
+                                retention_steps=4))
+        eng = ServeEngine(cfg, make_local_mesh(), max_batch=max_batch,
+                          max_seq=max_seq, prefill_chunk=16,
+                          pool_budget_bytes=budget, seed=1)
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(plen,))
+                        .astype(np.int32), max_new_tokens=max_new, id=i)
+                for i in range(max_batch)]
+        res = _drive(eng, reqs)
+        row("sched_tiny_augment-on-pressure_1x", res["total_s"] * 1e6,
+            f"req_per_s={res['req_per_s']:.2f} drops={res['drops']}")
+        return {"config": config, "tiny": True,
+                "modes": {"augment-on-pressure": {
+                    "kv_mode": "normal", "budget_bytes": budget,
+                    "loads": {"1x": res}}}}
 
     modes: dict = {}
     for pool_mode, kv_mode in MODES.items():
@@ -236,16 +261,13 @@ def run_all() -> dict:
         "augment_on_pressure_peak_concurrency_at_4x": peak_ap,
         "augment_admits_strictly_more": peak_ap > peak_no,
     }
-    sweep = bench_arch_sweep()
+    sweep = bench_arch_sweep(seed)
     acceptance["arch_sweep_augment_admits_more"] = {
         fam: d["augment_admits_strictly_more"] for fam, d in sweep.items()}
     return {
-        "config": {"arch": "qwen1.5-0.5b(reduced)", "max_batch": max_batch,
-                   "max_seq": max_seq, "page_size": base.amc.page_size,
-                   "prompt_len": plen, "max_new_tokens": max_new,
-                   "retention_steps": 4},
+        "config": config,
         "modes": modes,
-        "refresh": bench_refresh(),
+        "refresh": bench_refresh(seed),
         "arch_sweep": sweep,
         "acceptance": acceptance,
     }

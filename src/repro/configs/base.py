@@ -105,6 +105,18 @@ class AMCConfig:
     # value per byte, int4 nibble-packs pairs — the slab-granularity
     # analogue of the pool's per-page aug_bits.
     state_bits: int = 8
+    # -- self-speculative decoding (serve/engine.py) ------------------------
+    # Window size: spec_k - 1 tokens are drafted per round from the cheap
+    # (dynamic-plane) representation and the whole spec_k-token window is
+    # verified in ONE full-path dispatch; greedy accept/rollback keeps the
+    # emitted stream token-identical to step-by-step decode. 1 disables.
+    spec_k: int = 1
+    # Cheap representation the draft pass decodes with: "dequant" reads the
+    # pool through the dequantize-then-dense path (no Pallas dispatch),
+    # "dense"/"packed" force that matmul_impl, "imc8"/"imc4"/"imc1" run the
+    # bit-serial IMC matmuls at that activation precision (the dynamic-
+    # plane read of the 8T duality), "same" drafts with the full config.
+    spec_draft_impl: str = "dequant"
 
     @property
     def aug_bits(self) -> int:

@@ -16,7 +16,8 @@ from repro.kernels.dual_plane_matmul import dual_plane_matmul_pallas
 from repro.kernels.imc_dot import (imc_dot_pallas, imc_dual_dot_pallas,
                                    quantize_activations)
 from repro.kernels.packed_kv_attention import packed_kv_attention_pallas
-from repro.kernels.paged_kv_attention import paged_kv_attention_pallas
+from repro.kernels.paged_kv_attention import (
+    paged_kv_attention_pallas, paged_kv_attention_window_pallas)
 from repro.kernels.quantize_pack_kv import quantize_pack_kv_pallas
 from repro.kernels.ternary_matmul import ternary_matmul_pallas
 
@@ -133,6 +134,31 @@ def paged_kv_attention(q, kn, vn, kp, vp, k_scale, v_scale, lengths, modes,
 
 @functools.partial(jax.jit, static_argnames=("page", "kv_bits", "interpret",
                                              "use_ref"))
+def paged_kv_attention_window(q, kn, vn, kp, vp, k_scale, v_scale, starts,
+                              modes, normal_idx, packed_idx, *, page,
+                              kv_bits=4, interpret=None, use_ref=False):
+    """Speculative-verify window variant of `paged_kv_attention`.
+
+    q: (B, KV, W, Hg, D) — the W-token draft window per row at absolute
+    positions starts + [0..W); window slot w attends tokens
+    < starts + w + 1 (causal inside the window). Per window slot this is
+    BIT-IDENTICAL to `paged_kv_attention` at lengths == starts + w + 1:
+    the extra pages a slot's shorter horizon masks off contribute
+    exp(-inf) == 0.0 exactly in the f32 online softmax, which is what
+    makes accept/rollback token-identical to step-by-step decode."""
+    if use_ref:
+        table = jnp.where(modes == 1, packed_idx, normal_idx)
+        return ref.paged_kv_attention_window_ref(
+            q, kn, vn, kp, vp, k_scale, v_scale, starts, table, modes,
+            kv_bits=kv_bits)
+    return paged_kv_attention_window_pallas(
+        q, kn, vn, kp, vp, k_scale, v_scale, starts, modes, normal_idx,
+        packed_idx, page=page, kv_bits=kv_bits,
+        interpret=_auto_interpret(interpret))
+
+
+@functools.partial(jax.jit, static_argnames=("page", "kv_bits", "interpret",
+                                             "use_ref"))
 def paged_prefix_attention(q, kn, vn, kp, vp, k_scale, v_scale, lengths,
                            modes, normal_idx, packed_idx, *, page,
                            kv_bits=4, interpret=None, use_ref=False):
@@ -154,14 +180,23 @@ def paged_prefix_attention(q, kn, vn, kp, vp, k_scale, v_scale, lengths,
 
 
 @functools.partial(jax.jit, static_argnames=("bn", "interpret", "use_ref"))
-def quantize_pack_kv(kv, *, bn=256, interpret=None, use_ref=False):
+def quantize_pack_kv(kv, valid=None, *, bn=256, interpret=None,
+                     use_ref=False):
     """Fused bf16 -> int4-packed cache rows + per-token scales, one pass.
 
     kv: (..., D) with D even. Returns (packed (..., D//2) uint8,
     scale (..., 1) bf16) — the same layout `models.layers.pack_kv_int4`
-    produces, with no dequantized/int8 intermediate in HBM."""
+    produces, with no dequantized/int8 intermediate in HBM. `valid`
+    (optional, bool, broadcastable to kv.shape[:-1]) is the speculative
+    store-back mask: rows whose token the verify pass REJECTED commit as
+    zero bytes + unit scale, so only accepted tokens land in the
+    augmented plane."""
     if use_ref:
         p, s = ref.quantize_pack_kv_ref(kv)
+        if valid is not None:
+            keep = jnp.broadcast_to(valid, kv.shape[:-1])[..., None]
+            p = jnp.where(keep, p, jnp.uint8(0))
+            s = jnp.where(keep, s, 1.0)
         return p, s.astype(jnp.bfloat16)
     lead = kv.shape[:-1]
     D = kv.shape[-1]
@@ -172,7 +207,13 @@ def quantize_pack_kv(kv, *, bn=256, interpret=None, use_ref=False):
     if pad:
         flat = jnp.concatenate(
             [flat, jnp.zeros((pad, D), flat.dtype)], axis=0)
-    p, s = quantize_pack_kv_pallas(flat, bn=bn_eff,
+    vflat = None
+    if valid is not None:
+        vflat = jnp.broadcast_to(valid, lead).reshape(-1, 1).astype(jnp.int32)
+        if pad:
+            vflat = jnp.concatenate(
+                [vflat, jnp.zeros((pad, 1), jnp.int32)], axis=0)
+    p, s = quantize_pack_kv_pallas(flat, vflat, bn=bn_eff,
                                    interpret=_auto_interpret(interpret))
     p = p[:N].reshape(*lead, D // 2)
     s = s[:N].reshape(*lead, 1).astype(jnp.bfloat16)

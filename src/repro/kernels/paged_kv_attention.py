@@ -159,3 +159,131 @@ def paged_kv_attention_pallas(q: jax.Array, kn: jax.Array, vn: jax.Array,
         interpret=interpret,
     )(lengths, modes.astype(jnp.int32), normal_idx.astype(jnp.int32),
       packed_idx.astype(jnp.int32), q, kn, vn, kp, vp, k_scale, v_scale)
+
+
+def _paged_window_kernel(starts_ref, modes_ref, ni_ref, pi_ref, q_ref,
+                         kn_ref, vn_ref, kp_ref, vp_ref, ks_ref, vs_ref,
+                         o_ref, acc_ref, m_ref, l_ref, *, page: int,
+                         scale: float, kv_bits: int, win: int, hg: int):
+    """W-query-token variant of `_paged_kernel` for speculative verify.
+
+    The W window queries of a row share one page walk: queries are
+    flattened onto the score rows ((win*Hg, page) per page) and every
+    softmax-state op is row-independent, so each window slot w computes
+    EXACTLY the single-token kernel's op sequence for length
+    starts + w + 1 — pages wholly past a slot's horizon contribute
+    exp(NEG_INF - m) == 0.0 in f32, a bit-exact no-op. That is the
+    token-identity anchor the speculative engine's golden test pins."""
+    b = pl.program_id(0)
+    s_step = pl.program_id(2)
+    max_p = pl.num_programs(2)
+    start = starts_ref[b]
+    # horizon of the LAST window slot, clamped to the table's reach
+    length = jnp.minimum(start + win, max_p * page)
+    nvp = jnp.clip(pl.cdiv(length, page), 1, max_p)
+    visited = s_step < nvp
+    rows = win * hg
+
+    @pl.when(s_step == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    @pl.when(visited)
+    def _compute():
+        q = q_ref[0, 0].reshape(rows, q_ref.shape[-1])     # (W*Hg, D) bf16
+        is_aug = modes_ref[b, s_step] == 1
+        k_aug = _load_kv_block(kp_ref[0, 0], kv_bits)      # (page, D) bf16
+        v_aug = _load_kv_block(vp_ref[0, 0], kv_bits)
+        k = jnp.where(is_aug, k_aug, kn_ref[0, 0])
+        v_int = jnp.where(is_aug, v_aug, vn_ref[0, 0])
+        one = jnp.ones((page,), jnp.float32)
+        k_scale = jnp.where(is_aug, ks_ref[0, 0].astype(jnp.float32), one)
+        v_scale = jnp.where(is_aug, vs_ref[0, 0].astype(jnp.float32), one)
+
+        s = jnp.dot(q, k.T, preferred_element_type=jnp.float32)
+        s = s * (k_scale * scale)[None, :]                 # (W*Hg, page)
+        # causal-inside-the-window mask: score row r belongs to window
+        # slot r // Hg, whose horizon is start + slot + 1 tokens
+        col = (s_step * page
+               + jax.lax.broadcasted_iota(jnp.int32, (rows, page), 1))
+        slot = jax.lax.broadcasted_iota(jnp.int32, (rows, page), 0) // hg
+        s = jnp.where(col < start + slot + 1, s, NEG_INF)
+
+        m_prev = m_ref[...]                                # (W*Hg, 1)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new)                             # (W*Hg, page)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=1, keepdims=True)
+        pv = (p * v_scale[None, :]).astype(jnp.bfloat16)
+        acc_ref[...] = (acc_ref[...] * alpha
+                        + jnp.dot(pv, v_int,
+                                  preferred_element_type=jnp.float32))
+        m_ref[...] = m_new
+
+    @pl.when(s_step == nvp - 1)
+    def _done():
+        o_ref[0, 0] = (acc_ref[...] / l_ref[...]).reshape(
+            win, hg, o_ref.shape[-1]).astype(o_ref.dtype)
+
+
+def paged_kv_attention_window_pallas(q: jax.Array, kn: jax.Array,
+                                     vn: jax.Array, kp: jax.Array,
+                                     vp: jax.Array, k_scale: jax.Array,
+                                     v_scale: jax.Array, starts: jax.Array,
+                                     modes: jax.Array, normal_idx: jax.Array,
+                                     packed_idx: jax.Array, *, page: int,
+                                     kv_bits: int = 4,
+                                     interpret: bool = False):
+    """q: (B, KV, W, Hg, D) bf16 — W speculative window queries per row at
+    absolute positions starts + [0..W); arenas/scales/tables laid out as
+    `paged_kv_attention_pallas`. Window slot w attends tokens
+    < starts[b] + w + 1. Returns (B, KV, W, Hg, D) bf16."""
+    B, KV, W, Hg, D = q.shape
+    maxP = modes.shape[1]
+    assert kv_bits in (4, 8), kv_bits
+    d_store = D // 2 if kv_bits == 4 else D
+    assert kn.shape[2:] == (page, D), (kn.shape, page, D)
+    assert kp.shape[2:] == (page, d_store), (kp.shape, page, d_store)
+    scale = 1.0 / (D ** 0.5)
+
+    def _nidx(b, h, s, lens, modes, ni, pi):
+        return (ni[b, s], h, 0, 0)
+
+    def _pidx(b, h, s, lens, modes, ni, pi):
+        return (pi[b, s], h, 0, 0)
+
+    def _pscale(b, h, s, lens, modes, ni, pi):
+        return (pi[b, s], h, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, W, Hg, D), lambda b, h, s, *_: (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, 1, page, D), _nidx),
+        pl.BlockSpec((1, 1, page, D), _nidx),
+        pl.BlockSpec((1, 1, page, d_store), _pidx),
+        pl.BlockSpec((1, 1, page, d_store), _pidx),
+        pl.BlockSpec((1, 1, page), _pscale),
+        pl.BlockSpec((1, 1, page), _pscale),
+    ]
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=4,
+        grid=(B, KV, maxP),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, W, Hg, D),
+                               lambda b, h, s, *_: (b, h, 0, 0, 0)),
+        scratch_shapes=[pltpu.VMEM((W * Hg, D), jnp.float32),
+                        pltpu.VMEM((W * Hg, 1), jnp.float32),
+                        pltpu.VMEM((W * Hg, 1), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_paged_window_kernel, page=page, scale=scale,
+                          kv_bits=kv_bits, win=W, hg=Hg),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KV, W, Hg, D), jnp.bfloat16),
+        compiler_params=pltpu.TPUCompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+        interpret=interpret,
+    )(starts.astype(jnp.int32), modes.astype(jnp.int32),
+      normal_idx.astype(jnp.int32), packed_idx.astype(jnp.int32),
+      q, kn, vn, kp, vp, k_scale, v_scale)

@@ -46,23 +46,56 @@ def _qpack_kernel(x_ref, p_ref, s_ref, *, bn: int, d: int):
     s_ref[...] = scale.astype(s_ref.dtype)
 
 
-def quantize_pack_kv_pallas(kv: jax.Array, *, bn: int = DEFAULT_BN,
-                            interpret: bool = False):
+def _qpack_masked_kernel(x_ref, valid_ref, p_ref, s_ref, *, bn: int, d: int):
+    # the speculative store-back: rows whose token was REJECTED by the
+    # verify pass commit zero bytes + unit scale instead of their values
+    # (nothing of the draft window lands in the augmented plane)
+    x = x_ref[...]                                        # (bn, D)
+    keep = valid_ref[...] != 0                            # (bn, 1)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT4_MAX
+    q = jnp.clip(jnp.round(x / scale), -INT4_MAX, INT4_MAX).astype(jnp.int8)
+    qr = q.reshape(bn, d // 2, 2)
+    hi = jnp.bitwise_and(qr[:, :, 0].astype(jnp.uint8), jnp.uint8(0x0F))
+    lo = jnp.bitwise_and(qr[:, :, 1].astype(jnp.uint8), jnp.uint8(0x0F))
+    packed = jnp.bitwise_or(jnp.left_shift(hi, 4), lo)
+    p_ref[...] = jnp.where(keep, packed, jnp.uint8(0))
+    s_ref[...] = jnp.where(keep, scale, 1.0).astype(s_ref.dtype)
+
+
+def quantize_pack_kv_pallas(kv: jax.Array, valid=None, *,
+                            bn: int = DEFAULT_BN, interpret: bool = False):
     """kv: (N, D) bf16/f32, D even. Returns (packed (N, D//2) uint8,
-    scale (N, 1) f32). N % bn == 0 (pad in the wrapper)."""
+    scale (N, 1) f32). N % bn == 0 (pad in the wrapper). `valid` (N, 1)
+    int32, optional: rows with valid == 0 commit as zeros + unit scale
+    (speculative decode commits only accepted tokens)."""
     N, D = kv.shape
     assert D % 2 == 0, D
     bn = min(bn, N)
     assert N % bn == 0, (N, bn)
+    out_specs = [pl.BlockSpec((bn, D // 2), lambda i: (i, 0)),
+                 pl.BlockSpec((bn, 1), lambda i: (i, 0))]
+    out_shape = [jax.ShapeDtypeStruct((N, D // 2), jnp.uint8),
+                 jax.ShapeDtypeStruct((N, 1), jnp.float32)]
+    params = pltpu.TPUCompilerParams(dimension_semantics=("parallel",))
+    if valid is None:
+        return pl.pallas_call(
+            functools.partial(_qpack_kernel, bn=bn, d=D),
+            grid=(N // bn,),
+            in_specs=[pl.BlockSpec((bn, D), lambda i: (i, 0))],
+            out_specs=out_specs,
+            out_shape=out_shape,
+            compiler_params=params,
+            interpret=interpret,
+        )(kv)
+    assert valid.shape == (N, 1), (valid.shape, N)
     return pl.pallas_call(
-        functools.partial(_qpack_kernel, bn=bn, d=D),
+        functools.partial(_qpack_masked_kernel, bn=bn, d=D),
         grid=(N // bn,),
-        in_specs=[pl.BlockSpec((bn, D), lambda i: (i, 0))],
-        out_specs=[pl.BlockSpec((bn, D // 2), lambda i: (i, 0)),
-                   pl.BlockSpec((bn, 1), lambda i: (i, 0))],
-        out_shape=[jax.ShapeDtypeStruct((N, D // 2), jnp.uint8),
-                   jax.ShapeDtypeStruct((N, 1), jnp.float32)],
-        compiler_params=pltpu.TPUCompilerParams(
-            dimension_semantics=("parallel",)),
+        in_specs=[pl.BlockSpec((bn, D), lambda i: (i, 0)),
+                  pl.BlockSpec((bn, 1), lambda i: (i, 0))],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=params,
         interpret=interpret,
-    )(kv)
+    )(kv, valid.astype(jnp.int32))

@@ -155,6 +155,30 @@ def paged_kv_attention_ref(q, kn, vn, kp, vp, k_scale, v_scale, lengths,
     return o.astype(jnp.bfloat16)
 
 
+def paged_kv_attention_window_ref(q, kn, vn, kp, vp, k_scale, v_scale,
+                                  starts, page_table, page_modes,
+                                  kv_bits: int = 4) -> jax.Array:
+    """Oracle for the speculative-verify window kernel: gather + dense
+    softmax with a PER-WINDOW-SLOT causal horizon.
+
+    q: (B, KV, W, Hg, D) — W query tokens per row at absolute positions
+    starts + [0..W). Window slot w attends tokens < starts + w + 1 (its
+    own position included), so slot 0 reproduces the single-token decode
+    read exactly and later slots see the window's own KV causally."""
+    B, KV, W, Hg, D = q.shape
+    k, v = paged_gather_kv_ref(kn, vn, kp, vp, k_scale, v_scale,
+                               page_table, page_modes, kv_bits=kv_bits)
+    S = k.shape[2]
+    lengths = jnp.minimum(starts.astype(jnp.int32)[:, None]
+                          + jnp.arange(W)[None, :] + 1, S)       # (B, W)
+    s = jnp.einsum("bkwhd,bksd->bkwhs", q.astype(jnp.float32), k) / (D ** 0.5)
+    valid = jnp.arange(S)[None, None, :] < lengths[:, :, None]   # (B, W, S)
+    s = jnp.where(valid[:, None, :, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkwhs,bksd->bkwhd", p, v)
+    return o.astype(jnp.bfloat16)
+
+
 def packed_kv_attention_ref(q, k_packed, v_packed, k_scale, v_scale,
                             lengths, kv_bits: int = 4) -> jax.Array:
     """Layouts as the kernel: q (B,KV,Hg,D); kv (B,KV,S,D//2) uint8 for

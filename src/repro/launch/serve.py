@@ -42,6 +42,15 @@ def main():
                     choices=[4, 8],
                     help="augmented recurrent-state slab width "
                          "(ssm/hybrid/vlm-prefix stores)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="speculative window: draft spec_k-1 tokens per "
+                         "round out of the cheap plane, verify them in "
+                         "one packed dispatch (1 = stepwise decode)")
+    ap.add_argument("--spec-draft-impl", default=None,
+                    choices=["dequant", "dense", "packed", "imc1", "imc4",
+                             "imc8", "same"],
+                    help="representation the draft pass reads (default "
+                         "dequant: XLA over dequantized KV)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -53,7 +62,9 @@ def main():
                       pool_budget_bytes=args.pool_budget_bytes,
                       matmul_impl=args.matmul_impl,
                       imc_abits=args.imc_abits,
-                      state_bits=args.state_bits)
+                      state_bits=args.state_bits,
+                      spec_k=args.spec_k,
+                      spec_draft_impl=args.spec_draft_impl)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
                     max_new_tokens=args.max_new, id=i)
@@ -69,6 +80,12 @@ def main():
           f"abits={imc['imc_abits']} "
           f"modeled_energy_pj_per_token={imc['energy_pj_per_token']:.1f}")
     st = eng.stats()
+    sp = st["spec"]
+    if sp["enabled"]:
+        print(f"[serve] spec_k={sp['spec_k']} draft={sp['spec_draft_impl']} "
+              f"accepted/dispatch={sp['accepted_tokens_per_dispatch']:.2f} "
+              f"accepted/round={sp['accepted_tokens_per_round']:.2f} "
+              f"rounds={sp['spec_rounds']}")
     live = st["pool"]
     if eng.store.kind == "paged":
         occupancy = (f"pages(norm/aug)={live['pages_live_normal']}/"

@@ -81,6 +81,20 @@ def paged_decode_step(cfg: ModelConfig, params, arenas, batch: dict, *,
         rules=rules)
 
 
+def paged_verify_step(cfg: ModelConfig, params, arenas, batch: dict, *,
+                      rules=None):
+    """Speculative verify over the paged pool: batch carries the draft
+    window tokens (B, W), the window's start positions (B,), a 2-D
+    write_mask (B, W) capping each row's window, and the store's device
+    tables. Returns (logits (B, W, V), new_arenas) with only the
+    accepted prefix of each window committed (greedy in-graph accept)."""
+    meta = {k: v for k, v in batch.items()
+            if k not in ("tokens", "positions")}
+    return _family_mod(cfg).paged_verify_window_step(
+        cfg, params, arenas, batch["tokens"], batch["positions"], meta,
+        rules=rules)
+
+
 def paged_prefill_step(cfg: ModelConfig, params, arenas, batch: dict, *,
                        rules=None):
     """Chunked prefill into the paged pool (one dispatch per chunk)."""

@@ -182,30 +182,48 @@ def attn_block_decode(cfg: ModelConfig, p: dict, x: jax.Array,
     return o.astype(x.dtype), new_cache
 
 
-def _paged_pack(cfg: ModelConfig, kv: jax.Array):
+def _paged_pack(cfg: ModelConfig, kv: jax.Array, valid=None):
     """Quantize a bf16 KV tensor for the pool's Augmented plane. int4 runs
     through the fused `quantize_pack_kv` Pallas write driver; int8 through
-    the jnp pack (no nibble interleave to fuse)."""
+    the jnp pack (no nibble interleave to fuse). `valid` (broadcastable to
+    kv.shape[:-1]) is the speculative store-back mask — rejected rows
+    commit as zero bytes + unit scale."""
     if cfg.amc.aug_bits == 4:
-        return K.quantize_pack_kv(kv)
-    return L.pack_kv_int8(kv)
+        return K.quantize_pack_kv(kv, valid)
+    kq, ks = L.pack_kv_int8(kv)
+    if valid is not None:
+        keep = jnp.broadcast_to(valid, kv.shape[:-1])[..., None]
+        kq = jnp.where(keep, kq, jnp.int8(0))
+        ks = jnp.where(keep, ks, jnp.asarray(1.0, ks.dtype))
+    return kq, ks
 
 
 def _paged_scatter(cfg: ModelConfig, arenas: dict, k_new: jax.Array,
                    v_new: jax.Array, pos: jax.Array, meta: dict,
-                   write: jax.Array) -> dict:
+                   write: jax.Array, commit=None) -> dict:
     """Scatter per-token KV rows into the two-plane paged arena.
 
     k/v_new: (B, T, KV, hd); pos: (B, T) absolute positions; write:
     (B, T) bool. Each token lands in its logical page's physical page
     (page_table) in the plane its mode bit selects; masked-off rows are
     redirected to physical page 0, the write-dump page, so neighbours
-    stay bit-identical (the paged form of the write-masked scatter)."""
+    stay bit-identical (the paged form of the write-masked scatter).
+
+    `commit` (B, T) bool, optional: the speculative accept mask. Unlike
+    `write` (which redirects to the dump page), tokens with commit ==
+    False are WRITTEN at their slot as zeros (zero bf16 rows in the
+    Normal plane, zero bytes + unit scale in the Augmented plane) — the
+    rejected tail of a draft window is scrubbed, only accepted tokens'
+    values land."""
     page = cfg.amc.page_size
     lp = pos // page
     slot = pos % page
     phys = jnp.take_along_axis(meta["page_table"], lp, axis=1)    # (B, T)
     mode = jnp.take_along_axis(meta["page_modes"], lp, axis=1)
+    if commit is not None:
+        keep = commit[:, :, None, None]
+        k_new = jnp.where(keep, k_new, 0)
+        v_new = jnp.where(keep, v_new, 0)
     out = dict(arenas)
     # pool_mode is trace-time static: pinned-mode pools skip the plane
     # they can never write (half the scatter work of the mixed path)
@@ -218,8 +236,9 @@ def _paged_scatter(cfg: ModelConfig, arenas: dict, k_new: jax.Array,
             v_new.astype(jnp.bfloat16))
     if policy != "normal-only":
         pp = jnp.where(write & (mode == 1), phys, 0)
-        kq, ks = _paged_pack(cfg, k_new)
-        vq, vs = _paged_pack(cfg, v_new)
+        pack_valid = None if commit is None else commit[:, :, None]
+        kq, ks = _paged_pack(cfg, k_new, pack_valid)
+        vq, vs = _paged_pack(cfg, v_new, pack_valid)
         out["kp"] = arenas["kp"].at[pp, :, slot].set(kq)
         out["vp"] = arenas["vp"].at[pp, :, slot].set(vq)
         out["ks"] = arenas["ks"].at[pp, :, slot].set(
@@ -273,6 +292,45 @@ def attn_block_decode_paged(cfg: ModelConfig, p: dict, x: jax.Array,
         o = L.decode_attention_kvmajor(q, kd, vd, positions)
     o = augment.proj(p, "wo", o.reshape(B, 1, -1), cfg.amc)
     return o.astype(x.dtype), new_arenas
+
+
+def attn_block_verify_paged(cfg: ModelConfig, p: dict, x: jax.Array,
+                            arenas: dict, starts: jax.Array,
+                            meta: dict) -> tuple:
+    """Speculative-verify attention: a W-token draft window per row
+    through the FULL packed path (the static-plane read of the 8T
+    duality).
+
+    x: (B, W, d) — the window [last committed token, W-1 drafts] at
+    absolute positions starts + [0..W). The window's full-quality KV is
+    scattered over whatever the draft pass wrote, then each window slot
+    attends causally (slot w sees tokens < starts + w + 1) via the
+    W-query page-walk kernel — per slot bit-identical to the
+    single-token decode read. Also returns the window's (k, v) so the
+    epilogue can re-commit only accepted tokens."""
+    B, W, _ = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    positions = starts[:, None] + jnp.arange(W)[None, :]
+    q, k_new, v_new = _project_qkv(cfg, p, x, positions)
+    # near the cache end a row's window is host-capped (write_mask False
+    # past the cap); clamp table lookups for those dump-bound slots
+    max_s = meta["page_table"].shape[1] * cfg.amc.page_size
+    pos_w = jnp.minimum(positions, max_s - 1)
+    new_arenas = _paged_scatter(cfg, arenas, k_new, v_new, pos_w, meta,
+                                meta["write_mask"])
+    if cfg.amc.kv_impl == "kernel":
+        qk = q.reshape(B, W, KV, H // KV, hd).transpose(0, 2, 1, 3, 4)
+        o = K.paged_kv_attention_window(
+            qk, new_arenas["kn"], new_arenas["vn"], new_arenas["kp"],
+            new_arenas["vp"], new_arenas["ks"], new_arenas["vs"], starts,
+            meta["page_modes"], meta["normal_idx"], meta["packed_idx"],
+            page=cfg.amc.page_size, kv_bits=cfg.amc.aug_bits)
+        o = o.transpose(0, 2, 1, 3, 4).reshape(B, W, H, hd)
+    else:  # reference: gather + dense causal attention from `starts`
+        kd, vd = _paged_gather(cfg, new_arenas, meta)
+        o = L.prefill_attention_kvmajor(q, kd, vd, starts)
+    o = augment.proj(p, "wo", o.reshape(B, W, -1), cfg.amc)
+    return o.astype(x.dtype), new_arenas, (k_new, v_new)
 
 
 def attn_block_prefill_paged(cfg: ModelConfig, p: dict, x: jax.Array,
@@ -359,11 +417,24 @@ def mlp_block(cfg: ModelConfig, p: dict, x: jax.Array):
     return out.astype(x.dtype)
 
 
-def ffn_dispatch(cfg: ModelConfig, layer_p: dict, x: jax.Array, rules=None):
+def ffn_dispatch(cfg: ModelConfig, layer_p: dict, x: jax.Array, rules=None,
+                 group_size: int = 512):
     if cfg.moe is not None:
         h = L.rms_norm(x, layer_p["moe"]["norm"], cfg.norm_eps)
-        return moe_mod.moe_ffn(cfg, layer_p["moe"], h, rules)
+        return moe_mod.moe_ffn(cfg, layer_p["moe"], h, rules,
+                               group_size=group_size)
     return mlp_block(cfg, layer_p["mlp"], x)
+
+
+def _ffn_window(cfg: ModelConfig, layer_p: dict, x: jax.Array, rules=None):
+    """FFN over a speculative-verify window (B, W, d).
+
+    Decode-time MoE routing is per-token (group_size=1, see decode_step),
+    so the whole window can be fed at once: every token routes in its own
+    capacity group and the result is identical to W single-token decode
+    dispatches regardless of batch composition."""
+    return ffn_dispatch(cfg, layer_p, x, rules,
+                        group_size=1 if cfg.moe is not None else 512)
 
 
 # ---------------------------------------------------------------------------
@@ -449,7 +520,11 @@ def decode_step(cfg: ModelConfig, params: dict, cache: dict,
         a, new_cache = attn_block_decode(cfg, lp["attn"], x, cache_layer,
                                          positions)
         x = constrain(x + a, rules, "batch", None, None)
-        x = x + ffn_dispatch(cfg, lp, x, rules)
+        # per-token MoE routing groups: decode output must not depend on
+        # which rows happen to be co-scheduled (capacity drops couple
+        # tokens within a group) — this is what makes speculative
+        # accept/rollback token-identical to stepwise decode
+        x = x + ffn_dispatch(cfg, lp, x, rules, group_size=1)
         return x, new_cache
 
     x, new_cache = jax.lax.scan(body, x, (params["layers"], cache))
@@ -501,12 +576,70 @@ def paged_decode_step(cfg: ModelConfig, params: dict, arenas: dict,
         a, new_arenas = attn_block_decode_paged(cfg, lp["attn"], x,
                                                 arena_layer, positions, meta)
         x = constrain(x + a, rules, "batch", None, None)
-        x = x + ffn_dispatch(cfg, lp, x, rules)
+        # per-token MoE routing: batch-composition invariance (see
+        # decode_step) — the speculative token-identity contract
+        x = x + ffn_dispatch(cfg, lp, x, rules, group_size=1)
         return x, new_arenas
 
     x, new_arenas = jax.lax.scan(body, x, (params["layers"], arenas))
     logits = _logits_head(cfg, params, x)
     return logits, new_arenas
+
+
+def paged_verify_window_step(cfg: ModelConfig, params: dict, arenas: dict,
+                             tokens: jax.Array, starts: jax.Array,
+                             meta: dict, *, rules=None):
+    """Speculative verify dispatch: tokens (B, W) = [last committed
+    token, W-1 drafted tokens] at absolute positions starts + [0..W).
+
+    One dispatch recomputes the whole window through the full packed
+    path, greedily accepts the longest draft prefix matching its own
+    argmax IN-GRAPH, and commits exactly the accepted tokens' KV — the
+    rejected tail is scrubbed to zeros through the masked
+    quantize-pack store-back. Returns (logits (B, W, V), new_arenas);
+    the host replays the same argmax acceptance on the returned logits
+    for its bookkeeping, so device and host agree by construction."""
+    B, W = tokens.shape
+    x = L.embed_lookup(params["embed"], tokens).astype(jnp.bfloat16)
+
+    from repro.distributed.sharding import constrain
+    wmask = meta["write_mask"]                              # (B, W)
+
+    def body(x, scanned):
+        lp, arena_layer = scanned
+        x = constrain(x, rules, "batch", None, None)
+        a, new_arenas, kv = attn_block_verify_paged(cfg, lp["attn"], x,
+                                                    arena_layer, starts,
+                                                    meta)
+        x = constrain(x + a, rules, "batch", None, None)
+        x = x + _ffn_window(cfg, lp, x, rules)
+        return x, (new_arenas, kv)
+
+    x, (new_arenas, kvs) = jax.lax.scan(body, x, (params["layers"], arenas))
+    logits = _logits_head(cfg, params, x)                   # (B, W, V)
+
+    # greedy acceptance: slot 0 is the already-committed last token, so
+    # at least one verify output is always emitted; n_acc - 1 drafts
+    # matched the full path's own argmax
+    v = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+    mism = jnp.concatenate([tokens[:, 1:] != v[:, :-1],
+                            jnp.ones((B, 1), bool)], axis=1)
+    n_acc = jnp.argmax(mism, axis=1) + 1                    # (B,) in [1, W]
+    accept = (jnp.arange(W)[None, :] < n_acc[:, None]) & wmask
+
+    positions = starts[:, None] + jnp.arange(W)[None, :]
+    max_s = meta["page_table"].shape[1] * cfg.amc.page_size
+    pos_w = jnp.minimum(positions, max_s - 1)
+    k_news, v_news = kvs
+
+    def commit_body(c, scanned):
+        arena_layer, k_l, v_l = scanned
+        return c, _paged_scatter(cfg, arena_layer, k_l, v_l, pos_w, meta,
+                                 wmask, commit=accept)
+
+    _, final_arenas = jax.lax.scan(commit_body, 0,
+                                   (new_arenas, k_news, v_news))
+    return logits, final_arenas
 
 
 def paged_prefill_chunk_step(cfg: ModelConfig, params: dict, arenas: dict,

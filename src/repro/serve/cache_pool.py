@@ -185,7 +185,7 @@ class PagedKVPool:
             "augment_events": 0, "promote_events": 0, "refreshes": 0,
             "refresh_bytes": 0, "augment_bytes": 0,
             "maintenance_dispatches": 0, "alloc_failures": 0,
-            "peak_live_bytes": 0,
+            "peak_live_bytes": 0, "retracted_pages": 0,
         }
 
     # -- byte accounting ------------------------------------------------------
@@ -342,6 +342,48 @@ class PagedKVPool:
 
     def refresh(self, key: tuple, step: int) -> None:
         self.refresh_page(key[0], key[1], step)
+
+    def retract_token_writes(self, rows: np.ndarray,
+                             new_lengths: np.ndarray) -> int:
+        """Speculative rollback: release decode-band pages that hold ONLY
+        draft tokens the verify pass rejected (pages whose first slot is
+        at or past the row's post-accept length). The rejected slots of
+        the surviving boundary page were already scrubbed by the verify
+        step's masked commit re-scatter; retracted pages may hold stale
+        bytes but are never read — the kernel's walk is bounded by
+        `lengths`, and any re-allocation rewrites before the first read.
+        Returns the number of pages released."""
+        page = self.geom.page_size
+        n = 0
+        for row, length in zip(np.asarray(rows).ravel(),
+                               np.asarray(new_lengths).ravel()):
+            row, length = int(row), int(length)
+            first_dead = -(-max(length, 0) // page)      # ceil
+            for lp in np.flatnonzero(self.allocated[row]):
+                if int(lp) >= first_dead:
+                    self._release(row, int(lp))
+                    n += 1
+        if n:
+            self.stats["retracted_pages"] += n
+        return n
+
+    def max_row_tokens(self) -> Optional[int]:
+        """Upper bound on tokens ONE row can ever hold in this pool (the
+        admission-time capacity check), assuming the rest of the pool is
+        empty: the page table's depth, the cheapest plane's arena, and
+        the byte budget in the cheapest mode the policy can reach — each
+        less the row's static prefix pages."""
+        if self.pool_mode == "normal-only":
+            arena, cheapest = self.pages_normal, self._cost(0)
+        elif self.pool_mode == "always-augmented":
+            arena, cheapest = self.pages_packed, self._cost(1)
+        else:
+            arena = self.pages_normal + self.pages_packed
+            cheapest = self._cost(1)
+        pages = min(self.max_pages,
+                    arena - self.prefix_pages,
+                    self.budget_bytes // cheapest - self.prefix_pages)
+        return max(pages, 0) * self.geom.page_size
 
     @property
     def state(self):

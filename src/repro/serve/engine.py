@@ -60,6 +60,35 @@ class Request:
     id: int = 0
 
 
+def _resolve_draft_cfg(cfg: ModelConfig) -> ModelConfig:
+    """Config the speculative draft pass decodes with — the paper's cheap
+    dynamic-plane read of the same stored bits. "dequant" / "dense" swap
+    the Pallas kernels for the plain-XLA reference paths (much cheaper in
+    interpret mode, and still reading the augmented storage); "packed"
+    forces the packed matmuls; "imcN" drafts through the bit-serial IMC
+    dot at N-bit activations; "same" drafts at full quality (every draft
+    accepted — a latency-hiding baseline, not a cost saving)."""
+    impl = cfg.amc.spec_draft_impl
+    a = cfg.amc
+    if impl == "same":
+        return cfg
+    if impl == "dequant":
+        amc_cfg = dataclasses.replace(a, kv_impl="dequant")
+    elif impl == "dense":
+        amc_cfg = dataclasses.replace(a, matmul_impl="dense",
+                                      kv_impl="dequant")
+    elif impl == "packed":
+        amc_cfg = dataclasses.replace(a, matmul_impl="packed")
+    elif impl.startswith("imc") and impl[3:] in ("1", "4", "8"):
+        amc_cfg = dataclasses.replace(a, matmul_impl="imc",
+                                      imc_abits=int(impl[3:]))
+    else:
+        raise ValueError(
+            f"unknown spec_draft_impl {impl!r} (expected dequant | dense "
+            f"| packed | imc1/imc4/imc8 | same)")
+    return dataclasses.replace(cfg, amc=amc_cfg)
+
+
 def _abstract_bytes(tree) -> int:
     """Total bytes of a PSpec tree (dense logical footprint)."""
     leaves = jax.tree.leaves(tree, is_leaf=is_pspec)
@@ -80,12 +109,15 @@ class ServeEngine:
                  retention_steps: Optional[int] = None,
                  matmul_impl: Optional[str] = None,
                  imc_abits: Optional[int] = None,
-                 state_bits: Optional[int] = None):
+                 state_bits: Optional[int] = None,
+                 spec_k: Optional[int] = None,
+                 spec_draft_impl: Optional[str] = None):
         # engine-level AMC knobs override the config (e.g. serve a dense
         # checkpoint with ternary weights without touching the arch file)
         if weight_mode is not None or kv_mode is not None \
                 or pool_mode is not None or matmul_impl is not None \
-                or imc_abits is not None or state_bits is not None:
+                or imc_abits is not None or state_bits is not None \
+                or spec_k is not None or spec_draft_impl is not None:
             cfg = dataclasses.replace(cfg, amc=dataclasses.replace(
                 cfg.amc,
                 weight_mode=weight_mode or cfg.amc.weight_mode,
@@ -93,7 +125,9 @@ class ServeEngine:
                 pool_mode=pool_mode or cfg.amc.pool_mode,
                 matmul_impl=matmul_impl or cfg.amc.matmul_impl,
                 imc_abits=imc_abits or cfg.amc.imc_abits,
-                state_bits=state_bits or cfg.amc.state_bits))
+                state_bits=state_bits or cfg.amc.state_bits,
+                spec_k=cfg.amc.spec_k if spec_k is None else spec_k,
+                spec_draft_impl=spec_draft_impl or cfg.amc.spec_draft_impl))
         self.cfg, self.mesh = cfg, mesh
         self.max_batch, self.max_seq = max_batch, max_seq
         self.prefill_chunk = min(prefill_chunk, max_seq)
@@ -126,6 +160,27 @@ class ServeEngine:
         self._decode = jax.jit(fns["decode"], donate_argnums=(1,))
         self._prefill = (jax.jit(fns["prefill"], donate_argnums=(1,))
                          if fns["prefill"] is not None else None)
+        # self-speculative decoding: draft spec_k - 1 tokens per round out
+        # of the cheap (dynamic-plane) representation, verify the whole
+        # window through the full packed path in ONE dispatch, accept the
+        # longest matching prefix (token-identical to stepwise decode)
+        self.spec_k = cfg.amc.spec_k
+        self._verify = (jax.jit(fns["verify"], donate_argnums=(1,))
+                        if fns.get("verify") is not None else None)
+        self._spec = self.spec_k > 1 and self._verify is not None
+        self._spec_stats = {"spec_rounds": 0, "draft_dispatches": 0,
+                            "verify_dispatches": 0, "accepted_tokens": 0}
+        if self._spec:
+            self._draft_cfg = _resolve_draft_cfg(cfg)
+            draft_fns = state_store.make_step_fns(self._draft_cfg,
+                                                  self.store,
+                                                  rules=self.rules)
+            # slab drafts advance the recurrent state the snapshot holds a
+            # REFERENCE to — the draft step must not donate those buffers;
+            # paged drafts only write fresh page slots, so donation is safe
+            donate = (1,) if self.store.kind == "paged" else ()
+            self._draft_decode = jax.jit(draft_fns["decode"],
+                                         donate_argnums=donate)
         # slot bookkeeping (host side, int32 once — dispatched as-is)
         self.positions = np.zeros(max_batch, np.int32)
         self.remaining = np.zeros(max_batch, np.int32)
@@ -244,6 +299,21 @@ class ServeEngine:
             raise ValueError(
                 f"prompt of {prompt.size} tokens exceeds "
                 f"max_seq={self.max_seq} cache slots")
+        cap_tokens = self.store.max_row_tokens()
+        if cap_tokens is not None:
+            # the row stores min(P + N - 1, max_seq - 1) tokens at peak
+            # (prompt + generated, last generation never written); a
+            # request the store can NEVER hold would otherwise loop
+            # admission/preemption forever inside generate()
+            need = min(prompt.size + req.max_new_tokens - 1,
+                       self.max_seq - 1)
+            if need > cap_tokens:
+                raise ValueError(
+                    f"request needs {need} cache tokens at peak (prompt "
+                    f"{prompt.size} + max_new_tokens {req.max_new_tokens}"
+                    f", capped by max_seq={self.max_seq}) but the store "
+                    f"holds at most {cap_tokens} tokens per row — raise "
+                    f"the pool budget/pages or shrink the request")
         entry = QueueEntry(req=req, prompt=prompt,
                            remaining=req.max_new_tokens,
                            enqueue_step=self.step_idx)
@@ -457,6 +527,8 @@ class ServeEngine:
             for s, t in last_tokens.items():
                 self.last_token[s] = t
         self._admit()
+        if self._spec and self.active.any():
+            return self._step_all_spec()
         self.scheduler.refresh_pass(self.step_idx)
         self._sync_refresh_events()
         self._ensure_decode_capacity()
@@ -492,6 +564,118 @@ class ServeEngine:
             self.scheduler.release_row(int(s))
         self.step_idx += 1
         return {int(s): int(arg[s]) for s in np.flatnonzero(act & ~done)}
+
+    def _step_all_spec(self) -> dict:
+        """One self-speculative round for every active row: spec_k - 1
+        cheap draft dispatches propose a spec_k-token window out of the
+        dynamic-plane read, ONE full-path verify dispatch scores and
+        commits it, and the longest greedily-matching prefix is emitted.
+        Greedy accept keeps the emitted stream token-identical to
+        step-by-step decode; rejected draft storage is rolled back (page
+        retraction on paged stores, snapshot restore on slab stores)."""
+        self.scheduler.refresh_pass(self.step_idx)
+        self._sync_refresh_events()
+        W = self.spec_k
+        B = self.max_batch
+        # per-row window cap >= 1: stepwise decode retires a row once its
+        # position reaches max_seq - 1, so no window slot may write past
+        # max_seq - 2
+        cap = np.ones(B, np.int32)
+        rows = np.flatnonzero(self.active)
+        cap[rows] = np.clip(self.max_seq - 1 - self.positions[rows], 1, W)
+        # every window slot needs storage BEFORE the draft writes it; the
+        # same augment-then-preempt ladder as _ensure_decode_capacity
+        for row in rows:
+            if not self.active[row]:
+                continue    # preempted by an earlier row's allocation
+            while not self.scheduler.ensure_window(
+                    int(row), int(self.positions[row]), int(cap[row]),
+                    self.step_idx):
+                victim = self.scheduler.preemption_victim(int(row),
+                                                          self.active)
+                if victim is None:
+                    raise RuntimeError(
+                        "state store cannot hold one growing sequence — "
+                        "budget_bytes too small for max_seq")
+                self._preempt(victim)
+        rows = np.flatnonzero(self.active)
+        wmask2d = self.active[:, None] & (np.arange(W)[None, :]
+                                          < cap[:, None])
+        # -- draft: W - 1 cheap single-token steps propose the window tail
+        toks = np.zeros((B, W), np.int32)
+        toks[:, 0] = np.where(self.active, self.last_token, 0)
+        if self.store.kind == "slab":
+            self.store.speculative_snapshot()
+        for i in range(W - 1):
+            # clamp keeps INACTIVE rows' stale positions inside the table;
+            # active rows never exceed max_seq - 2 by the cap above
+            pos_i = np.minimum(self.positions + i, self.max_seq - 1)
+            lg = self._dispatch(self._draft_decode,
+                                {"tokens": jnp.asarray(toks[:, i:i + 1]),
+                                 "positions": jnp.asarray(pos_i),
+                                 "write_mask": jnp.asarray(wmask2d[:, i])})
+            self.energy_ledger.add(
+                imc_energy.decode_matmul_events(self._draft_cfg,
+                                                int(rows.size)), "draft")
+            self._spec_stats["draft_dispatches"] += 1
+            toks[:, i + 1] = np.asarray(
+                jnp.argmax(lg[:, -1], axis=-1)).astype(np.int32)
+        if self.store.kind == "slab":
+            # the verify scan replays the window from the pre-draft state
+            self.store.speculative_restore()
+        # -- verify: ONE full-quality dispatch over the whole window
+        logits = self._dispatch(self._verify,
+                                {"tokens": jnp.asarray(toks),
+                                 "positions": jnp.asarray(self.positions),
+                                 "write_mask": jnp.asarray(wmask2d)})
+        self._spec_stats["verify_dispatches"] += 1
+        self._spec_stats["spec_rounds"] += 1
+        self._account_dispatch(rows, W, self.positions[rows] + cap[rows],
+                               self.positions[rows])
+        # -- host accept: longest prefix where the verifier agrees with
+        # the draft (same formula the verify step committed KV with)
+        v = np.asarray(jnp.argmax(logits, axis=-1)).astype(np.int32)
+        mism = np.concatenate([toks[:, 1:] != v[:, :-1],
+                               np.ones((B, 1), bool)], axis=1)
+        n_acc = np.minimum(mism.argmax(axis=1).astype(np.int32) + 1, cap)
+        act = self.active.copy()
+        n_emit = np.where(act, np.minimum(n_acc, self.remaining),
+                          0).astype(np.int32)
+        rw, ps = [], []
+        total = 0
+        for s in rows:
+            na = int(n_emit[s])
+            self.outputs[self.slot_req[s].id].extend(
+                int(t) for t in v[s, :na])
+            total += na
+            nc = int(n_acc[s])     # committed (may exceed the emit budget)
+            rw.extend([int(s)] * nc)
+            ps.extend(range(int(self.positions[s]),
+                            int(self.positions[s]) + nc))
+        if rw:
+            self.store.note_token_writes(np.array(rw), np.array(ps),
+                                         self.step_idx)
+        self.energy_ledger.note_tokens(total)
+        self._spec_stats["accepted_tokens"] += total
+        # roll back pages that held only rejected draft tokens (slab
+        # stores already rolled back wholesale via the snapshot)
+        if rows.size:
+            self.store.retract_token_writes(
+                rows, self.positions[rows] + n_acc[rows])
+        self.positions[act] += n_emit[act]
+        self.remaining[act] -= n_emit[act]
+        last = v[np.arange(B), np.maximum(n_emit - 1, 0)]
+        self.last_token = np.where(act, last, self.last_token)
+        done = act & ((self.remaining <= 0)
+                      | (self.positions >= self.max_seq - 1))
+        self.active &= ~done
+        for s in np.flatnonzero(done):
+            self.slot_req[s] = None
+            self._slot_entry[s] = None
+            self.scheduler.release_row(int(s))
+        self.step_idx += 1
+        return {int(s): int(v[s, n_emit[s] - 1])
+                for s in np.flatnonzero(act & ~done)}
 
     # -- stats -----------------------------------------------------------------
 
@@ -549,6 +733,22 @@ class ServeEngine:
         imc["refresh_energy_fj"] = imc["groups"].get(
             "refresh", {}).get("energy_fj", 0.0)
         out["imc"] = imc
+        sp = dict(self._spec_stats)
+        nd = sp["draft_dispatches"] + sp["verify_dispatches"]
+        sp.update({
+            "enabled": self._spec,
+            "spec_k": self.spec_k,
+            "spec_draft_impl": a.spec_draft_impl,
+            # the speedup headline: useful tokens per device dispatch
+            # across the whole draft + verify round (stepwise decode is
+            # 1.0 by construction)
+            "accepted_tokens_per_dispatch":
+                sp["accepted_tokens"] / nd if nd else 0.0,
+            "accepted_tokens_per_round":
+                sp["accepted_tokens"] / sp["spec_rounds"]
+                if sp["spec_rounds"] else 0.0,
+        })
+        out["spec"] = sp
         pool = self.store.describe()
         out["pool"] = pool
         out["scheduler"] = self.scheduler.describe()

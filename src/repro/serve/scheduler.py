@@ -117,6 +117,17 @@ class Scheduler:
         fixed-size and always succeed for admitted rows)."""
         return self.store.ensure_position(row, pos, step)
 
+    def ensure_window(self, row: int, start: int, count: int,
+                      step: int) -> bool:
+        """`ensure_position` over a speculative window: storage for every
+        position in [start, start + count) must exist before the draft
+        pass writes it. Idempotent — the engine's preemption loop retries
+        the whole window after evicting a victim."""
+        for pos in range(start, start + count):
+            if not self.store.ensure_position(row, pos, step):
+                return False
+        return True
+
     def release_row(self, row: int) -> None:
         self.store.release_row(row)
         self.row_ticket[row] = -1

@@ -332,11 +332,12 @@ class AugmentedStatePool:
         self.last_write = np.full(max_batch, -1, np.int64)
         self.policies: dict[int, RefreshPolicy] = {}
         self._tables_cache: Optional[dict] = None
+        self._spec_snapshot: Optional[dict] = None
         self.stats = {
             "augment_events": 0, "promote_events": 0, "refreshes": 0,
             "refresh_bytes": 0, "augment_bytes": 0,
             "maintenance_dispatches": 0, "alloc_failures": 0,
-            "peak_live_bytes": 0,
+            "peak_live_bytes": 0, "spec_snapshots": 0, "spec_rollbacks": 0,
         }
 
     # -- byte accounting ----------------------------------------------------
@@ -405,6 +406,11 @@ class AugmentedStatePool:
     def ensure_position(self, row: int, pos: int, step: int) -> bool:
         """Slabs are fixed-size: an admitted row always has room."""
         return bool(self.slot_alloc[row])
+
+    def max_row_tokens(self) -> Optional[int]:
+        """Fixed-size slabs hold a row's whole recurrent state whatever
+        its length: no per-row token capacity bound."""
+        return None
 
     def release_row(self, row: int) -> None:
         if not self.slot_alloc[row]:
@@ -510,6 +516,31 @@ class AugmentedStatePool:
         return max((pol.age(step) for pol in self.policies.values()),
                    default=0)
 
+    # -- speculative decode: slab snapshot / rollback --------------------------
+
+    def speculative_snapshot(self) -> None:
+        """Pin the pre-draft slab planes. The draft pass advances the real
+        recurrent state, so the engine dispatches drafts through a
+        NON-donating step (these buffers stay valid) and the verify scan
+        replays the window from this exact tree — rejected draft steps
+        never touch committed storage."""
+        self._spec_snapshot = self._state
+        self.stats["spec_snapshots"] += 1
+
+    def speculative_restore(self) -> None:
+        """Roll the slab planes back to the pre-draft snapshot (always
+        called before verify: verify itself re-runs the accepted steps)."""
+        assert self._spec_snapshot is not None, "no speculative snapshot"
+        self._state = self._spec_snapshot
+        self._spec_snapshot = None
+        self.stats["spec_rollbacks"] += 1
+
+    def retract_token_writes(self, rows: np.ndarray,
+                             new_lengths: np.ndarray) -> int:
+        """Slab rollback is wholesale (snapshot/restore above): there is
+        no per-token storage to retract."""
+        return 0
+
     # -- device views ---------------------------------------------------------
 
     @property
@@ -610,6 +641,11 @@ class CompositeStore:
     def ensure_position(self, row: int, pos: int, step: int) -> bool:
         return all(p.ensure_position(row, pos, step)
                    for p in self.parts.values())
+
+    def max_row_tokens(self) -> Optional[int]:
+        caps = [c for c in (p.max_row_tokens()
+                            for p in self.parts.values()) if c is not None]
+        return min(caps) if caps else None
 
     def release_row(self, row: int) -> None:
         for p in self.parts.values():
@@ -750,8 +786,10 @@ def make_store(cfg: ModelConfig, *, max_batch: int, max_seq: int,
 
 def make_step_fns(cfg: ModelConfig, store, *,
                   rules=None) -> dict[str, Optional[Callable]]:
-    """(decode, prefill) callables for `jax.jit` over (params, state,
-    batch) — the ONE place the store kind meets the family dispatch."""
+    """(decode, prefill, verify) callables for `jax.jit` over (params,
+    state, batch) — the ONE place the store kind meets the family
+    dispatch. ``verify`` is the speculative-decode verify step (None for
+    families without one: the engine falls back to stepwise decode)."""
     from repro.models import model as M
     fam = cfg.family
 
@@ -761,6 +799,9 @@ def make_step_fns(cfg: ModelConfig, store, *,
                                                           rules=rules),
             "prefill": (lambda p, s, b: M.paged_prefill_step(cfg, p, s, b,
                                                              rules=rules))
+            if fam != "audio" else None,
+            "verify": (lambda p, s, b: M.paged_verify_step(cfg, p, s, b,
+                                                           rules=rules))
             if fam != "audio" else None,
         }
     if fam == "vlm":
@@ -773,7 +814,7 @@ def make_step_fns(cfg: ModelConfig, store, *,
             logits, new_kv = M.paged_decode_step(
                 cfg, params, state["kv"], {**batch, **prefix}, rules=rules)
             return logits, {"kv": new_kv, "prefix": state["prefix"]}
-        return {"decode": vlm_decode, "prefill": None}
+        return {"decode": vlm_decode, "prefill": None, "verify": None}
 
     # slab families (ssm / hybrid): reconstitute -> family step -> store
     bits = store.state_bits
@@ -785,4 +826,53 @@ def make_step_fns(cfg: ModelConfig, store, *,
         return logits, slab_store_back(state, new_cache,
                                        batch.get("slot_modes"), bits,
                                        write=batch.get("write_mask"))
-    return {"decode": slab_decode, "prefill": None}
+
+    def slab_verify(params, state, batch):
+        """Speculative verify for recurrent-state families: replay the
+        W-token window as a `lax.scan` of the SAME single-token decode
+        step from the pre-draft slab state (the engine restored it),
+        then commit exactly the state after the accepted prefix.
+
+        Each scan step is bit-identical to one stepwise dispatch (same
+        function, same single-token shapes), which is what makes slab
+        speculation token-identical; the wholesale restore + re-scan IS
+        the rollback — rejected draft steps live only in intermediate
+        scan carries that are never stored back."""
+        tokens = batch["tokens"]                        # (B, W)
+        starts = batch["positions"]                     # (B,)
+        wmask = batch["write_mask"]                     # (B, W) bool
+        modes = batch.get("slot_modes")
+        B, W = tokens.shape
+        cache0 = slab_reconstitute(state, modes, bits)
+
+        def body(cache, w):
+            step_batch = {
+                "tokens": jax.lax.dynamic_slice_in_dim(tokens, w, 1, 1),
+                "positions": starts + w}
+            lg, new_cache = M.decode_step(cfg, params, cache, step_batch,
+                                          rules=rules)
+            return new_cache, (lg[:, -1], new_cache)
+
+        _, (lgs, caches) = jax.lax.scan(body, cache0, jnp.arange(W))
+        logits = jnp.moveaxis(lgs, 0, 1)                # (B, W, V)
+
+        # greedy acceptance (same formula as the paged verify step);
+        # capped by the host's per-row window mask near retirement
+        v = jnp.argmax(logits, axis=-1).astype(tokens.dtype)
+        mism = jnp.concatenate([tokens[:, 1:] != v[:, :-1],
+                                jnp.ones((B, 1), bool)], axis=1)
+        n_acc = jnp.argmax(mism, axis=1) + 1            # (B,) in [1, W]
+        cap = jnp.maximum(wmask.sum(axis=1), 1)
+        sel = jnp.minimum(n_acc, cap) - 1               # committed step idx
+
+        def pick(leaf):
+            # stacked scan ys: (W, L?, B, ...) with batch at axis 2
+            idx = sel.reshape((1, 1, -1) + (1,) * (leaf.ndim - 3))
+            return jnp.take_along_axis(leaf, idx.astype(jnp.int32),
+                                       axis=0)[0]
+
+        committed = jax.tree.map(pick, caches)
+        return logits, slab_store_back(state, committed, modes, bits,
+                                       write=wmask[:, 0])
+
+    return {"decode": slab_decode, "prefill": None, "verify": slab_verify}

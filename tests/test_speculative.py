@@ -1,0 +1,221 @@
+"""Speculative decoding out of the augmented plane.
+
+Three layers of guarantees:
+  * kernel: the verify window kernel is BIT-identical, per window slot,
+    to the single-token paged kernel at the slot's horizon — including
+    windows that straddle a page boundary, windows exactly one page
+    wide, and horizons one token short of a page, on mixed
+    Normal/Augmented pools;
+  * engine: `spec_k >= 2` emits token-identical streams to `spec_k == 1`
+    for dense, moe and ssm families (the accept/rollback contract), and
+    keeps doing so when every draft is forced to be WRONG — which drives
+    the paged store's page retraction and the slab store's snapshot
+    rollback;
+  * admission: a request whose prompt + budget can never fit the store
+    fails fast with a clean ValueError instead of looping admission.
+"""
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from test_cache_pool import _contiguous_packed, _page_out
+
+from repro.configs import get_arch
+from repro.configs.base import AMCConfig
+from repro.kernels import ops as K
+from repro.kernels.ref import rel_err
+from repro.launch.mesh import make_local_mesh
+from repro.models import layers as L
+from repro.serve import Request, ServeEngine
+
+
+# ---------------------------------------------------------------------------
+# window kernel: per-slot bit-identity on page-boundary geometries
+# ---------------------------------------------------------------------------
+
+def _mixed_pool(rng, B, KV, D, page, maxP, kv_bits):
+    """A paged pool with alternating Normal/Augmented pages (the Normal
+    plane holds the dequantized rows) plus its hold-previous tables —
+    the same construction as the mixed-mode oracle test."""
+    S = maxP * page
+    kp_c, vp_c, ks_c, vs_c = _contiguous_packed(rng, B, KV, S, D, kv_bits)
+    kp, table = _page_out(kp_c, page, maxP, B)
+    vp, _ = _page_out(vp_c, page, maxP, B)
+    ks, _ = _page_out(ks_c, page, maxP, B)
+    vs, _ = _page_out(vs_c, page, maxP, B)
+    unpack = L.unpack_kv_int4 if kv_bits == 4 else L.unpack_kv_int8
+    kn = jnp.zeros((B * maxP + 1, KV, page, D), jnp.bfloat16)
+    vn = jnp.zeros((B * maxP + 1, KV, page, D), jnp.bfloat16)
+    modes = np.ones((B, maxP), np.int32)
+    for b in range(B):
+        for p in range(0, maxP, 2):
+            phys = table[b, p]
+            kn = kn.at[phys].set(unpack(kp[phys], ks[phys][..., None]))
+            vn = vn.at[phys].set(unpack(vp[phys], vs[phys][..., None]))
+            modes[b, p] = 0
+    nidx = np.zeros((B, maxP), np.int32)
+    pidx = np.zeros((B, maxP), np.int32)
+    lastn = np.zeros(B, np.int32)
+    lastp = np.zeros(B, np.int32)
+    for s in range(maxP):
+        lastn = np.where(modes[:, s] == 0, table[:, s], lastn)
+        lastp = np.where(modes[:, s] == 1, table[:, s], lastp)
+        nidx[:, s], pidx[:, s] = lastn, lastp
+    return ((kn, vn, kp, vp, ks, vs),
+            (jnp.asarray(modes), jnp.asarray(nidx), jnp.asarray(pidx)))
+
+
+# page = 8: window geometries the speculative engine actually produces
+_WINDOW_CASES = {
+    "straddles_two_pages": (6, 4),      # positions 6..9 cross page 0 -> 1
+    "window_eq_page_size": (8, 8),      # slots exactly cover page 1
+    "one_short_of_page": (5, 4),        # horizons 6,7,8,9: one hits p-1
+    "ends_one_short_of_page": (12, 3),  # horizons 13,14,15: stops at p-1
+}
+
+
+@pytest.mark.parametrize("kv_bits", [4, 8])
+@pytest.mark.parametrize("case", sorted(_WINDOW_CASES))
+def test_window_kernel_slotwise_bit_identical(kv_bits, case):
+    """Window slot w must reproduce the single-token kernel at lengths ==
+    start + w + 1 BIT-for-bit: pages past a slot's horizon contribute
+    exp(-inf) == 0.0 exactly in the f32 online softmax, so the fused
+    window walk and the per-token walk are the same op sequence. This is
+    the property that makes speculative accept/rollback token-identical
+    to step-by-step decode."""
+    start0, W = _WINDOW_CASES[case]
+    rng = np.random.default_rng(5)
+    B, KV, Hg, D, page, maxP = 2, 2, 2, 32, 8, 4
+    planes, tables = _mixed_pool(rng, B, KV, D, page, maxP, kv_bits)
+    qw = jnp.asarray(rng.standard_normal((B, KV, W, Hg, D)), jnp.bfloat16)
+    starts = jnp.asarray([start0, max(start0 - 3, 0)], jnp.int32)
+    ow = K.paged_kv_attention_window(qw, *planes, starts, *tables,
+                                     page=page, kv_bits=kv_bits)
+    for w in range(W):
+        o1 = K.paged_kv_attention(qw[:, :, w], *planes, starts + w + 1,
+                                  *tables, page=page, kv_bits=kv_bits)
+        a = np.asarray(ow[:, :, w]).view(np.uint16)
+        b = np.asarray(o1).view(np.uint16)
+        assert (a == b).all(), f"slot {w} diverged from single-token kernel"
+
+
+@pytest.mark.parametrize("kv_bits", [4, 8])
+def test_window_kernel_matches_ref_oracle(kv_bits):
+    rng = np.random.default_rng(6)
+    B, KV, Hg, D, page, maxP, W = 2, 2, 2, 32, 8, 4, 5
+    planes, tables = _mixed_pool(rng, B, KV, D, page, maxP, kv_bits)
+    qw = jnp.asarray(rng.standard_normal((B, KV, W, Hg, D)), jnp.bfloat16)
+    starts = jnp.asarray([7, 20], jnp.int32)     # one straddle, one interior
+    o = K.paged_kv_attention_window(qw, *planes, starts, *tables,
+                                    page=page, kv_bits=kv_bits)
+    o_ref = K.paged_kv_attention_window(qw, *planes, starts, *tables,
+                                        page=page, kv_bits=kv_bits,
+                                        use_ref=True)
+    assert rel_err(o, o_ref) < 0.02
+
+
+def test_masked_quantize_pack_scrubs_rejected_rows():
+    """The speculative store-back: rejected rows commit as zero bytes +
+    unit scale; accepted rows are bit-identical to the unmasked pack."""
+    rng = np.random.default_rng(7)
+    kv = jnp.asarray(rng.standard_normal((2, 6, 2, 32)), jnp.bfloat16)
+    valid = jnp.asarray(np.array([[1, 1, 1, 0, 0, 0],
+                                  [1, 0, 1, 0, 1, 0]], bool))[:, :, None]
+    p, s = K.quantize_pack_kv(kv, valid)
+    p0, s0 = K.quantize_pack_kv(kv)
+    keep = np.broadcast_to(np.asarray(valid), kv.shape[:-1])
+    assert np.array_equal(np.asarray(p)[keep], np.asarray(p0)[keep])
+    assert np.array_equal(np.asarray(s, np.float32)[keep],
+                          np.asarray(s0, np.float32)[keep])
+    assert (np.asarray(p)[~keep] == 0).all()
+    assert (np.asarray(s, np.float32)[~keep] == 1.0).all()
+
+
+# ---------------------------------------------------------------------------
+# engine: token identity, forced rejection, capacity admission
+# ---------------------------------------------------------------------------
+
+_FAMILIES = {
+    "dense_int4": ("qwen1.5-0.5b", dict(kv_mode="int4")),
+    "moe": ("qwen3-moe-30b-a3b", dict(kv_mode="int4")),
+    "ssm": ("mamba2-130m", {}),
+}
+
+
+def _gen(arch, knobs, spec_k, *, wrap_draft=None, max_seq=40):
+    cfg = get_arch(arch).reduced()
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=max_seq,
+                      prefill_chunk=8, spec_k=spec_k, **knobs)
+    if wrap_draft is not None:
+        eng._draft_decode = wrap_draft(eng._draft_decode)
+    rng = np.random.default_rng(11)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(n,))
+                    .astype(np.int32), max_new_tokens=m, id=i)
+            for i, (n, m) in enumerate([(5, 9), (9, 6), (3, 7)])]
+    return eng.generate(reqs), eng
+
+
+@pytest.mark.parametrize("family", sorted(_FAMILIES))
+def test_spec_decode_token_identical_to_stepwise(family):
+    """The acceptance golden: spec_k >= 2 must emit the exact token
+    streams of spec_k == 1 (greedy stepwise decode), for paged KV and
+    recurrent-slab families alike, through admission/queueing and row
+    retirement."""
+    arch, knobs = _FAMILIES[family]
+    base, _ = _gen(arch, knobs, 1)
+    spec, eng = _gen(arch, knobs, 3)
+    assert spec == base
+    st = eng.stats()["spec"]
+    assert st["enabled"] and st["verify_dispatches"] > 0
+    assert st["accepted_tokens"] >= st["spec_rounds"]   # >= 1 token/round
+
+
+def _negate(fn):
+    """Draft wrapper that argmax-inverts the logits: every drafted token
+    is (near-certainly) WRONG, so each round accepts exactly the one
+    verify-produced token and every optimistic draft write is rejected —
+    the worst-case rollback path."""
+    def wrapped(params, state, batch):
+        lg, new_state = fn(params, state, batch)
+        return -lg, new_state
+    return wrapped
+
+
+def test_spec_forced_rejection_retracts_paged_pages():
+    arch, knobs = _FAMILIES["dense_int4"]
+    base, _ = _gen(arch, knobs, 1)
+    spec, eng = _gen(arch, knobs, 4, wrap_draft=_negate)
+    assert spec == base
+    st = eng.stats()
+    # each round accepted ~1 of 4 slots: draft pages past the accepted
+    # horizon were speculatively allocated and must have been released
+    assert st["pool"]["retracted_pages"] > 0
+    assert st["spec"]["accepted_tokens"] < \
+        st["spec"]["spec_rounds"] * eng.spec_k
+
+
+def test_spec_forced_rejection_rolls_back_slab_state():
+    arch, knobs = _FAMILIES["ssm"]
+    base, _ = _gen(arch, knobs, 1)
+    spec, eng = _gen(arch, knobs, 3, wrap_draft=_negate)
+    assert spec == base
+    pool = eng.stats()["pool"]
+    assert pool["spec_snapshots"] > 0
+    assert pool["spec_rollbacks"] == pool["spec_snapshots"]
+
+
+def test_add_request_rejects_request_exceeding_store_capacity():
+    """A request whose prompt + generation budget can NEVER fit one row
+    of the store (pages, not max_seq) must fail fast at add_request."""
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, amc=AMCConfig(kv_mode="normal"))
+    eng = ServeEngine(cfg, make_local_mesh(), max_batch=2, max_seq=64,
+                      pool_pages_normal=2)       # 2 x 16-token pages/row
+    ok = Request(prompt=np.arange(8, dtype=np.int32), max_new_tokens=8,
+                 id=0)
+    assert eng.add_request(ok) is not None       # 15 peak tokens fit
+    with pytest.raises(ValueError, match="holds at most"):
+        eng.add_request(Request(prompt=np.arange(8, dtype=np.int32),
+                                max_new_tokens=40, id=1))
