@@ -5,8 +5,10 @@ weight_mode serving matrix + modeled HBM traffic), BENCH_kernels.json
 (per-kernel modeled bytes + Pallas-interpret parity),
 BENCH_scheduler.json (pool modes x offered load + the per-family arch
 sweep), BENCH_paper_tables.json (the Tables I-VI analog rows, structured)
-and BENCH_imc.json (storage matrix x activation precision: modeled
-energy/token + throughput) so the serving perf trajectory is tracked
+BENCH_imc.json (storage matrix x activation precision: modeled
+energy/token + throughput) and BENCH_fault.json (retention-fault chaos
+sweep: injection rates x recovery outcomes, with token identity to the
+fault-free run asserted) so the serving perf trajectory is tracked
 across PRs.
 
 A failing emitter no longer takes the others down silently: every section
@@ -34,8 +36,8 @@ def main() -> None:
                          "so the whole harness finishes in minutes")
     args = ap.parse_args()
     print("name,us_per_call,derived")
-    from benchmarks import e2e_bench, imc_bench, kernels_bench, paper_tables
-    from benchmarks import scheduler_bench
+    from benchmarks import e2e_bench, fault_bench, imc_bench, kernels_bench
+    from benchmarks import paper_tables, scheduler_bench
     sections = (
         ("BENCH_paper_tables.json", "paper tables I-VI analogs",
          paper_tables.run_all),
@@ -48,6 +50,9 @@ def main() -> None:
          scheduler_bench.run_all),
         ("BENCH_imc.json", "in-memory compute (storage x precision)",
          imc_bench.run_all),
+        ("BENCH_fault.json",
+         "retention-fault chaos (rates x recovery, token identity)",
+         fault_bench.run_all),
     )
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     failures: list[str] = []

@@ -105,6 +105,33 @@ class AMCConfig:
     # value per byte, int4 nibble-packs pairs — the slab-granularity
     # analogue of the pool's per-page aug_bits.
     state_bits: int = 8
+    # -- retention-fault injection & self-healing (core/faults.py) ----------
+    # Per-unit (page/slab), per-decode-step probability of an early
+    # retention expiry for a dynamic unit at the END of its retention
+    # window at 85C; younger units scale down linearly with age and
+    # colder arrays through LeakageModel (Tables I-II tails). 0 disables
+    # the whole fault machinery (zero hot-path overhead).
+    fault_rate: float = 0.0
+    # Seed of the deterministic fault schedule (chaos runs reproduce).
+    fault_seed: int = 0
+    # Per-step probability of a whole-array failure event; the engine's
+    # Supervisor drains and requeues every active row (tokens preserved).
+    array_loss_rate: float = 0.0
+    # Modeled array temperature the fault tails are sampled at (85C is
+    # the paper's hot calibration point; 25C cuts the 8T rate 10x).
+    fault_temp_c: float = 85.0
+    # Verify integrity words (checksum over packed payload + scales) on
+    # gather/refresh so corrupted reads are detected, never served.
+    # Only consulted when fault injection is active; disabling it with a
+    # nonzero fault_rate is the silent-corruption ablation.
+    integrity_check: bool = True
+    # Request-level bound on fault-recovery retries (recompute-via-
+    # preemption with exponential backoff); past it the request is
+    # surfaced as an accounted failure, never silently served.
+    max_retries: int = 3
+    # Detections of the SAME physical unit before it is pinned back to
+    # Normal mode / decommissioned (repeat-offender = weak cell).
+    fault_pin_threshold: int = 3
     # -- self-speculative decoding (serve/engine.py) ------------------------
     # Window size: spec_k - 1 tokens are drafted per round from the cheap
     # (dynamic-plane) representation and the whole spec_k-token window is

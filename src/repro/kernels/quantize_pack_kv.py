@@ -46,6 +46,27 @@ def _qpack_kernel(x_ref, p_ref, s_ref, *, bn: int, d: int):
     s_ref[...] = scale.astype(s_ref.dtype)
 
 
+def _qpack_integrity_kernel(x_ref, p_ref, s_ref, w_ref, *, bn: int, d: int):
+    # quantize-on-write with fused integrity words: the same pack as
+    # _qpack_kernel plus a per-row byte-weighted checksum (word =
+    # sum_j (j+1) * packed_byte_j mod 2**32, the formula of
+    # core.faults.integrity_word) — computed while the packed bytes are
+    # still in VMEM, so detection metadata costs no extra array read
+    x = x_ref[...]                                        # (bn, D)
+    amax = jnp.max(jnp.abs(x), axis=1, keepdims=True)
+    scale = jnp.maximum(amax, 1e-8) / INT4_MAX            # (bn, 1)
+    q = jnp.clip(jnp.round(x / scale), -INT4_MAX, INT4_MAX).astype(jnp.int8)
+    qr = q.reshape(bn, d // 2, 2)
+    hi = jnp.bitwise_and(qr[:, :, 0].astype(jnp.uint8), jnp.uint8(0x0F))
+    lo = jnp.bitwise_and(qr[:, :, 1].astype(jnp.uint8), jnp.uint8(0x0F))
+    packed = jnp.bitwise_or(jnp.left_shift(hi, 4), lo)
+    p_ref[...] = packed
+    s_ref[...] = scale.astype(s_ref.dtype)
+    lanes = jax.lax.broadcasted_iota(jnp.uint32, (bn, d // 2), 1) + 1
+    w_ref[...] = jnp.sum(packed.astype(jnp.uint32) * lanes, axis=1,
+                         keepdims=True)
+
+
 def _qpack_masked_kernel(x_ref, valid_ref, p_ref, s_ref, *, bn: int, d: int):
     # the speculative store-back: rows whose token was REJECTED by the
     # verify pass commit zero bytes + unit scale instead of their values
@@ -64,11 +85,16 @@ def _qpack_masked_kernel(x_ref, valid_ref, p_ref, s_ref, *, bn: int, d: int):
 
 
 def quantize_pack_kv_pallas(kv: jax.Array, valid=None, *,
-                            bn: int = DEFAULT_BN, interpret: bool = False):
+                            bn: int = DEFAULT_BN, interpret: bool = False,
+                            with_integrity: bool = False):
     """kv: (N, D) bf16/f32, D even. Returns (packed (N, D//2) uint8,
     scale (N, 1) f32). N % bn == 0 (pad in the wrapper). `valid` (N, 1)
     int32, optional: rows with valid == 0 commit as zeros + unit scale
-    (speculative decode commits only accepted tokens)."""
+    (speculative decode commits only accepted tokens). With
+    `with_integrity` (unmasked path only) a third (N, 1) uint32 output
+    carries the per-row integrity word of `core.faults.integrity_word`
+    over the packed bytes, fused with the pack — the detection metadata
+    the fault-aware serving stores verify on gather/refresh."""
     N, D = kv.shape
     assert D % 2 == 0, D
     bn = min(bn, N)
@@ -78,6 +104,17 @@ def quantize_pack_kv_pallas(kv: jax.Array, valid=None, *,
     out_shape = [jax.ShapeDtypeStruct((N, D // 2), jnp.uint8),
                  jax.ShapeDtypeStruct((N, 1), jnp.float32)]
     params = pltpu.TPUCompilerParams(dimension_semantics=("parallel",))
+    if with_integrity:
+        assert valid is None, "with_integrity is for the unmasked write path"
+        return pl.pallas_call(
+            functools.partial(_qpack_integrity_kernel, bn=bn, d=D),
+            grid=(N // bn,),
+            in_specs=[pl.BlockSpec((bn, D), lambda i: (i, 0))],
+            out_specs=out_specs + [pl.BlockSpec((bn, 1), lambda i: (i, 0))],
+            out_shape=out_shape + [jax.ShapeDtypeStruct((N, 1), jnp.uint32)],
+            compiler_params=params,
+            interpret=interpret,
+        )(kv)
     if valid is None:
         return pl.pallas_call(
             functools.partial(_qpack_kernel, bn=bn, d=D),

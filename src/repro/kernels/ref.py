@@ -100,6 +100,15 @@ def quantize_pack_kv_ref(kv: jax.Array):
     return packed, scale.astype(jnp.float32)
 
 
+def integrity_words_ref(packed: jax.Array) -> jax.Array:
+    """Per-row byte-weighted checksum over packed rows (..., Dp) uint8:
+    word = sum_j (j + 1) * byte_j mod 2**32 — the fused-integrity output
+    of `quantize_pack_kv_pallas(with_integrity=True)` and the per-row
+    form of `core.faults.integrity_word`."""
+    lanes = jnp.arange(1, packed.shape[-1] + 1, dtype=jnp.uint32)
+    return (packed.astype(jnp.uint32) * lanes).sum(axis=-1, keepdims=True)
+
+
 def _unpack_pairs_ref(packed: jax.Array) -> jax.Array:
     hi = quant.unpack_int4_hi(packed)
     lo = quant.unpack_int4_lo(packed)

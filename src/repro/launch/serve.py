@@ -51,6 +51,20 @@ def main():
                              "imc8", "same"],
                     help="representation the draft pass reads (default "
                          "dequant: XLA over dequantized KV)")
+    ap.add_argument("--fault-rate", type=float, default=None,
+                    help="per-unit retention-fault probability at end of "
+                         "window, 85C (0 disables injection)")
+    ap.add_argument("--fault-seed", type=int, default=None,
+                    help="seed of the deterministic fault sampler")
+    ap.add_argument("--array-loss-rate", type=float, default=None,
+                    help="per-step whole-array failure probability "
+                         "(drain-and-requeue recovery)")
+    ap.add_argument("--max-retries", type=int, default=None,
+                    help="fault-recovery retries per request before it is "
+                         "failed (never silently served)")
+    ap.add_argument("--no-integrity-check", action="store_true",
+                    help="disable integrity-word verification (ablation: "
+                         "forfeits the zero-silent-corruption property)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -64,7 +78,13 @@ def main():
                       imc_abits=args.imc_abits,
                       state_bits=args.state_bits,
                       spec_k=args.spec_k,
-                      spec_draft_impl=args.spec_draft_impl)
+                      spec_draft_impl=args.spec_draft_impl,
+                      fault_rate=args.fault_rate,
+                      fault_seed=args.fault_seed,
+                      array_loss_rate=args.array_loss_rate,
+                      max_retries=args.max_retries,
+                      integrity_check=(False if args.no_integrity_check
+                                       else None))
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
                     max_new_tokens=args.max_new, id=i)
@@ -99,6 +119,16 @@ def main():
           f"augments={st['augment_events']} refreshes={st['refreshes']} "
           f"preemptions={st['preemptions']} "
           f"queue_peak={st['scheduler']['peak_queue_depth']}")
+    fl = st["faults"]
+    if fl["enabled"]:
+        print(f"[serve] faults injected={fl['faults_injected']} "
+              f"detected={fl['faults_detected']} "
+              f"masked={fl['faults_masked']} recovered={fl['recovered']} "
+              f"(scrub={fl['recovered_scrub']} "
+              f"recompute={fl['recovered_recompute']}) "
+              f"uncorrectable={fl['uncorrectable']} "
+              f"array_losses={fl['array_losses']} "
+              f"zero_silent_corruption={fl['zero_silent_corruption']}")
 
 
 if __name__ == "__main__":

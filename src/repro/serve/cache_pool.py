@@ -52,6 +52,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import faults as F
 from repro.core.retention import RefreshPolicy
 from repro.kernels import ops as K
 from repro.models import layers as L
@@ -186,7 +187,21 @@ class PagedKVPool:
             "refresh_bytes": 0, "augment_bytes": 0,
             "maintenance_dispatches": 0, "alloc_failures": 0,
             "peak_live_bytes": 0, "retracted_pages": 0,
+            "faults_injected": 0, "faults_detected": 0, "faults_masked": 0,
+            "refresh_misses": 0, "integrity_checks": 0, "pinned_normal": 0,
+            "pages_decommissioned": 0,
         }
+        # retention-fault machinery (core/faults.py) — inert until a
+        # FaultModel is attached; all dicts stay empty at fault_rate=0
+        self._fm: Optional[F.FaultModel] = None
+        self._integrity = False
+        self._fault_tag = ""
+        self._words: dict[tuple[int, int], int] = {}   # integrity words
+        self._dirty: set[tuple[int, int]] = set()      # rewritten since flush
+        self._pending: set[tuple[int, int]] = set()    # injected, unscanned
+        self._masters: dict[tuple[int, int], tuple] = {}  # static-band copies
+        self._offenders: dict[str, int] = {}           # by physical unit id
+        self._decommission: set[int] = set()           # weak packed pages
 
     # -- byte accounting ------------------------------------------------------
 
@@ -268,6 +283,8 @@ class PagedKVPool:
             pol = RefreshPolicy(retention_steps=self.retention_steps)
             pol.stamp(step)
             self.policies[(row, lp)] = pol
+            if self._fm is not None:
+                self._dirty.add((row, lp))
         return True
 
     def free_row(self, row: int) -> None:
@@ -457,7 +474,23 @@ class PagedKVPool:
     def _release(self, row: int, lp: int) -> None:
         mode = int(self.page_mode[row, lp])
         phys = int(self.page_table[row, lp])
-        (self.free_normal if mode == 0 else self.free_packed).append(phys)
+        if mode == 1 and phys in self._decommission:
+            # repeat-offender packed page: map the weak array out instead
+            # of recycling it — capacity genuinely shrinks
+            self._decommission.discard(phys)
+            self.pages_packed -= 1
+            self.stats["pages_decommissioned"] += 1
+        else:
+            (self.free_normal if mode == 0 else self.free_packed).append(phys)
+        key = (row, lp)
+        if key in self._pending:
+            # the corruption evaporated with the storage before any read
+            # reached it (row finished / preempted / array drained)
+            self._pending.discard(key)
+            self.stats["faults_masked"] += 1
+        self._words.pop(key, None)
+        self._masters.pop(key, None)
+        self._dirty.discard(key)
         self._tables_cache = None
         self.live_bytes -= self._cost(mode)
         self.allocated[row, lp] = False
@@ -505,6 +538,8 @@ class PagedKVPool:
         pol = RefreshPolicy(retention_steps=self.retention_steps)
         pol.stamp(step)
         self.policies[(row, lp)] = pol
+        if self._fm is not None:
+            self._dirty.add((row, lp))
         self.stats["augment_events"] += 1
         self.stats["augment_bytes"] += self._cost(0) + self._cost(1)
 
@@ -512,6 +547,10 @@ class PagedKVPool:
         """Augmented -> Normal (refresh-promote): dequantize back into the
         static plane when the budget has room again."""
         assert self.page_mode[row, lp] == 1 and self.allocated[row, lp]
+        if (row, lp) in self._pending:
+            # never materialize a corrupted packed page into the static
+            # plane — the fault pass must detect and heal it first
+            return False
         cost_up = self._cost(0) - self._cost(1)
         if not self.free_normal or self.live_bytes + cost_up > self.budget_bytes:
             return False
@@ -527,6 +566,9 @@ class PagedKVPool:
         self.live_bytes += cost_up
         self.last_write[row, lp] = step
         self.policies.pop((row, lp), None)
+        self._words.pop((row, lp), None)
+        self._masters.pop((row, lp), None)
+        self._dirty.discard((row, lp))
         self.stats["promote_events"] += 1
         return True
 
@@ -544,6 +586,8 @@ class PagedKVPool:
             pol = self.policies.get((row, lp))
             if pol is not None:
                 pol.stamp(step)
+                if self._fm is not None:
+                    self._dirty.add((row, lp))
 
     def refresh_due(self, step: int) -> list[tuple[int, int]]:
         return [key for key, pol in self.policies.items()
@@ -554,6 +598,13 @@ class PagedKVPool:
         """DRAM-style refresh of one expired Augmented page: promote back
         to Normal when allowed and the budget has room, else re-write the
         packed rows in place (restamp) and account the traffic."""
+        if (self._fm is not None and (row, lp) in self.policies
+                and self._fm.refresh_miss(self._unit_id((row, lp)), step)):
+            # the refresh pulse itself failed (paper Table II tail): the
+            # page stays on the old stamp and keeps aging toward certain
+            # fault — inject/scan will catch what decays
+            self.stats["refresh_misses"] += 1
+            return
         if promote_ok and self.pool_mode == "augment-on-pressure" \
                 and self.cfg.amc.refresh_promote \
                 and self.promote_page(row, lp, step):
@@ -572,6 +623,134 @@ class PagedKVPool:
         the scheduler must keep this <= retention_steps)."""
         return max((pol.age(step) for pol in self.policies.values()),
                    default=0)
+
+    # -- retention-fault injection / detection / healing ------------------------
+    # (core/faults.py FaultModel; the engine's fault pass drives these.
+    # Only Augmented pages are at risk — the Normal plane is the paper's
+    # static 6T configuration and never decays.)
+
+    def attach_fault_model(self, fm: F.FaultModel, *, integrity: bool = True,
+                           tag: str = "") -> None:
+        self._fm = fm
+        self._integrity = integrity
+        self._fault_tag = tag
+        # pages placed before attach have no integrity words yet
+        self._dirty.update(self.policies.keys())
+
+    def _unit_id(self, key: tuple[int, int]) -> str:
+        """Stable PHYSICAL identity of the cells behind a logical page —
+        repeat-offender tracking must follow the weak array, not the
+        logical page that happens to occupy it."""
+        return f"{self._fault_tag}pg{int(self.page_table[key])}"
+
+    def _unit_payload_np(self, key: tuple[int, int]) -> tuple:
+        phys = int(self.page_table[key])
+        return tuple(np.asarray(self.arenas[k][:, phys])
+                     for k in ("kp", "vp", "ks", "vs"))
+
+    def _unit_word(self, key: tuple[int, int]) -> int:
+        return F.integrity_word(*self._unit_payload_np(key))
+
+    def _flush_integrity(self) -> None:
+        """Bring integrity words up to date for every augmented page that
+        was (re)written since the last flush — the host-side mirror of the
+        fused `quantize_pack_kv(with_integrity=True)` store-back. Static
+        prefix-band pages (write-once) also stash a host master copy, the
+        scrub source of `scrub_from_master`."""
+        for key in self.policies:
+            if key in self._words and key not in self._dirty:
+                continue
+            payload = self._unit_payload_np(key)
+            self._words[key] = F.integrity_word(*payload)
+            if key[0] >= self.max_batch:
+                self._masters[key] = payload
+        self._dirty.clear()
+
+    def inject_faults(self, step: int) -> int:
+        """Sample retention faults for every live augmented page and
+        corrupt the packed payload on device (deterministic under the
+        model's seed). Returns the number of pages corrupted."""
+        if self._fm is None:
+            return 0
+        self._flush_integrity()
+        n = 0
+        for key, pol in list(self.policies.items()):
+            if key in self._pending:
+                continue
+            uid = self._unit_id(key)
+            if self._fm.fault(uid, step, pol.age(step), self.retention_steps):
+                phys = int(self.page_table[key])
+                mask = self._fm.corruption_mask(uid, step)
+                self.arenas = _corrupt_page_op(self.arenas, phys, mask)
+                self._pending.add(key)
+                self.stats["faults_injected"] += 1
+                n += 1
+        return n
+
+    def scan_integrity(self, step: int) -> list[tuple[int, int]]:
+        """Verify every augmented page's payload against its stored
+        integrity word; return the corrupted keys (detected, never
+        silently served). With integrity off this is a no-op — the
+        zero-silent-corruption property is then forfeited by config."""
+        if self._fm is None or not self._integrity:
+            return []
+        self._flush_integrity()
+        bad: list[tuple[int, int]] = []
+        for key, word in list(self._words.items()):
+            self.stats["integrity_checks"] += 1
+            if self._unit_word(key) == word:
+                continue
+            bad.append(key)
+            self._pending.discard(key)
+            self.stats["faults_detected"] += 1
+            uid = self._unit_id(key)
+            self._offenders[uid] = self._offenders.get(uid, 0) + 1
+            if (self._offenders[uid] >= self._fm.pin_threshold
+                    and key[0] < self.max_batch):
+                # decode-band repeat offender: retire the weak physical
+                # page when its current tenant releases it
+                self._decommission.add(int(self.page_table[key]))
+        return bad
+
+    def scrub_from_master(self, key: tuple[int, int]) -> bool:
+        """Heal a detected-corrupt page by re-writing it from the host
+        master copy (static prefix band only — decode-band pages have no
+        master and must be recomputed). Repeat-offender pages are pinned
+        back to the Normal plane when the budget allows."""
+        master = self._masters.get(key)
+        if master is None:
+            return False
+        phys = int(self.page_table[key])
+        kp, vp, ks, vs = master
+        self.arenas = _restore_page_op(self.arenas, phys,
+                                       jnp.asarray(kp), jnp.asarray(vp),
+                                       jnp.asarray(ks), jnp.asarray(vs))
+        self.stats["maintenance_dispatches"] += 1
+        self._words[key] = F.integrity_word(*master)
+        self._dirty.discard(key)
+        if self._offenders.get(self._unit_id(key), 0) >= self._fm.pin_threshold:
+            if self.promote_page(key[0], key[1], step=0):
+                self.stats["pinned_normal"] += 1
+        return True
+
+    def fault_row(self, key: tuple[int, int]) -> Optional[int]:
+        """Engine row whose request owns the faulted page (prefix-band
+        rows map back to their decode slot)."""
+        row = key[0]
+        return row if row < self.max_batch else row - self.max_batch
+
+    def fault_unit_bytes(self, key: tuple[int, int]) -> int:
+        return self.geom.page_bytes_aug
+
+    def fault_counters(self) -> dict:
+        return {k: self.stats[k] for k in
+                ("faults_injected", "faults_detected", "faults_masked",
+                 "refresh_misses", "integrity_checks", "pinned_normal",
+                 "pages_decommissioned")}
+
+    def faults_pending(self) -> int:
+        """Injected-but-unscanned corruptions still live in the arenas."""
+        return len(self._pending)
 
     # -- device views -----------------------------------------------------------
 
@@ -677,4 +856,30 @@ def _promote_page_op(arenas: dict, src: int, dst: int, *, aug_bits: int):
     for plane, packed, scale in (("kn", "kp", "ks"), ("vn", "vp", "vs")):
         d = unpack(arenas[packed][:, src], arenas[scale][:, src][..., None])
         out[plane] = out[plane].at[:, dst].set(d.astype(jnp.bfloat16))
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _corrupt_page_op(arenas: dict, phys, mask):
+    """Retention-fault injection: XOR the packed payload of physical page
+    `phys` with a nonzero byte `mask` (bitcast keeps the op dtype-safe for
+    the uint8/int4 and int8 planes alike). `phys`/`mask` are traced
+    scalars so repeated injections reuse one compilation."""
+    out = dict(arenas)
+    m = jnp.asarray(mask, jnp.uint8)
+    for k in ("kp", "vp"):
+        page = arenas[k][:, phys]
+        b = jax.lax.bitcast_convert_type(page, jnp.uint8)
+        b = jnp.bitwise_xor(b, m)
+        out[k] = out[k].at[:, phys].set(
+            jax.lax.bitcast_convert_type(b, page.dtype))
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _restore_page_op(arenas: dict, phys, kp, vp, ks, vs):
+    """Scrub-on-detect: re-write physical page `phys` from a master copy."""
+    out = dict(arenas)
+    for k, v in (("kp", kp), ("vp", vp), ("ks", ks), ("vs", vs)):
+        out[k] = out[k].at[:, phys].set(v.astype(out[k].dtype))
     return out

@@ -34,6 +34,7 @@ accounted separately (`stats()["pool"]["maintenance_dispatches"]`).
 from __future__ import annotations
 
 import dataclasses
+import time
 from collections import deque
 from typing import Optional
 
@@ -43,6 +44,9 @@ import numpy as np
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import amc
+from repro.core import faults as faults_mod
+from repro.distributed.fault import (SimulatedFailure, StragglerMonitor,
+                                     Supervisor)
 from repro.distributed.sharding import Rules
 from repro.imc import energy as imc_energy
 from repro.launch.mesh import mesh_context
@@ -111,13 +115,26 @@ class ServeEngine:
                  imc_abits: Optional[int] = None,
                  state_bits: Optional[int] = None,
                  spec_k: Optional[int] = None,
-                 spec_draft_impl: Optional[str] = None):
+                 spec_draft_impl: Optional[str] = None,
+                 fault_rate: Optional[float] = None,
+                 fault_seed: Optional[int] = None,
+                 array_loss_rate: Optional[float] = None,
+                 fault_temp_c: Optional[float] = None,
+                 integrity_check: Optional[bool] = None,
+                 max_retries: Optional[int] = None,
+                 fault_pin_threshold: Optional[int] = None):
         # engine-level AMC knobs override the config (e.g. serve a dense
         # checkpoint with ternary weights without touching the arch file)
+        fault_overrides = (fault_rate, fault_seed, array_loss_rate,
+                           fault_temp_c, integrity_check, max_retries,
+                           fault_pin_threshold)
         if weight_mode is not None or kv_mode is not None \
                 or pool_mode is not None or matmul_impl is not None \
                 or imc_abits is not None or state_bits is not None \
-                or spec_k is not None or spec_draft_impl is not None:
+                or spec_k is not None or spec_draft_impl is not None \
+                or any(v is not None for v in fault_overrides):
+            # numeric/bool fault knobs need explicit None checks — 0.0 and
+            # False are legitimate override values an `or` would drop
             cfg = dataclasses.replace(cfg, amc=dataclasses.replace(
                 cfg.amc,
                 weight_mode=weight_mode or cfg.amc.weight_mode,
@@ -127,7 +144,24 @@ class ServeEngine:
                 imc_abits=imc_abits or cfg.amc.imc_abits,
                 state_bits=state_bits or cfg.amc.state_bits,
                 spec_k=cfg.amc.spec_k if spec_k is None else spec_k,
-                spec_draft_impl=spec_draft_impl or cfg.amc.spec_draft_impl))
+                spec_draft_impl=spec_draft_impl or cfg.amc.spec_draft_impl,
+                fault_rate=(cfg.amc.fault_rate if fault_rate is None
+                            else fault_rate),
+                fault_seed=(cfg.amc.fault_seed if fault_seed is None
+                            else fault_seed),
+                array_loss_rate=(cfg.amc.array_loss_rate
+                                 if array_loss_rate is None
+                                 else array_loss_rate),
+                fault_temp_c=(cfg.amc.fault_temp_c if fault_temp_c is None
+                              else fault_temp_c),
+                integrity_check=(cfg.amc.integrity_check
+                                 if integrity_check is None
+                                 else integrity_check),
+                max_retries=(cfg.amc.max_retries if max_retries is None
+                             else max_retries),
+                fault_pin_threshold=(cfg.amc.fault_pin_threshold
+                                     if fault_pin_threshold is None
+                                     else fault_pin_threshold)))
         self.cfg, self.mesh = cfg, mesh
         self.max_batch, self.max_seq = max_batch, max_seq
         self.prefill_chunk = min(prefill_chunk, max_seq)
@@ -150,6 +184,35 @@ class ServeEngine:
                 pages_packed=pool_pages_packed,
                 retention_steps=retention_steps)
         self.scheduler = Scheduler(self.store, max_batch=max_batch)
+        # retention-fault injection + self-healing (core/faults.py): the
+        # model samples per-page/per-slab early expiries and refresh
+        # misses deterministically under the seed; the store detects them
+        # via integrity words; recovery runs scrub / recompute / retry
+        # through the scheduler. Inert at fault_rate == array_loss_rate
+        # == 0 (no model attached, zero hot-path cost).
+        a2 = self.cfg.amc
+        self._fault_model: Optional[faults_mod.FaultModel] = None
+        if a2.fault_rate > 0.0 or a2.array_loss_rate > 0.0:
+            self._fault_model = faults_mod.FaultModel(
+                rate=a2.fault_rate, seed=a2.fault_seed,
+                temp_c=a2.fault_temp_c,
+                array_loss_rate=a2.array_loss_rate,
+                pin_threshold=a2.fault_pin_threshold)
+            self.store.attach_fault_model(self._fault_model,
+                                          integrity=a2.integrity_check)
+        # whole-array failure events drain-and-requeue through the
+        # distributed fault supervisor; slow fault-recovery steps feed the
+        # straggler monitor (mitigations are counted, not acted on)
+        self.supervisor = Supervisor(self._recover_array_loss,
+                                     max_restarts=64)
+        self.straggler = StragglerMonitor()
+        self._forced_array_loss = False
+        self.failed: dict[int, list[int]] = {}
+        self._fault_stats = {
+            "recovered_scrub": 0, "recovered_recompute": 0, "retried": 0,
+            "uncorrectable": 0, "array_losses": 0, "array_loss_requeues": 0,
+            "straggler_mitigations": 0,
+        }
         self._logical_weight_bytes = _abstract_bytes(
             M.abstract_params(dense_cfg))
         self._logical_cache_bytes = _abstract_bytes(M.abstract_cache(
@@ -526,11 +589,25 @@ class ServeEngine:
         if last_tokens:
             for s, t in last_tokens.items():
                 self.last_token[s] = t
+        if self._fault_model is not None or self._forced_array_loss:
+            if not self.supervisor.run_step(self._array_health_check):
+                # whole-array loss: every running row was drained and
+                # requeued by _recover_array_loss; the step clock still
+                # ticks (retry backoff is measured in steps)
+                self.step_idx += 1
+                return {}
+        t0 = time.perf_counter()
         self._admit()
-        if self._spec and self.active.any():
-            return self._step_all_spec()
+        if self._fault_model is not None:
+            # inject -> detect -> heal BEFORE refresh and dispatch, so
+            # corrupted storage is never read, refreshed or promoted
+            self._fault_pass()
         self.scheduler.refresh_pass(self.step_idx)
         self._sync_refresh_events()
+        if self._spec and self.active.any():
+            out = self._step_all_spec()
+            self._note_step_time(t0)
+            return out
         self._ensure_decode_capacity()
         tokens = np.where(self.active, self.last_token, 0
                           ).astype(np.int32)[:, None]
@@ -563,6 +640,7 @@ class ServeEngine:
             self._slot_entry[s] = None
             self.scheduler.release_row(int(s))
         self.step_idx += 1
+        self._note_step_time(t0)
         return {int(s): int(arg[s]) for s in np.flatnonzero(act & ~done)}
 
     def _step_all_spec(self) -> dict:
@@ -573,8 +651,6 @@ class ServeEngine:
         Greedy accept keeps the emitted stream token-identical to
         step-by-step decode; rejected draft storage is rolled back (page
         retraction on paged stores, snapshot restore on slab stores)."""
-        self.scheduler.refresh_pass(self.step_idx)
-        self._sync_refresh_events()
         W = self.spec_k
         B = self.max_batch
         # per-row window cap >= 1: stepwise decode retires a row once its
@@ -677,6 +753,103 @@ class ServeEngine:
         return {int(s): int(v[s, n_emit[s] - 1])
                 for s in np.flatnonzero(act & ~done)}
 
+    # -- retention faults: inject / detect / heal ------------------------------
+
+    def _note_step_time(self, t0: float) -> None:
+        if self._fault_model is None:
+            return
+        if self.straggler.record(self.step_idx, time.perf_counter() - t0):
+            self._fault_stats["straggler_mitigations"] += 1
+
+    def inject_array_loss(self) -> None:
+        """Force a whole-array failure event at the next `step_all` (the
+        chaos hook `examples/elastic_restart.py` and the tests drive):
+        the supervisor drains every running row back to the queue and the
+        engine resumes from recompute — work lost, tokens never."""
+        self._forced_array_loss = True
+
+    def _array_health_check(self) -> None:
+        if self._forced_array_loss:
+            self._forced_array_loss = False
+            raise SimulatedFailure(
+                f"injected array loss at step {self.step_idx}")
+        if self._fault_model is not None \
+                and self._fault_model.array_loss(self.step_idx):
+            raise SimulatedFailure(
+                f"sampled array loss at step {self.step_idx}")
+
+    def _recover_array_loss(self) -> int:
+        """Supervisor restore hook: the array's dynamic contents are gone,
+        so every running row is preempted (released + requeued with
+        prompt := prompt + generated-so-far) — the drain-and-requeue path.
+        Fault-retry budgets are NOT charged: an array loss is not the
+        request's fault, and charging it would fail innocent requests."""
+        rows = np.flatnonzero(self.active)
+        for row in rows:
+            self._preempt(int(row))
+            self._fault_stats["array_loss_requeues"] += 1
+        self._fault_stats["array_losses"] += 1
+        return int(rows.size)
+
+    def _fault_pass(self) -> None:
+        """One inject -> detect -> heal cycle. Detected-corrupt units heal
+        by scrub-from-master where a master exists (static prefix bands),
+        else by recompute-via-preemption with bounded exponential-backoff
+        retry; recovery traffic is billed to the energy ledger's
+        "recovery" group like any other maintenance."""
+        bad = self.scheduler.fault_pass(self.step_idx)
+        for key in bad:
+            self.energy_ledger.add(
+                imc_energy.refresh_events(self.store.fault_unit_bytes(key)),
+                "recovery")
+            if self.store.scrub_from_master(key):
+                self._fault_stats["recovered_scrub"] += 1
+                continue
+            row = self.store.fault_row(key)
+            if row is None or not self.active[row]:
+                continue    # second corrupt unit of an already-healed row
+            self._heal_row_recompute(int(row))
+
+    def _heal_row_recompute(self, row: int) -> None:
+        """Recompute-via-preemption: no master exists for decode-band
+        storage, so the row's state is rebuilt from its token history
+        (deterministic greedy recompute — token-identical on resume).
+        Each retry backs off exponentially; a request that exceeds
+        cfg.amc.max_retries is failed, never silently served."""
+        entry = self._slot_entry[row]
+        retries = entry.fault_retries + 1
+        if retries > self.cfg.amc.max_retries:
+            self._fail_row(row)
+            return
+        gen = np.asarray(self.outputs[entry.req.id], np.int32)
+        resumed = QueueEntry(
+            req=entry.req,
+            prompt=np.concatenate([entry.base_prompt, gen]),
+            base_prompt=entry.base_prompt,
+            remaining=int(self.remaining[row]),
+            resumed=True, enqueue_step=self.step_idx,
+            fault_retries=retries,
+            not_before=self.step_idx + 2 ** (retries - 1))
+        self.scheduler.release_row(row)
+        self.active[row] = False
+        self.slot_req[row] = None
+        self._slot_entry[row] = None
+        self.scheduler.enqueue(resumed, front=True)
+        self._fault_stats["recovered_recompute"] += 1
+        self._fault_stats["retried"] += 1
+
+    def _fail_row(self, row: int) -> None:
+        """Retry budget exhausted: surface the request in `failed` with
+        whatever it generated — an explicit uncorrectable outcome, never
+        a silently corrupt completion."""
+        entry = self._slot_entry[row]
+        self.failed[entry.req.id] = self.outputs.pop(entry.req.id, [])
+        self.scheduler.release_row(row)
+        self.active[row] = False
+        self.slot_req[row] = None
+        self._slot_entry[row] = None
+        self._fault_stats["uncorrectable"] += 1
+
     # -- stats -----------------------------------------------------------------
 
     def stats(self) -> dict:
@@ -749,6 +922,38 @@ class ServeEngine:
                 if sp["spec_rounds"] else 0.0,
         })
         out["spec"] = sp
+        # retention-fault accounting: injection/detection counters from
+        # the store(s), recovery outcomes from the engine, and the
+        # zero-silent-corruption property — with integrity on, every
+        # injected fault is either detected or masked (its storage was
+        # released before any read); nothing corrupt is ever served
+        fc = self.store.fault_counters()
+        pending = self.store.faults_pending()
+        injected = fc["faults_injected"]
+        served_clean = injected == (fc["faults_detected"]
+                                    + fc["faults_masked"])
+        out["faults"] = {
+            "enabled": self._fault_model is not None,
+            "fault_rate": a.fault_rate,
+            "fault_seed": a.fault_seed,
+            "array_loss_rate": a.array_loss_rate,
+            "fault_temp_c": a.fault_temp_c,
+            "integrity_check": a.integrity_check,
+            "max_retries": a.max_retries,
+            "fault_pin_threshold": a.fault_pin_threshold,
+            **fc,
+            **self._fault_stats,
+            "faults_pending": pending,
+            "recovered": (self._fault_stats["recovered_scrub"]
+                          + self._fault_stats["recovered_recompute"]),
+            "failed_requests": len(self.failed),
+            "supervisor_restarts": self.supervisor.restarts,
+            "recovery_energy_fj": imc["groups"].get(
+                "recovery", {}).get("energy_fj", 0.0),
+            "zero_silent_corruption": bool(
+                injected == 0 or (a.integrity_check and served_clean
+                                  and pending == 0)),
+        }
         pool = self.store.describe()
         out["pool"] = pool
         out["scheduler"] = self.scheduler.describe()
@@ -768,8 +973,14 @@ class ServeEngine:
             if not self.active.any():
                 self._admit()
                 if not self.active.any():
-                    raise RuntimeError(
-                        "queued requests but nothing admittable — store "
-                        "misconfigured (budget below one sequence?)")
+                    if self.scheduler.backlog_ready(self.step_idx):
+                        raise RuntimeError(
+                            "queued requests but nothing admittable — "
+                            "store misconfigured (budget below one "
+                            "sequence?)")
+                    # every queued entry is in fault-retry backoff: tick
+                    # the step clock until one becomes eligible
+                    self.step_idx += 1
+                    continue
             self.step_all()
         return self.outputs

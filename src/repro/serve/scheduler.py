@@ -53,6 +53,11 @@ class QueueEntry:
                                      # preemptions never duplicate tokens
     resumed: bool = False
     enqueue_step: int = 0
+    fault_retries: int = 0       # times this request was requeued by the
+                                 # fault-recovery path (bounded by
+                                 # cfg.amc.max_retries)
+    not_before: int = 0          # earliest step this entry may be admitted
+                                 # (exponential backoff after a fault retry)
 
     def __post_init__(self):
         if self.base_prompt is None:
@@ -71,6 +76,7 @@ class Scheduler:
             "enqueued": 0, "requeues": 0, "admitted": 0, "preemptions": 0,
             "refresh_passes": 0, "peak_queue_depth": 0,
             "peak_concurrency": 0, "queue_wait_steps": 0,
+            "fault_passes": 0,
         }
 
     # -- queue ---------------------------------------------------------------
@@ -84,18 +90,26 @@ class Scheduler:
                                              len(self.queue))
 
     def pop_admittable(self, step: int) -> Optional[QueueEntry]:
-        """FIFO head if the store could hold its decode state right now
-        (counting augmentation headroom); head-of-line order is preserved
-        — a big request is never starved by smaller ones jumping the
-        queue."""
-        if not self.queue:
-            return None
-        entry = self.queue[0]
-        if not self.store.can_admit_tokens(max(len(entry.prompt), 1)):
-            return None
-        self.queue.popleft()
-        self.stats["queue_wait_steps"] += step - entry.enqueue_step
-        return entry
+        """First eligible entry if the store could hold its decode state
+        right now (counting augmentation headroom). Entries in fault-retry
+        backoff (`not_before > step`) are skipped without losing their
+        queue position; among ELIGIBLE entries head-of-line order is
+        preserved — a big request is never starved by smaller ones
+        jumping the queue."""
+        for i, entry in enumerate(self.queue):
+            if entry.not_before > step:
+                continue            # backing off after a fault retry
+            if not self.store.can_admit_tokens(max(len(entry.prompt), 1)):
+                return None         # eligible head blocks (no queue-jumping)
+            del self.queue[i]
+            self.stats["queue_wait_steps"] += step - entry.enqueue_step
+            return entry
+        return None
+
+    def backlog_ready(self, step: int) -> bool:
+        """Whether any queued entry is out of backoff (the engine's idle
+        loop must tick the clock, not raise, while everything backs off)."""
+        return any(e.not_before <= step for e in self.queue)
 
     # -- state lifecycle ------------------------------------------------------
 
@@ -152,6 +166,18 @@ class Scheduler:
         if due:
             self.stats["refresh_passes"] += 1
         return len(due)
+
+    # -- retention faults -----------------------------------------------------
+
+    def fault_pass(self, step: int) -> list:
+        """One inject-then-scan cycle over the store's augmented storage
+        (the engine heals what this returns). Runs BEFORE refresh and
+        dispatch so corrupted data is never read, refreshed or promoted."""
+        injected = self.store.inject_faults(step)
+        bad = self.store.scan_integrity(step)
+        if injected or bad:
+            self.stats["fault_passes"] += 1
+        return bad
 
     def describe(self) -> dict:
         return {"queue_depth": len(self.queue), **self.stats}

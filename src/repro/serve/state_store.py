@@ -56,6 +56,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.core import faults as F
 from repro.core import quant
 from repro.core.retention import RefreshPolicy
 from repro.serve.cache_pool import PagedKVPool, resolve_pool_mode
@@ -252,6 +253,35 @@ def _promote_row_op(state: dict, row: jax.Array, *, bits: int) -> dict:
             "packed": packed, "scale": scale}
 
 
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _corrupt_row_op(state: dict, row, mask) -> dict:
+    """Retention-fault injection: XOR slot `row` of every packed plane
+    with a nonzero byte `mask` (bitcast keeps it dtype-safe for uint8 and
+    int8 planes). Traced scalars: repeated injections reuse one compile."""
+    out = dict(state)
+    m = jnp.asarray(mask, jnp.uint8)
+    packed = {}
+    for k, v in state["packed"].items():
+        slab = v[:, row]
+        b = jax.lax.bitcast_convert_type(slab, jnp.uint8)
+        b = jnp.bitwise_xor(b, m)
+        packed[k] = v.at[:, row].set(
+            jax.lax.bitcast_convert_type(b, slab.dtype))
+    out["packed"] = packed
+    return out
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _restore_row_op(state: dict, row, packed: dict, scale: dict) -> dict:
+    """Scrub-on-detect: re-write slot `row`'s packed planes from masters."""
+    out = dict(state)
+    out["packed"] = {k: v.at[:, row].set(packed[k].astype(v.dtype))
+                     for k, v in state["packed"].items()}
+    out["scale"] = {k: v.at[:, row].set(scale[k].astype(v.dtype))
+                    for k, v in state["scale"].items()}
+    return out
+
+
 # ---------------------------------------------------------------------------
 # AugmentedStatePool — fixed-size per-row decode-state slabs
 # ---------------------------------------------------------------------------
@@ -338,7 +368,20 @@ class AugmentedStatePool:
             "refresh_bytes": 0, "augment_bytes": 0,
             "maintenance_dispatches": 0, "alloc_failures": 0,
             "peak_live_bytes": 0, "spec_snapshots": 0, "spec_rollbacks": 0,
+            "faults_injected": 0, "faults_detected": 0, "faults_masked": 0,
+            "refresh_misses": 0, "integrity_checks": 0, "pinned_normal": 0,
         }
+        # retention-fault machinery (core/faults.py) — inert until a
+        # FaultModel is attached
+        self._fm: Optional[F.FaultModel] = None
+        self._integrity = False
+        self._fault_tag = ""
+        self._words: dict[int, int] = {}       # per-slab integrity words
+        self._dirty: set[int] = set()          # rewritten since last flush
+        self._pending: set[int] = set()        # injected, unscanned
+        self._masters: dict[int, tuple] = {}   # static-store host copies
+        self._offenders: dict[str, int] = {}   # by physical unit id
+        self._pin_normal = np.zeros(max_batch, bool)  # repeat offenders
 
     # -- byte accounting ----------------------------------------------------
 
@@ -374,6 +417,10 @@ class AugmentedStatePool:
         assert not self.slot_alloc[row], row
         order = {"normal-only": (0,), "always-augmented": (1,),
                  "augment-on-pressure": (0, 1)}[self.pool_mode]
+        if self._pin_normal[row] and self.pool_mode != "normal-only":
+            # repeat-offender slot: its dynamic cells misbehave, so prefer
+            # the static plane whenever the budget allows
+            order = (0,) + tuple(m for m in order if m != 0)
         mode = None
         for m in order:
             if self.live_bytes + self._cost(m) <= self.budget_bytes:
@@ -398,6 +445,8 @@ class AugmentedStatePool:
             pol = RefreshPolicy(retention_steps=self.retention_steps)
             pol.stamp(step)
             self.policies[row] = pol
+            if self._fm is not None:
+                self._dirty.add(row)
         self._state = _reset_row_op(self._state, row)
         self.stats["maintenance_dispatches"] += 1
         self._tables_cache = None
@@ -415,6 +464,14 @@ class AugmentedStatePool:
     def release_row(self, row: int) -> None:
         if not self.slot_alloc[row]:
             return
+        if row in self._pending:
+            # the corruption evaporated with the row's state before any
+            # scan reached it
+            self._pending.discard(row)
+            self.stats["faults_masked"] += 1
+        self._words.pop(row, None)
+        self._masters.pop(row, None)
+        self._dirty.discard(row)
         self.live_bytes -= self._cost(int(self.slot_mode[row]))
         self.slot_alloc[row] = False
         self.slot_mode[row] = 0
@@ -425,7 +482,7 @@ class AugmentedStatePool:
     # -- mode switching -------------------------------------------------------
 
     def _coldest_normal(self) -> Optional[int]:
-        cand = self.slot_alloc & (self.slot_mode == 0)
+        cand = self.slot_alloc & (self.slot_mode == 0) & ~self._pin_normal
         if not cand.any():
             return None
         age = np.where(cand, self.last_write, np.iinfo(np.int64).max)
@@ -452,6 +509,8 @@ class AugmentedStatePool:
         pol = RefreshPolicy(retention_steps=self.retention_steps)
         pol.stamp(step)
         self.policies[row] = pol
+        if self._fm is not None:
+            self._dirty.add(row)
         self.stats["augment_events"] += 1
         self.stats["augment_bytes"] += self._cost(0) + self._cost(1)
         self._tables_cache = None
@@ -459,6 +518,10 @@ class AugmentedStatePool:
     def promote_slot(self, row: int, step: int) -> bool:
         """Augmented -> Normal (refresh-promote) when the budget has room."""
         assert self.slot_alloc[row] and self.slot_mode[row] == 1
+        if row in self._pending:
+            # never materialize a corrupted packed slab into the static
+            # plane — the fault pass must detect and heal it first
+            return False
         cost_up = self._cost(0) - self._cost(1)
         if self.live_bytes + cost_up > self.budget_bytes:
             return False
@@ -469,6 +532,9 @@ class AugmentedStatePool:
         self.live_bytes += cost_up
         self.last_write[row] = step
         self.policies.pop(row, None)
+        self._words.pop(row, None)
+        self._masters.pop(row, None)
+        self._dirty.discard(row)
         self.stats["promote_events"] += 1
         self._tables_cache = None
         return True
@@ -489,6 +555,8 @@ class AugmentedStatePool:
             pol = self.policies.get(row)
             if pol is not None:
                 pol.stamp(step)
+                if self._fm is not None:
+                    self._dirty.add(row)
 
     def refresh_due(self, step: int) -> list[int]:
         return [row for row, pol in self.policies.items()
@@ -500,6 +568,12 @@ class AugmentedStatePool:
         rows) and account the traffic."""
         pol = self.policies.get(row)
         if pol is None:
+            return
+        if (self._fm is not None
+                and self._fm.refresh_miss(self._unit_id(row), step)):
+            # the refresh pulse itself failed: the slab keeps aging toward
+            # certain fault — inject/scan will catch what decays
+            self.stats["refresh_misses"] += 1
             return
         if self.pool_mode == "augment-on-pressure" \
                 and self.cfg.amc.refresh_promote \
@@ -515,6 +589,123 @@ class AugmentedStatePool:
     def max_augmented_age(self, step: int) -> int:
         return max((pol.age(step) for pol in self.policies.values()),
                    default=0)
+
+    # -- retention-fault injection / detection / healing ------------------------
+    # (core/faults.py FaultModel; mirrors PagedKVPool's page-level
+    # machinery at slab granularity. A slab's physical unit IS its slot —
+    # rows never migrate between arrays — so offender tracking keys on
+    # the row index.)
+
+    def attach_fault_model(self, fm: F.FaultModel, *, integrity: bool = True,
+                           tag: str = "") -> None:
+        self._fm = fm
+        self._integrity = integrity
+        self._fault_tag = tag
+        self._dirty.update(self.policies.keys())
+
+    def _unit_id(self, row: int) -> str:
+        return f"{self._fault_tag}slab{row}"
+
+    def _packed_keys(self) -> list[str]:
+        return sorted(self._state.get("packed", {}))
+
+    def _unit_payload_np(self, row: int) -> tuple:
+        ps = []
+        for key in self._packed_keys():
+            ps.append(np.asarray(self._state["packed"][key][:, row]))
+            ps.append(np.asarray(self._state["scale"][key][:, row]))
+        return tuple(ps)
+
+    def _unit_word(self, row: int) -> int:
+        return F.integrity_word(*self._unit_payload_np(row))
+
+    def _flush_integrity(self) -> None:
+        """Bring integrity words up to date for every augmented slab that
+        was (re)written since the last flush. Static stores (write-once
+        vlm prefix) also stash a host master copy — the scrub source."""
+        for row in self.policies:
+            if row in self._words and row not in self._dirty:
+                continue
+            payload = self._unit_payload_np(row)
+            self._words[row] = F.integrity_word(*payload)
+            if self.static:
+                self._masters[row] = payload
+        self._dirty.clear()
+
+    def inject_faults(self, step: int) -> int:
+        """Sample retention faults for every live augmented slab and
+        corrupt the packed planes on device (deterministic under seed)."""
+        if self._fm is None or not self.mixed:
+            return 0
+        self._flush_integrity()
+        n = 0
+        for row, pol in list(self.policies.items()):
+            if row in self._pending:
+                continue
+            uid = self._unit_id(row)
+            if self._fm.fault(uid, step, pol.age(step), self.retention_steps):
+                mask = self._fm.corruption_mask(uid, step)
+                self._state = _corrupt_row_op(self._state, row, mask)
+                self._pending.add(row)
+                self.stats["faults_injected"] += 1
+                n += 1
+        return n
+
+    def scan_integrity(self, step: int) -> list[int]:
+        """Verify every augmented slab against its stored integrity word;
+        return the corrupted rows (detected, never silently served)."""
+        if self._fm is None or not self._integrity:
+            return []
+        self._flush_integrity()
+        bad: list[int] = []
+        for row, word in list(self._words.items()):
+            self.stats["integrity_checks"] += 1
+            if self._unit_word(row) == word:
+                continue
+            bad.append(row)
+            self._pending.discard(row)
+            self.stats["faults_detected"] += 1
+            uid = self._unit_id(row)
+            self._offenders[uid] = self._offenders.get(uid, 0) + 1
+            if (self._offenders[uid] >= self._fm.pin_threshold
+                    and not self._pin_normal[row]):
+                self._pin_normal[row] = True
+                self.stats["pinned_normal"] += 1
+        return bad
+
+    def scrub_from_master(self, row: int) -> bool:
+        """Heal a detected-corrupt slab from the host master copy (static
+        stores only — dynamic slabs must be recomputed). Repeat-offender
+        rows are pinned back to the Normal plane when the budget allows."""
+        master = self._masters.get(row)
+        if master is None:
+            return False
+        keys = self._packed_keys()
+        packed = {k: jnp.asarray(master[2 * i])
+                  for i, k in enumerate(keys)}
+        scale = {k: jnp.asarray(master[2 * i + 1])
+                 for i, k in enumerate(keys)}
+        self._state = _restore_row_op(self._state, row, packed, scale)
+        self.stats["maintenance_dispatches"] += 1
+        self._words[row] = F.integrity_word(*master)
+        self._dirty.discard(row)
+        if self._pin_normal[row]:
+            self.promote_slot(row, step=0)
+        return True
+
+    def fault_row(self, row: int) -> Optional[int]:
+        return row
+
+    def fault_unit_bytes(self, row: int) -> int:
+        return self.slab_bytes_aug
+
+    def fault_counters(self) -> dict:
+        return {k: self.stats[k] for k in
+                ("faults_injected", "faults_detected", "faults_masked",
+                 "refresh_misses", "integrity_checks", "pinned_normal")}
+
+    def faults_pending(self) -> int:
+        return len(self._pending)
 
     # -- speculative decode: slab snapshot / rollback --------------------------
 
@@ -666,6 +857,43 @@ class CompositeStore:
     def max_augmented_age(self, step: int) -> int:
         return max(p.max_augmented_age(step) for p in self.parts.values())
 
+    # -- retention faults: fan out, part-qualified keys -------------------------
+
+    def attach_fault_model(self, fm, *, integrity: bool = True,
+                           tag: str = "") -> None:
+        for name, p in self.parts.items():
+            p.attach_fault_model(fm, integrity=integrity,
+                                 tag=f"{tag}{name}:")
+
+    def inject_faults(self, step: int) -> int:
+        return sum(p.inject_faults(step) for p in self.parts.values())
+
+    def scan_integrity(self, step: int) -> list:
+        return [(name, key) for name, p in self.parts.items()
+                for key in p.scan_integrity(step)]
+
+    def scrub_from_master(self, key) -> bool:
+        name, part_key = key
+        return self.parts[name].scrub_from_master(part_key)
+
+    def fault_row(self, key) -> Optional[int]:
+        name, part_key = key
+        return self.parts[name].fault_row(part_key)
+
+    def fault_unit_bytes(self, key) -> int:
+        name, part_key = key
+        return self.parts[name].fault_unit_bytes(part_key)
+
+    def fault_counters(self) -> dict:
+        out: dict = {}
+        for p in self.parts.values():
+            for k, v in p.fault_counters().items():
+                out[k] = out.get(k, 0) + v
+        return out
+
+    def faults_pending(self) -> int:
+        return sum(p.faults_pending() for p in self.parts.values())
+
     @property
     def state(self):
         return {name: p.state for name, p in self.parts.items()}
@@ -718,7 +946,10 @@ class CompositeStore:
                "live_bytes": self.live_bytes}
         for k in ("refreshes", "refresh_bytes", "augment_events",
                   "promote_events", "maintenance_dispatches",
-                  "alloc_failures", "peak_live_bytes", "augment_bytes"):
+                  "alloc_failures", "peak_live_bytes", "augment_bytes",
+                  "faults_injected", "faults_detected", "faults_masked",
+                  "refresh_misses", "integrity_checks", "pinned_normal",
+                  "pages_decommissioned"):
             agg[k] = sum(d.get(k, 0) for d in parts.values())
         return agg
 

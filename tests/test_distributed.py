@@ -159,3 +159,40 @@ def test_straggler_monitor_flags_slow_steps():
     assert not mon.events
     flagged = [mon.record(10 + i, 5.0) for i in range(3)]
     assert any(flagged) and mon.events
+
+
+def test_supervisor_exhaustion_reraises_past_budget():
+    """The restart budget is spent silently; the failure PAST it re-raises
+    to the caller (the serving engine surfaces it instead of looping)."""
+    restores = {"n": 0}
+
+    def restore():
+        restores["n"] += 1
+
+    sup = Supervisor(restore, max_restarts=3)
+
+    def boom():
+        raise SimulatedFailure("array lost")
+
+    for _ in range(3):
+        assert not sup.run_step(boom)      # recovered, budget spent
+    with pytest.raises(SimulatedFailure):
+        sup.run_step(boom)                 # budget exhausted: re-raise
+    assert restores["n"] == 3 and sup.restarts == 4
+
+
+def test_straggler_ewma_resists_poisoning():
+    """Pathologically slow steps barely move the EWMA baseline (weight
+    0.98), so a burst can't drag the threshold up and hide itself."""
+    mon = StragglerMonitor(threshold=2.0, patience=3)
+    for i in range(10):
+        mon.record(i, 1.0)
+    assert mon._ewma == pytest.approx(1.0)
+    for i in range(10, 13):
+        mon.record(i, 100.0)               # 100x burst, patience-long
+    assert mon.events, "burst should have requested mitigation"
+    # plain decay=0.9 weighting would leave the baseline near 28; the
+    # poisoning-resistant weight keeps it single-digit...
+    assert mon._ewma < 10.0
+    # ...so the very next 100x step is still detected as slow
+    assert 100.0 > mon.threshold * mon._ewma

@@ -80,3 +80,34 @@ def test_refresh_policy_validity_window():
 
 def test_quant_error_halflife_tracks_bits():
     assert quant_error_halflife(4) > quant_error_halflife(8)
+
+
+# ---------------------------------------------------------------------------
+# boundary semantics pinned (the fault model and scheduler both key off
+# `age == retention_steps` being the FIRST invalid step — off-by-one here
+# silently shifts every injection/refresh decision)
+# ---------------------------------------------------------------------------
+
+def test_refresh_policy_boundary_exactly_at_retention():
+    pol = RefreshPolicy(retention_steps=8)
+    pol.stamp(100)
+    assert pol.valid(107) and not pol.needs_refresh(107)    # age == ret - 1
+    assert not pol.valid(108) and pol.needs_refresh(108)    # age == ret
+    assert pol.age(108) == 8 and pol.expires_at() == 108
+
+
+def test_refresh_policy_never_written_plane():
+    """A plane that was never stamped is invalid but does NOT demand a
+    refresh (there is nothing to re-quantize) and reports age 0."""
+    pol = RefreshPolicy(retention_steps=8)
+    assert not pol.valid(0) and not pol.valid(10 ** 6)
+    assert not pol.needs_refresh(5)
+    assert pol.age(123) == 0
+
+
+def test_from_leakage_extreme_temps_clamp_to_one():
+    """Steps so long (or silicon so hot) that retention < one step must
+    clamp to 1, never 0 — else an augmented page could never be read."""
+    assert RefreshPolicy.from_leakage("7T", 125, 1e6).retention_steps == 1
+    assert RefreshPolicy.from_leakage("8T", 105, 1e9).retention_steps == 1
+    assert RefreshPolicy.from_leakage("8T", -40, 1.0).retention_steps >= 1
