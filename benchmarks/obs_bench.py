@@ -1,0 +1,214 @@
+"""Observability overhead + trace/metrics cross-validation — the
+BENCH_obs.json payload.
+
+ONE engine serves the same decode-heavy load (single-token prompts, so
+the timed region is the decode hot path) twice per repeat: once with the
+Null facade swapped in (planes off) and once with tracing AND metrics
+on. Swapping the facade on a single engine instance — instead of
+comparing two separately-constructed engines — removes per-instance
+variance (jit cache, allocation layout), which a two-engine control
+measured at the same magnitude as the effect (~1.3%). The headline is
+`overhead_frac` — the ratio of the two modes' 10th-percentile process
+CPU times over many paired repeats. The decode loop on the CPU backend
+is compute-bound, so the hooks' cost is CPU work and
+`time.process_time` measures exactly that while being immune to the
+involuntary OS-scheduler preemptions that put ±5-10% of noise on wall
+time on a shared box — an order of magnitude above the ~1% effect (the
+acceptance bound is < 2%). CPU noise is additive (interrupts, cache
+eviction by co-tenants only ever ADD cycles), so a low percentile over
+many repeats approaches each mode's true floor; p10 rather than the
+raw min keeps one lucky sample from deciding the figure. GC is held
+off during each timed region (timeit's protocol) — a gen-2 pause
+inside one run is itself a >1% distortion. Wall time is still what
+throughput (tok/s) is reported from, and the median of per-repeat
+paired on/off CPU ratios rides along as a drift-robust secondary
+estimate.
+
+The instrumented run then cross-validates its own two planes: per-request
+TTFT derived from the trace's enqueue/first_token instants must agree
+with the metrics histogram's percentile estimates within one log-bucket
+(the construction guarantee `LogHistogram.within_one_bucket` encodes),
+and the exported Chrome trace must pass the schema validator.
+"""
+from __future__ import annotations
+
+import gc
+import time
+
+import numpy as np
+
+from benchmarks.paper_tables import row
+from repro.configs import get_arch
+from repro.launch.mesh import make_local_mesh
+from repro.obs import LogHistogram, validate_chrome_trace
+from repro.serve import Request, ServeEngine
+
+ARCH = "qwen1.5-0.5b"
+
+
+def _engine(cfg, mesh, *, obs: bool):
+    return ServeEngine(cfg, mesh, max_batch=4, max_seq=64,
+                       prefill_chunk=16, trace=obs, metrics=obs)
+
+
+def _set_obs(eng, obs) -> None:
+    """Swap the obs facade on a live engine (engine + scheduler + store
+    all hold the same reference)."""
+    eng.obs = obs
+    eng.scheduler.obs = obs
+    eng.store.attach_obs(obs)
+
+
+def _reqs(rng, cfg, n, max_new, id0):
+    # single-token prompts: no prefill dispatches, the timed region is
+    # pure decode rounds
+    return [Request(prompt=rng.integers(0, cfg.vocab, size=(1,))
+                    .astype(np.int32), max_new_tokens=max_new, id=id0 + i)
+            for i in range(n)]
+
+
+def _decode_times(eng, rng, cfg, *, n_req, max_new, repeats):
+    """Paired off/on decode timings on ONE engine, the obs facade
+    swapped between runs. Each repeat times an off generate and an on
+    generate back to back (order alternating), recording both wall time
+    (throughput) and process CPU time (overhead). Returns
+    ((wall_off, wall_on), (tokens_off, tokens_on), overhead_frac,
+    median_paired_ratio, paired_ratio_iqr) where the walls are
+    min-of-repeats and the overhead comes from the ratio of p10 CPU
+    times; the IQR of the paired ratios is the run's own noise floor."""
+    from repro.obs import NULL_OBS
+    real_obs = eng.obs
+    modes = (NULL_OBS, real_obs)
+    eng.generate(_reqs(rng, cfg, n_req, max_new, 10_000))  # warmup/jit
+    best_wall = [float("inf")] * len(modes)
+    cpus = [[], []]
+    tokens = [0] * len(modes)
+    ratios = []
+    for r in range(repeats):
+        cpu = [0.0, 0.0]
+        # alternate within-pair order (off,on / on,off) so any cost the
+        # first run of a pair defers onto the second (GC, page faults)
+        # cancels across repeats
+        order = (0, 1) if r % 2 == 0 else (1, 0)
+        for k, i in enumerate(order):
+            _set_obs(eng, modes[i])
+            reqs = _reqs(rng, cfg, n_req, max_new,
+                         20_000 + (r * len(modes) + k) * 1000)
+            # timeit-style GC control: collect to a fresh heap, then keep
+            # the collector out of the timed region — a gen-2 pause
+            # landing inside one 0.3s run is a >1% distortion, larger
+            # than the effect being measured
+            gc.collect()
+            gc.disable()
+            try:
+                w0 = time.perf_counter()
+                c0 = time.process_time()
+                outs = eng.generate(reqs)
+                cpu[i] = time.process_time() - c0
+                wall = time.perf_counter() - w0
+            finally:
+                gc.enable()
+            # count THIS batch only: the shared engine's outputs dict
+            # accumulates every request it has ever served
+            tokens[i] = sum(len(outs[q.id]) for q in reqs)
+            best_wall[i] = min(best_wall[i], wall)
+            cpus[i].append(cpu[i])
+        ratios.append(cpu[1] / cpu[0] - 1.0)
+    _set_obs(eng, real_obs)
+    # CPU noise is strictly additive (an interrupt only ever adds
+    # cycles), so a low percentile over many repeats approaches each
+    # mode's true floor — p10 rather than the raw min so no single
+    # lucky sample decides the figure; the paired-ratio median is
+    # reported alongside as a drift-robust secondary estimate
+    p10 = [float(np.percentile(c, 10)) for c in cpus]
+    overhead = (p10[1] - p10[0]) / p10[0]
+    # inter-quartile range of the paired ratios: the measurement's own
+    # noise floor (a quiet box shows ~1-2%, a loud co-tenant phase can
+    # triple it — read the headline against this)
+    iqr = float(np.percentile(ratios, 75) - np.percentile(ratios, 25))
+    return best_wall, tokens, overhead, float(np.median(ratios)), iqr
+
+
+def _trace_ttfts(trace_obj) -> list[float]:
+    """Per-request TTFT (seconds) recomputed from the trace artifact's
+    enqueue / first_token instants, keyed by request track."""
+    enq, first = {}, {}
+    for e in trace_obj["traceEvents"]:
+        if e.get("ph") != "i":
+            continue
+        if e["name"] == "enqueue":
+            enq[e["tid"]] = e["ts"]
+        elif e["name"] == "first_token":
+            first.setdefault(e["tid"], e["ts"])
+    return [(first[tid] - enq[tid]) * 1e-6 for tid in enq if tid in first]
+
+
+def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
+    cfg = get_arch(ARCH).reduced()
+    mesh = make_local_mesh()
+    n_req = 4 if tiny else 8
+    max_new = 16 if tiny else 32
+    # noisy shared-CPU environments need many pairs: per-pair noise is
+    # ±5% while the effect is ~1%, and both estimators' error shrinks
+    # ~1/sqrt(repeats). Shorter runs buy more pairs for the same budget
+    # AND cancel contention better (the two runs of a pair sit closer
+    # in time); odd count = the median is a real paired ratio
+    repeats = 5 if tiny else 75
+
+    rng = np.random.default_rng(seed)
+    eng_on = _engine(cfg, mesh, obs=True)
+    (t_off, t_on), (tok_off, tok_on), overhead, med_paired, iqr = \
+        _decode_times(
+        eng_on, rng, cfg, n_req=n_req, max_new=max_new, repeats=repeats)
+    row("obs/decode_tok_per_s_off", t_off / tok_off * 1e6,
+        f"{tok_off / t_off:.1f} tok/s")
+    row("obs/decode_tok_per_s_on", t_on / tok_on * 1e6,
+        f"{tok_on / t_on:.1f} tok/s overhead={overhead * 100:.2f}%")
+
+    # -- cross-validate the instrumented run's two planes ---------------------
+    trace_obj = eng_on.obs.tracer.chrome_trace()
+    problems = validate_chrome_trace(trace_obj)
+    ttfts = _trace_ttfts(trace_obj)
+    hist = eng_on.stats()["obs"]["histograms"]["ttft_s"]
+    ref = LogHistogram()
+    for t in ttfts:
+        ref.observe(t)
+    agree_p50 = ref.within_one_bucket(ref.percentile(50), hist["p50"])
+    agree_p99 = ref.within_one_bucket(ref.percentile(99), hist["p99"])
+    row("obs/ttft_p50_ms", hist["p50"] * 1e3,
+        f"trace_p50={ref.percentile(50) * 1e3:.3f}ms "
+        f"agree={agree_p50 and agree_p99}")
+
+    return {
+        "arch": ARCH,
+        "seed": seed,
+        "tiny": tiny,
+        "decode": {
+            "n_requests": n_req,
+            "max_new_tokens": max_new,
+            "repeats": repeats,
+            "wall_s_obs_off": t_off,
+            "wall_s_obs_on": t_on,
+            "tokens_per_s_obs_off": tok_off / t_off,
+            "tokens_per_s_obs_on": tok_on / t_on,
+            "overhead_frac": overhead,
+            "overhead_frac_median_paired": med_paired,
+            "paired_ratio_iqr": iqr,
+            "overhead_estimator": "p10_cpu_ratio",
+            "overhead_timer": "process_time",
+        },
+        "cross_check": {
+            "n_ttfts_from_trace": len(ttfts),
+            "ttft_p50_metrics_s": hist["p50"],
+            "ttft_p99_metrics_s": hist["p99"],
+            "ttft_p50_trace_s": ref.percentile(50),
+            "ttft_p99_trace_s": ref.percentile(99),
+            "agree_within_one_bucket_p50": bool(agree_p50),
+            "agree_within_one_bucket_p99": bool(agree_p99),
+        },
+        "trace": {
+            "events": len(trace_obj["traceEvents"]),
+            "schema_problems": problems,
+            "valid": not problems,
+        },
+    }

@@ -6,10 +6,13 @@ weight_mode serving matrix + modeled HBM traffic), BENCH_kernels.json
 BENCH_scheduler.json (pool modes x offered load + the per-family arch
 sweep), BENCH_paper_tables.json (the Tables I-VI analog rows, structured)
 BENCH_imc.json (storage matrix x activation precision: modeled
-energy/token + throughput) and BENCH_fault.json (retention-fault chaos
+energy/token + throughput), BENCH_fault.json (retention-fault chaos
 sweep: injection rates x recovery outcomes, with token identity to the
-fault-free run asserted) so the serving perf trajectory is tracked
-across PRs.
+fault-free run asserted) and BENCH_obs.json (observability overhead vs
+the disabled Null facade + trace/metrics cross-validation) so the
+serving perf trajectory is tracked across PRs. BENCH_manifest.json
+records run provenance: jax version/backend, seed, git sha and
+per-emitter wall time.
 
 A failing emitter no longer takes the others down silently: every section
 runs, tracebacks are printed, the surviving payloads are written, and the
@@ -21,8 +24,19 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import subprocess
 import sys
+import time
 import traceback
+
+
+def _git_sha(root: str) -> str:
+    try:
+        return subprocess.run(
+            ["git", "rev-parse", "HEAD"], cwd=root, capture_output=True,
+            text=True, timeout=10, check=True).stdout.strip()
+    except Exception:
+        return "unknown"
 
 
 def main() -> None:
@@ -36,9 +50,17 @@ def main() -> None:
                          "so the whole harness finishes in minutes")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    import jax
+
     from benchmarks import e2e_bench, fault_bench, imc_bench, kernels_bench
-    from benchmarks import paper_tables, scheduler_bench
+    from benchmarks import obs_bench, paper_tables, scheduler_bench
+    # the obs emitter measures a ~1% effect against run-to-run noise, so
+    # it goes FIRST: after minutes of heavy sweeps the machine is hot
+    # (frequency/cache state) and the measurement floor degrades
     sections = (
+        ("BENCH_obs.json",
+         "observability overhead + trace/metrics cross-validation",
+         obs_bench.run_all),
         ("BENCH_paper_tables.json", "paper tables I-VI analogs",
          paper_tables.run_all),
         ("BENCH_kernels.json", "pallas kernels (bytes/roofline)",
@@ -56,19 +78,40 @@ def main() -> None:
     )
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     failures: list[str] = []
+    # run manifest: provenance + per-emitter wall time, written even when
+    # emitters fail so a partial artifact set is still attributable
+    manifest: dict = {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "seed": args.seed,
+        "tiny": args.tiny,
+        "git_sha": _git_sha(root),
+        "emitters": {},
+    }
+    t_total = time.perf_counter()
     for name, title, emit in sections:
         print(f"# -- {title} --")
+        t0 = time.perf_counter()
         try:
             payload = emit(seed=args.seed, tiny=args.tiny)
         except Exception:
             failures.append(name)
+            manifest["emitters"][name] = {
+                "wall_s": time.perf_counter() - t0, "ok": False}
             print(f"# EMITTER FAILED: {name}", file=sys.stderr)
             traceback.print_exc()
             continue
+        manifest["emitters"][name] = {
+            "wall_s": time.perf_counter() - t0, "ok": True}
         out = os.path.join(root, name)
         with open(out, "w") as f:
             json.dump(payload, f, indent=2)
         print(f"# wrote {out}")
+    manifest["wall_s_total"] = time.perf_counter() - t_total
+    mpath = os.path.join(root, "BENCH_manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"# wrote {mpath}")
     if failures:
         print(f"# FAILED emitters: {', '.join(failures)}", file=sys.stderr)
         sys.exit(1)

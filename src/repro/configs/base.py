@@ -144,6 +144,21 @@ class AMCConfig:
     # bit-serial IMC matmuls at that activation precision (the dynamic-
     # plane read of the 8T duality), "same" drafts with the full config.
     spec_draft_impl: str = "dequant"
+    # -- observability (obs/) ------------------------------------------------
+    # Chrome-trace span/instant recording of the full request lifecycle
+    # (one perfetto lane per request + engine/scheduler/refresh/fault
+    # lanes). Off by default: the engine then holds a null facade whose
+    # hooks are constant no-ops on the decode hot path.
+    trace: bool = False
+    # Host-side metrics plane: latency histograms (TTFT, queue wait,
+    # inter-token, step wall) plus sampled time series (pool occupancy,
+    # Normal/Augmented mode mix, refresh debt, energy-group totals),
+    # folded into stats()["obs"] and exportable as Prometheus text.
+    metrics: bool = False
+    # Sample the time-series payload every N engine steps (1 = each step;
+    # raise on long runs to bound sampling work — the series themselves
+    # are already memory-bounded).
+    obs_sample_every: int = 1
 
     @property
     def aug_bits(self) -> int:

@@ -33,9 +33,18 @@ class StragglerMonitor:
     _ewma: float = dataclasses.field(default=0.0, init=False)
     _flags: int = dataclasses.field(default=0, init=False)
     events: list = dataclasses.field(default_factory=list, init=False)
+    # aggregate wall-time accumulators over every recorded step
+    n_steps: int = dataclasses.field(default=0, init=False)
+    total_s: float = dataclasses.field(default=0.0, init=False)
+    min_s: float = dataclasses.field(default=0.0, init=False)
+    max_s: float = dataclasses.field(default=0.0, init=False)
 
     def record(self, step: int, dt: float) -> bool:
         """Returns True if mitigation was requested at this step."""
+        self.min_s = dt if self.n_steps == 0 else min(self.min_s, dt)
+        self.max_s = dt if self.n_steps == 0 else max(self.max_s, dt)
+        self.n_steps += 1
+        self.total_s += dt
         if self._ewma == 0.0:
             self._ewma = dt
             return False
@@ -51,6 +60,18 @@ class StragglerMonitor:
             self._flags = 0
             return True
         return False
+
+    def describe(self) -> dict:
+        """Pure wall-time summary of every recorded step (engine
+        stats()["step_times"])."""
+        return {
+            "n_steps": self.n_steps,
+            "min_s": self.min_s,
+            "mean_s": self.total_s / self.n_steps if self.n_steps else 0.0,
+            "max_s": self.max_s,
+            "ewma_s": self._ewma,
+            "mitigations": len(self.events),
+        }
 
 
 class Supervisor:

@@ -20,8 +20,14 @@ def main():
     ap.add_argument("--reduced", action="store_true")
     ap.add_argument("--requests", type=int, default=4)
     ap.add_argument("--max-new", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=5,
+                    help="synthetic prompt length (longer prompts build "
+                         "more cold storage — pressure + fault surface)")
     ap.add_argument("--max-batch", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=64)
+    ap.add_argument("--retention-steps", type=int, default=None,
+                    help="augmented retention window override (small "
+                         "windows force refresh traffic)")
     ap.add_argument("--pool-mode", default=None,
                     choices=["normal-only", "augment-on-pressure",
                              "always-augmented"],
@@ -65,6 +71,17 @@ def main():
     ap.add_argument("--no-integrity-check", action="store_true",
                     help="disable integrity-word verification (ablation: "
                          "forfeits the zero-silent-corruption property)")
+    ap.add_argument("--trace-out", default=None, metavar="TRACE.json",
+                    help="record per-request spans and write a "
+                         "perfetto-loadable Chrome trace here (implies "
+                         "tracing on)")
+    ap.add_argument("--metrics-out", default=None, metavar="METRICS.prom",
+                    help="record latency histograms / time series and "
+                         "write a Prometheus text dump here (implies "
+                         "metrics on)")
+    ap.add_argument("--obs-sample-every", type=int, default=None,
+                    help="time-series sampling stride in engine steps "
+                         "(default 1: every step)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -74,6 +91,7 @@ def main():
     eng = ServeEngine(cfg, mesh, max_batch=args.max_batch,
                       max_seq=args.max_seq, pool_mode=args.pool_mode,
                       pool_budget_bytes=args.pool_budget_bytes,
+                      retention_steps=args.retention_steps,
                       matmul_impl=args.matmul_impl,
                       imc_abits=args.imc_abits,
                       state_bits=args.state_bits,
@@ -84,9 +102,14 @@ def main():
                       array_loss_rate=args.array_loss_rate,
                       max_retries=args.max_retries,
                       integrity_check=(False if args.no_integrity_check
-                                       else None))
+                                       else None),
+                      trace=(True if args.trace_out else None),
+                      metrics=(True if args.metrics_out else None),
+                      obs_sample_every=args.obs_sample_every)
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(5,)).astype(np.int32),
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab,
+                                        size=(args.prompt_len,))
+                    .astype(np.int32),
                     max_new_tokens=args.max_new, id=i)
             for i in range(args.requests)]
     outs = eng.generate(reqs)
@@ -129,6 +152,19 @@ def main():
               f"uncorrectable={fl['uncorrectable']} "
               f"array_losses={fl['array_losses']} "
               f"zero_silent_corruption={fl['zero_silent_corruption']}")
+    if args.trace_out:
+        trace = eng.export_trace(args.trace_out)
+        print(f"[serve] trace: {len(trace['traceEvents'])} events -> "
+              f"{args.trace_out}")
+    if args.metrics_out:
+        eng.export_metrics(args.metrics_out)
+        ob = st["obs"]
+        h = ob["histograms"]
+        if "ttft_s" in h:
+            print(f"[serve] obs: ttft_p50={h['ttft_s']['p50'] * 1e3:.2f}ms "
+                  f"p99={h['ttft_s']['p99'] * 1e3:.2f}ms "
+                  f"step_p50={h['step_wall_s']['p50'] * 1e3:.2f}ms "
+                  f"-> {args.metrics_out}")
 
 
 if __name__ == "__main__":

@@ -202,6 +202,9 @@ class PagedKVPool:
         self._masters: dict[tuple[int, int], tuple] = {}  # static-band copies
         self._offenders: dict[str, int] = {}           # by physical unit id
         self._decommission: set[int] = set()           # weak packed pages
+        self._obs = None        # EngineObs facade (attach_obs) — optional
+        self._live_by_mode = [0, 0]   # live pages per mode, kept
+        # incrementally so the per-step mode-mix sample is O(1)
 
     # -- byte accounting ------------------------------------------------------
 
@@ -277,6 +280,7 @@ class PagedKVPool:
         self.allocated[row, lp] = True
         self.last_write[row, lp] = step
         self.live_bytes += cost
+        self._live_by_mode[mode] += 1
         self.stats["peak_live_bytes"] = max(self.stats["peak_live_bytes"],
                                             self.live_bytes)
         if mode == 1:
@@ -480,6 +484,8 @@ class PagedKVPool:
             self._decommission.discard(phys)
             self.pages_packed -= 1
             self.stats["pages_decommissioned"] += 1
+            if self._obs is not None:
+                self._obs.store_event("decommission", f"pg{phys}", -1)
         else:
             (self.free_normal if mode == 0 else self.free_packed).append(phys)
         key = (row, lp)
@@ -493,6 +499,7 @@ class PagedKVPool:
         self._dirty.discard(key)
         self._tables_cache = None
         self.live_bytes -= self._cost(mode)
+        self._live_by_mode[mode] -= 1
         self.allocated[row, lp] = False
         self.page_table[row, lp] = 0
         self.page_mode[row, lp] = 0
@@ -535,6 +542,8 @@ class PagedKVPool:
         self.page_table[row, lp] = dst
         self.page_mode[row, lp] = 1
         self.live_bytes -= self._cost(0) - self._cost(1)
+        self._live_by_mode[0] -= 1
+        self._live_by_mode[1] += 1
         pol = RefreshPolicy(retention_steps=self.retention_steps)
         pol.stamp(step)
         self.policies[(row, lp)] = pol
@@ -542,6 +551,8 @@ class PagedKVPool:
             self._dirty.add((row, lp))
         self.stats["augment_events"] += 1
         self.stats["augment_bytes"] += self._cost(0) + self._cost(1)
+        if self._obs is not None:
+            self._obs.store_event("augment", f"pg{dst}", step)
 
     def promote_page(self, row: int, lp: int, step: int) -> bool:
         """Augmented -> Normal (refresh-promote): dequantize back into the
@@ -564,12 +575,16 @@ class PagedKVPool:
         self.page_table[row, lp] = dst
         self.page_mode[row, lp] = 0
         self.live_bytes += cost_up
+        self._live_by_mode[1] -= 1
+        self._live_by_mode[0] += 1
         self.last_write[row, lp] = step
         self.policies.pop((row, lp), None)
         self._words.pop((row, lp), None)
         self._masters.pop((row, lp), None)
         self._dirty.discard((row, lp))
         self.stats["promote_events"] += 1
+        if self._obs is not None:
+            self._obs.store_event("promote", f"pg{dst}", step)
         return True
 
     # -- retention / refresh ----------------------------------------------------
@@ -617,12 +632,28 @@ class PagedKVPool:
         pol.stamp(step)
         self.stats["refreshes"] += 1
         self.stats["refresh_bytes"] += 2 * self._cost(1)   # read + re-write
+        if self._obs is not None:
+            self._obs.store_event("restamp", f"r{row}.p{lp}", step)
 
     def max_augmented_age(self, step: int) -> int:
         """Oldest unrefreshed augmented page, in steps (invariant probe:
         the scheduler must keep this <= retention_steps)."""
         return max((pol.age(step) for pol in self.policies.values()),
                    default=0)
+
+    # -- observability ----------------------------------------------------------
+
+    def attach_obs(self, obs) -> None:
+        """Wire the engine's observability facade: mode transitions and
+        fault injections emit refresh/fault-lane events from here."""
+        self._obs = obs
+
+    def mode_mix(self) -> tuple[int, int]:
+        """(live Normal pages, live Augmented pages) — one sample of the
+        paper's 6T/8T+ mode-mix timeline. O(1): incremental counters,
+        sampled every engine step (describe() recomputes the same pair
+        by reduction as the ground-truth cross-check)."""
+        return self._live_by_mode[0], self._live_by_mode[1]
 
     # -- retention-fault injection / detection / healing ------------------------
     # (core/faults.py FaultModel; the engine's fault pass drives these.
@@ -684,6 +715,8 @@ class PagedKVPool:
                 self.arenas = _corrupt_page_op(self.arenas, phys, mask)
                 self._pending.add(key)
                 self.stats["faults_injected"] += 1
+                if self._obs is not None:
+                    self._obs.on_fault("inject", uid, step)
                 n += 1
         return n
 

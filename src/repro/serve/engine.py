@@ -53,6 +53,7 @@ from repro.launch.mesh import mesh_context
 from repro.models import augment
 from repro.models import model as M
 from repro.models.params import init_params, is_pspec
+from repro.obs import hooks as obs_hooks
 from repro.serve import state_store
 from repro.serve.scheduler import QueueEntry, Scheduler
 
@@ -122,17 +123,22 @@ class ServeEngine:
                  fault_temp_c: Optional[float] = None,
                  integrity_check: Optional[bool] = None,
                  max_retries: Optional[int] = None,
-                 fault_pin_threshold: Optional[int] = None):
+                 fault_pin_threshold: Optional[int] = None,
+                 trace: Optional[bool] = None,
+                 metrics: Optional[bool] = None,
+                 obs_sample_every: Optional[int] = None):
         # engine-level AMC knobs override the config (e.g. serve a dense
         # checkpoint with ternary weights without touching the arch file)
         fault_overrides = (fault_rate, fault_seed, array_loss_rate,
                            fault_temp_c, integrity_check, max_retries,
                            fault_pin_threshold)
+        obs_overrides = (trace, metrics, obs_sample_every)
         if weight_mode is not None or kv_mode is not None \
                 or pool_mode is not None or matmul_impl is not None \
                 or imc_abits is not None or state_bits is not None \
                 or spec_k is not None or spec_draft_impl is not None \
-                or any(v is not None for v in fault_overrides):
+                or any(v is not None for v in fault_overrides) \
+                or any(v is not None for v in obs_overrides):
             # numeric/bool fault knobs need explicit None checks — 0.0 and
             # False are legitimate override values an `or` would drop
             cfg = dataclasses.replace(cfg, amc=dataclasses.replace(
@@ -161,7 +167,12 @@ class ServeEngine:
                              else max_retries),
                 fault_pin_threshold=(cfg.amc.fault_pin_threshold
                                      if fault_pin_threshold is None
-                                     else fault_pin_threshold)))
+                                     else fault_pin_threshold),
+                trace=cfg.amc.trace if trace is None else trace,
+                metrics=cfg.amc.metrics if metrics is None else metrics,
+                obs_sample_every=(cfg.amc.obs_sample_every
+                                  if obs_sample_every is None
+                                  else obs_sample_every)))
         self.cfg, self.mesh = cfg, mesh
         self.max_batch, self.max_seq = max_batch, max_seq
         self.prefill_chunk = min(prefill_chunk, max_seq)
@@ -183,7 +194,13 @@ class ServeEngine:
                 pages_normal=pool_pages_normal,
                 pages_packed=pool_pages_packed,
                 retention_steps=retention_steps)
-        self.scheduler = Scheduler(self.store, max_batch=max_batch)
+        # observability facade (obs/): Null unless a plane is switched on,
+        # so every hook below is a constant no-op on the default path
+        self.obs = obs_hooks.make_engine_obs(cfg.amc)
+        if self.obs.enabled:
+            self.store.attach_obs(self.obs)
+        self.scheduler = Scheduler(self.store, max_batch=max_batch,
+                                   obs=self.obs)
         # retention-fault injection + self-healing (core/faults.py): the
         # model samples per-page/per-slab early expiries and refresh
         # misses deterministically under the seed; the store detects them
@@ -380,6 +397,8 @@ class ServeEngine:
         entry = QueueEntry(req=req, prompt=prompt,
                            remaining=req.max_new_tokens,
                            enqueue_step=self.step_idx)
+        self.obs.on_enqueue(req.id, int(prompt.size), req.max_new_tokens,
+                            self.step_idx)
         self.scheduler.enqueue(entry)
         admitted = self._admit()
         return admitted.get(req.id)
@@ -412,12 +431,14 @@ class ServeEngine:
         self.positions[row] = 0
         self.remaining[row] = entry.remaining
         self.outputs.setdefault(entry.req.id, [])
+        self.obs.on_admit(entry.req.id, row, self.step_idx)
         prompt = entry.prompt
         # feed prompt[:-1] into the cache (the last prompt token is fed by
         # the first batched decode step, whose argmax is the first
         # generated token)
         if prompt.size > 1:
-            self.prefill(row, prompt[:-1])
+            with self.obs.prefill_span(entry.req.id, int(prompt.size) - 1):
+                self.prefill(row, prompt[:-1])
         self.last_token[row] = int(prompt[-1])
 
     def _preempt(self, victim: int) -> None:
@@ -440,6 +461,7 @@ class ServeEngine:
         self.active[victim] = False
         self.slot_req[victim] = None
         self._slot_entry[victim] = None
+        self.obs.on_preempt(entry.req.id, self.step_idx, "capacity")
         self.scheduler.enqueue(resumed, front=True)
         self.scheduler.stats["preemptions"] += 1
 
@@ -487,6 +509,8 @@ class ServeEngine:
         C = self.prefill_chunk
         write_mask = np.zeros(self.max_batch, bool)
         write_mask[slot] = True
+        req = self.slot_req[slot]
+        rid = req.id if req is not None else None
         last_logits, last_n = None, 0
         for start in range(0, tokens.size, C):
             chunk = tokens[start:start + C]
@@ -511,10 +535,12 @@ class ServeEngine:
             positions = self.positions.copy()
             positions[slot] = p - shift
             self._ensure_prefill_pages(slot, p - shift, p + n - 1)
-            logits = self._dispatch(self._prefill,
-                                    {"tokens": jnp.asarray(tok),
-                                     "positions": jnp.asarray(positions),
-                                     "write_mask": jnp.asarray(write_mask)})
+            with self.obs.chunk_span(rid, n):
+                logits = self._dispatch(
+                    self._prefill,
+                    {"tokens": jnp.asarray(tok),
+                     "positions": jnp.asarray(positions),
+                     "write_mask": jnp.asarray(write_mask)})
             self._account_dispatch(np.array([slot]), n,
                                    np.array([p + n]), np.array([p]))
             self.energy_ledger.note_tokens(n)
@@ -597,17 +623,33 @@ class ServeEngine:
                 self.step_idx += 1
                 return {}
         t0 = time.perf_counter()
-        self._admit()
-        if self._fault_model is not None:
-            # inject -> detect -> heal BEFORE refresh and dispatch, so
-            # corrupted storage is never read, refreshed or promoted
-            self._fault_pass()
-        self.scheduler.refresh_pass(self.step_idx)
-        self._sync_refresh_events()
-        if self._spec and self.active.any():
-            out = self._step_all_spec()
-            self._note_step_time(t0)
-            return out
+        with self.obs.step_span(self.step_idx,
+                                "spec" if self._spec else "decode"):
+            with self.obs.phase_span("admit"):
+                self._admit()
+            if self._fault_model is not None:
+                # inject -> detect -> heal BEFORE refresh and dispatch, so
+                # corrupted storage is never read, refreshed or promoted
+                with self.obs.fault_span(self.step_idx):
+                    self._fault_pass()
+            n_refreshed = self.scheduler.refresh_pass(self.step_idx)
+            self.obs.on_refresh_pass(n_refreshed, self.step_idx)
+            self._sync_refresh_events()
+            if self._spec and self.active.any():
+                out = self._step_all_spec()
+            else:
+                out = self._step_all_decode()
+        dt = time.perf_counter() - t0
+        self._note_step_time(dt)
+        self.obs.on_step_done(self.step_idx, dt)
+        if self.obs.wants_sample(self.step_idx):
+            self.obs.sample(self.step_idx, self._obs_sample_payload())
+        return out
+
+    def _step_all_decode(self) -> dict:
+        """The non-speculative decode round: one batched dispatch serves
+        every active row (the body `step_all` wraps in scheduling,
+        refresh, fault and observability passes)."""
         self._ensure_decode_capacity()
         tokens = np.where(self.active, self.last_token, 0
                           ).astype(np.int32)[:, None]
@@ -634,13 +676,16 @@ class ServeEngine:
                       | (self.positions >= self.max_seq - 1))
         self.active &= ~done
         for s in np.flatnonzero(act):
-            self.outputs[self.slot_req[s].id].append(int(arg[s]))
+            rid = self.slot_req[s].id
+            self.outputs[rid].append(int(arg[s]))
+            self.obs.on_tokens(rid, 1, self.step_idx)
         for s in np.flatnonzero(done):
+            rid = self.slot_req[s].id
             self.slot_req[s] = None          # release row (cont. batching)
             self._slot_entry[s] = None
             self.scheduler.release_row(int(s))
+            self.obs.on_complete(rid, self.step_idx)
         self.step_idx += 1
-        self._note_step_time(t0)
         return {int(s): int(arg[s]) for s in np.flatnonzero(act & ~done)}
 
     def _step_all_spec(self) -> dict:
@@ -682,28 +727,34 @@ class ServeEngine:
         toks[:, 0] = np.where(self.active, self.last_token, 0)
         if self.store.kind == "slab":
             self.store.speculative_snapshot()
-        for i in range(W - 1):
-            # clamp keeps INACTIVE rows' stale positions inside the table;
-            # active rows never exceed max_seq - 2 by the cap above
-            pos_i = np.minimum(self.positions + i, self.max_seq - 1)
-            lg = self._dispatch(self._draft_decode,
-                                {"tokens": jnp.asarray(toks[:, i:i + 1]),
-                                 "positions": jnp.asarray(pos_i),
-                                 "write_mask": jnp.asarray(wmask2d[:, i])})
-            self.energy_ledger.add(
-                imc_energy.decode_matmul_events(self._draft_cfg,
-                                                int(rows.size)), "draft")
-            self._spec_stats["draft_dispatches"] += 1
-            toks[:, i + 1] = np.asarray(
-                jnp.argmax(lg[:, -1], axis=-1)).astype(np.int32)
+        with self.obs.phase_span("spec_draft", k=W - 1):
+            for i in range(W - 1):
+                # clamp keeps INACTIVE rows' stale positions inside the
+                # table; active rows never exceed max_seq - 2 by the cap
+                # above
+                pos_i = np.minimum(self.positions + i, self.max_seq - 1)
+                lg = self._dispatch(
+                    self._draft_decode,
+                    {"tokens": jnp.asarray(toks[:, i:i + 1]),
+                     "positions": jnp.asarray(pos_i),
+                     "write_mask": jnp.asarray(wmask2d[:, i])})
+                self.energy_ledger.add(
+                    imc_energy.decode_matmul_events(self._draft_cfg,
+                                                    int(rows.size)),
+                    "draft")
+                self._spec_stats["draft_dispatches"] += 1
+                toks[:, i + 1] = np.asarray(
+                    jnp.argmax(lg[:, -1], axis=-1)).astype(np.int32)
         if self.store.kind == "slab":
             # the verify scan replays the window from the pre-draft state
             self.store.speculative_restore()
         # -- verify: ONE full-quality dispatch over the whole window
-        logits = self._dispatch(self._verify,
-                                {"tokens": jnp.asarray(toks),
-                                 "positions": jnp.asarray(self.positions),
-                                 "write_mask": jnp.asarray(wmask2d)})
+        with self.obs.phase_span("spec_verify", k=W):
+            logits = self._dispatch(
+                self._verify,
+                {"tokens": jnp.asarray(toks),
+                 "positions": jnp.asarray(self.positions),
+                 "write_mask": jnp.asarray(wmask2d)})
         self._spec_stats["verify_dispatches"] += 1
         self._spec_stats["spec_rounds"] += 1
         self._account_dispatch(rows, W, self.positions[rows] + cap[rows],
@@ -721,8 +772,9 @@ class ServeEngine:
         total = 0
         for s in rows:
             na = int(n_emit[s])
-            self.outputs[self.slot_req[s].id].extend(
-                int(t) for t in v[s, :na])
+            rid = self.slot_req[s].id
+            self.outputs[rid].extend(int(t) for t in v[s, :na])
+            self.obs.on_tokens(rid, na, self.step_idx)
             total += na
             nc = int(n_acc[s])     # committed (may exceed the emit budget)
             rw.extend([int(s)] * nc)
@@ -733,6 +785,7 @@ class ServeEngine:
                                          self.step_idx)
         self.energy_ledger.note_tokens(total)
         self._spec_stats["accepted_tokens"] += total
+        self.obs.on_spec_round(total, int(rows.size), self.step_idx)
         # roll back pages that held only rejected draft tokens (slab
         # stores already rolled back wholesale via the snapshot)
         if rows.size:
@@ -746,19 +799,22 @@ class ServeEngine:
                       | (self.positions >= self.max_seq - 1))
         self.active &= ~done
         for s in np.flatnonzero(done):
+            rid = self.slot_req[s].id
             self.slot_req[s] = None
             self._slot_entry[s] = None
             self.scheduler.release_row(int(s))
+            self.obs.on_complete(rid, self.step_idx)
         self.step_idx += 1
         return {int(s): int(v[s, n_emit[s] - 1])
                 for s in np.flatnonzero(act & ~done)}
 
     # -- retention faults: inject / detect / heal ------------------------------
 
-    def _note_step_time(self, t0: float) -> None:
-        if self._fault_model is None:
-            return
-        if self.straggler.record(self.step_idx, time.perf_counter() - t0):
+    def _note_step_time(self, dt: float) -> None:
+        """Feed the per-step wall time to the straggler monitor. Always
+        recorded (stats()["step_times"] surfaces min/mean/max for every
+        run), mitigations only counted — never acted on."""
+        if self.straggler.record(self.step_idx, dt):
             self._fault_stats["straggler_mitigations"] += 1
 
     def inject_array_loss(self) -> None:
@@ -785,6 +841,7 @@ class ServeEngine:
         Fault-retry budgets are NOT charged: an array loss is not the
         request's fault, and charging it would fail innocent requests."""
         rows = np.flatnonzero(self.active)
+        self.obs.on_fault("array_loss", f"rows={rows.size}", self.step_idx)
         for row in rows:
             self._preempt(int(row))
             self._fault_stats["array_loss_requeues"] += 1
@@ -799,11 +856,13 @@ class ServeEngine:
         "recovery" group like any other maintenance."""
         bad = self.scheduler.fault_pass(self.step_idx)
         for key in bad:
+            self.obs.on_fault("detect", str(key), self.step_idx)
             self.energy_ledger.add(
                 imc_energy.refresh_events(self.store.fault_unit_bytes(key)),
                 "recovery")
             if self.store.scrub_from_master(key):
                 self._fault_stats["recovered_scrub"] += 1
+                self.obs.on_fault("heal_scrub", str(key), self.step_idx)
                 continue
             row = self.store.fault_row(key)
             if row is None or not self.active[row]:
@@ -834,6 +893,8 @@ class ServeEngine:
         self.active[row] = False
         self.slot_req[row] = None
         self._slot_entry[row] = None
+        self.obs.on_fault("heal_recompute", f"row{row}", self.step_idx)
+        self.obs.on_preempt(entry.req.id, self.step_idx, "fault_recompute")
         self.scheduler.enqueue(resumed, front=True)
         self._fault_stats["recovered_recompute"] += 1
         self._fault_stats["retried"] += 1
@@ -848,6 +909,9 @@ class ServeEngine:
         self.active[row] = False
         self.slot_req[row] = None
         self._slot_entry[row] = None
+        self.obs.on_fault("uncorrectable", f"req{entry.req.id}",
+                          self.step_idx)
+        self.obs.on_failed(entry.req.id, self.step_idx)
         self._fault_stats["uncorrectable"] += 1
 
     # -- stats -----------------------------------------------------------------
@@ -961,7 +1025,41 @@ class ServeEngine:
                   "promote_events", "maintenance_dispatches"):
             out[k] = pool[k]
         out["preemptions"] = self.scheduler.stats["preemptions"]
+        # per-step wall times (straggler monitor feed — recorded on every
+        # run, fault model or not) and the observability planes; both
+        # describes are pure snapshots, so stats() stays idempotent
+        out["step_times"] = self.straggler.describe()
+        out["obs"] = self.obs.describe()
         return out
+
+    # -- observability ----------------------------------------------------------
+
+    def _obs_sample_payload(self) -> dict:
+        """One time-series tick of the store/scheduler/energy state (the
+        mode-mix, occupancy, refresh-debt and energy-group timelines)."""
+        mode_n, mode_a = self.store.mode_mix()
+        payload = {
+            "pool_occupancy": self.store.live_bytes
+                              / max(self.store.budget_bytes, 1),
+            "mode_normal": mode_n,
+            "mode_augmented": mode_a,
+            "queue_depth": len(self.scheduler.queue),
+            "running": int(self.active.sum()),
+            "refresh_debt": self.store.max_augmented_age(self.step_idx),
+        }
+        E = imc_energy.EVENT_ENERGY_FJ
+        for (group, cls), n in self.energy_ledger.counts.items():
+            k = "energy_" + group + "_fj"
+            payload[k] = payload.get(k, 0.0) + E[cls] * n
+        return payload
+
+    def export_trace(self, path: str) -> dict:
+        """Write the Chrome trace-event JSON (perfetto-loadable)."""
+        return self.obs.export_trace(path)
+
+    def export_metrics(self, path: str) -> str:
+        """Write the Prometheus text exposition of the metrics plane."""
+        return self.obs.export_metrics(path)
 
     def generate(self, requests: list[Request]) -> dict[int, list[int]]:
         """Run all requests to completion: enqueue everything, then step

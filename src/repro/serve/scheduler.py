@@ -39,6 +39,8 @@ from typing import Optional
 
 import numpy as np
 
+from repro.obs import hooks as obs_hooks
+
 
 @dataclasses.dataclass
 class QueueEntry:
@@ -65,9 +67,11 @@ class QueueEntry:
 
 
 class Scheduler:
-    def __init__(self, store, *, max_batch: int):
+    def __init__(self, store, *, max_batch: int, obs=None):
         self.store = store
         self.max_batch = max_batch
+        # observability facade (obs/hooks.py) — a Null no-op by default
+        self.obs = obs if obs is not None else obs_hooks.NULL_OBS
         self.queue: deque[QueueEntry] = deque()
         self._admit_ticket = 0
         # per-row admission ticket: the LIFO victim order for preemption
@@ -88,6 +92,7 @@ class Scheduler:
         self.stats["requeues" if front else "enqueued"] += 1
         self.stats["peak_queue_depth"] = max(self.stats["peak_queue_depth"],
                                              len(self.queue))
+        self.obs.on_queue_depth(len(self.queue))
 
     def pop_admittable(self, step: int) -> Optional[QueueEntry]:
         """First eligible entry if the store could hold its decode state
@@ -103,6 +108,7 @@ class Scheduler:
                 return None         # eligible head blocks (no queue-jumping)
             del self.queue[i]
             self.stats["queue_wait_steps"] += step - entry.enqueue_step
+            self.obs.on_queue_depth(len(self.queue))
             return entry
         return None
 

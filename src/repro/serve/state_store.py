@@ -382,6 +382,9 @@ class AugmentedStatePool:
         self._masters: dict[int, tuple] = {}   # static-store host copies
         self._offenders: dict[str, int] = {}   # by physical unit id
         self._pin_normal = np.zeros(max_batch, bool)  # repeat offenders
+        self._obs = None        # EngineObs facade (attach_obs) — optional
+        self._live_by_mode = [0, 0]   # live slabs per mode, kept
+        # incrementally so the per-step mode-mix sample is O(1)
 
     # -- byte accounting ----------------------------------------------------
 
@@ -439,6 +442,7 @@ class AugmentedStatePool:
         self.slot_mode[row] = mode
         self.last_write[row] = step
         self.live_bytes += self._cost(mode)
+        self._live_by_mode[mode] += 1
         self.stats["peak_live_bytes"] = max(self.stats["peak_live_bytes"],
                                             self.live_bytes)
         if mode == 1:
@@ -473,6 +477,7 @@ class AugmentedStatePool:
         self._masters.pop(row, None)
         self._dirty.discard(row)
         self.live_bytes -= self._cost(int(self.slot_mode[row]))
+        self._live_by_mode[int(self.slot_mode[row])] -= 1
         self.slot_alloc[row] = False
         self.slot_mode[row] = 0
         self.last_write[row] = -1
@@ -506,6 +511,8 @@ class AugmentedStatePool:
         self.stats["maintenance_dispatches"] += 1
         self.slot_mode[row] = 1
         self.live_bytes -= self._cost(0) - self._cost(1)
+        self._live_by_mode[0] -= 1
+        self._live_by_mode[1] += 1
         pol = RefreshPolicy(retention_steps=self.retention_steps)
         pol.stamp(step)
         self.policies[row] = pol
@@ -514,6 +521,8 @@ class AugmentedStatePool:
         self.stats["augment_events"] += 1
         self.stats["augment_bytes"] += self._cost(0) + self._cost(1)
         self._tables_cache = None
+        if self._obs is not None:
+            self._obs.store_event("augment", f"slab{row}", step)
 
     def promote_slot(self, row: int, step: int) -> bool:
         """Augmented -> Normal (refresh-promote) when the budget has room."""
@@ -530,6 +539,8 @@ class AugmentedStatePool:
         self.stats["maintenance_dispatches"] += 1
         self.slot_mode[row] = 0
         self.live_bytes += cost_up
+        self._live_by_mode[1] -= 1
+        self._live_by_mode[0] += 1
         self.last_write[row] = step
         self.policies.pop(row, None)
         self._words.pop(row, None)
@@ -537,6 +548,8 @@ class AugmentedStatePool:
         self._dirty.discard(row)
         self.stats["promote_events"] += 1
         self._tables_cache = None
+        if self._obs is not None:
+            self._obs.store_event("promote", f"slab{row}", step)
         return True
 
     # -- retention / refresh --------------------------------------------------
@@ -585,10 +598,26 @@ class AugmentedStatePool:
         self.stats["refreshes"] += 1
         self.stats["refresh_bytes"] += 2 * self._cost(1)   # read + re-write
         self.last_write[row] = step
+        if self._obs is not None:
+            self._obs.store_event("restamp", f"slab{row}", step)
 
     def max_augmented_age(self, step: int) -> int:
         return max((pol.age(step) for pol in self.policies.values()),
                    default=0)
+
+    # -- observability ----------------------------------------------------------
+
+    def attach_obs(self, obs) -> None:
+        """Wire the engine's observability facade: mode transitions and
+        fault injections emit refresh/fault-lane events from here."""
+        self._obs = obs
+
+    def mode_mix(self) -> tuple[int, int]:
+        """(live Normal slabs, live Augmented slabs) — one sample of the
+        paper's 6T/8T+ mode-mix timeline. O(1): incremental counters,
+        sampled every engine step (describe() recomputes the same pair
+        by reduction as the ground-truth cross-check)."""
+        return self._live_by_mode[0], self._live_by_mode[1]
 
     # -- retention-fault injection / detection / healing ------------------------
     # (core/faults.py FaultModel; mirrors PagedKVPool's page-level
@@ -648,6 +677,8 @@ class AugmentedStatePool:
                 self._state = _corrupt_row_op(self._state, row, mask)
                 self._pending.add(row)
                 self.stats["faults_injected"] += 1
+                if self._obs is not None:
+                    self._obs.on_fault("inject", uid, step)
                 n += 1
         return n
 
@@ -856,6 +887,13 @@ class CompositeStore:
 
     def max_augmented_age(self, step: int) -> int:
         return max(p.max_augmented_age(step) for p in self.parts.values())
+
+    def attach_obs(self, obs) -> None:
+        for p in self.parts.values():
+            p.attach_obs(obs)
+
+    def mode_mix(self) -> tuple[int, int]:
+        return self._sum_counts(lambda p: p.mode_mix())
 
     # -- retention faults: fan out, part-qualified keys -------------------------
 
