@@ -48,12 +48,20 @@ def main() -> None:
                     help="CI smoke mode: each emitter runs a minimal "
                          "subset (single cells instead of full sweeps) "
                          "so the whole harness finishes in minutes")
+    ap.add_argument("--num-arrays", type=int, nargs="+",
+                    default=[1, 2, 4],
+                    help="fleet sizes the scheduler emitter sweeps "
+                         "(recorded in BENCH_manifest.json provenance)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
+    import functools
+
     import jax
 
     from benchmarks import e2e_bench, fault_bench, imc_bench, kernels_bench
     from benchmarks import obs_bench, paper_tables, scheduler_bench
+    scheduler_run = functools.partial(scheduler_bench.run_all,
+                                      num_arrays=tuple(args.num_arrays))
     # the obs emitter measures a ~1% effect against run-to-run noise, so
     # it goes FIRST: after minutes of heavy sweeps the machine is hot
     # (frequency/cache state) and the measurement floor degrades
@@ -68,8 +76,9 @@ def main() -> None:
         ("BENCH_serve.json", "end-to-end (reduced configs, CPU)",
          e2e_bench.run_all),
         ("BENCH_scheduler.json",
-         "continuous-batching scheduler (pool modes x load x arch)",
-         scheduler_bench.run_all),
+         "continuous-batching scheduler (pool modes x load x arch "
+         "x fleet size)",
+         scheduler_run),
         ("BENCH_imc.json", "in-memory compute (storage x precision)",
          imc_bench.run_all),
         ("BENCH_fault.json",
@@ -80,12 +89,23 @@ def main() -> None:
     failures: list[str] = []
     # run manifest: provenance + per-emitter wall time, written even when
     # emitters fail so a partial artifact set is still attributable
+    # fleet/mesh provenance: the scheduler fleet sweep is only
+    # reproducible given the array counts AND the device layout it
+    # partitioned (one CPU device means arrays shared it)
+    devices = jax.devices()
     manifest: dict = {
         "jax_version": jax.__version__,
         "backend": jax.default_backend(),
         "seed": args.seed,
         "tiny": args.tiny,
         "git_sha": _git_sha(root),
+        "num_arrays": list(args.num_arrays),
+        "mesh": {
+            "device_count": len(devices),
+            "devices": [str(d) for d in devices[:8]],
+            "local_mesh_shape": {"data": len(devices), "model": 1},
+            "axes": ["data", "model"],
+        },
         "emitters": {},
     }
     t_total = time.perf_counter()

@@ -24,7 +24,7 @@ from benchmarks.paper_tables import row
 from repro.configs import get_arch
 from repro.configs.base import AMCConfig
 from repro.launch.mesh import make_local_mesh
-from repro.serve import Request, ServeEngine
+from repro.serve import ArrayFleet, Request, ServeEngine
 
 # pool-mode -> kv_mode pairing: normal-only serves bf16 pages; the
 # pressure pool starts bf16 and augments to int8; always-augmented is the
@@ -187,7 +187,114 @@ def bench_arch_sweep(seed: int = 0) -> dict:
     return out
 
 
-def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
+# fleet sweep: array counts at FIXED per-array bytes (the paper's
+# array-level scaling — each array is one more SRAM array's worth of
+# serving capacity, so aggregate admitted concurrency should scale
+# near-linearly with array count)
+FLEET_ARRAYS = (1, 2, 4)
+
+
+def _drive_fleet(fleet: ArrayFleet, reqs: list[Request]) -> dict:
+    """Fleet analogue of `_drive`: submit everything at t0, step fleet
+    rounds to drain, record aggregate peak concurrency + drops."""
+    t0 = time.perf_counter()
+    for r in reqs:
+        fleet.add_request(r)
+    steps = 0
+    while fleet.has_work:
+        fleet.step_all()
+        steps += 1
+    total_s = time.perf_counter() - t0
+    outs = fleet.outputs
+    completed = sum(len(outs.get(r.id, ())) >= r.max_new_tokens
+                    for r in reqs)
+    fl = fleet.stats()["fleet"]
+    return {
+        "requests": len(reqs),
+        "completed": completed,
+        "drops": len(reqs) - completed,
+        "total_s": total_s,
+        "decode_rounds": steps,
+        "req_per_s": len(reqs) / total_s,
+        "peak_concurrency": fl["peak_concurrency"],
+        "migrations": fl["migrations"],
+        "placements_per_array": fl["placements_per_array"],
+        "per_array_peak_concurrency": [a["peak_concurrency"]
+                                       for a in fl["per_array"]],
+        "budget_bytes_per_array": fl["aggregate_budget_bytes"]
+                                  // fl["num_arrays"],
+        "outputs": {r.id: outs.get(r.id, []) for r in reqs},
+    }
+
+
+def bench_fleet_sweep(seed: int = 0, tiny: bool = False,
+                      num_arrays=FLEET_ARRAYS) -> dict:
+    """Aggregate admitted concurrency vs array count at FIXED per-array
+    byte budget, same offered request set for every fleet size (so the
+    sweep also proves token identity across fleet sizes — per-request
+    decode is batch-composition and placement invariant). Acceptance:
+    >=1.8x concurrency from 1->2 arrays and >=3.2x from 1->4, zero
+    drops everywhere."""
+    base = get_arch("qwen1.5-0.5b").reduced()
+    max_batch, max_seq, plen = 4, 32, 8
+    max_new = 4
+    load_mult = 2 if tiny else 4
+    cfg = dataclasses.replace(
+        base, amc=AMCConfig(kv_mode="normal",
+                            pool_mode="augment-on-pressure",
+                            retention_steps=4))
+    # fixed PER-ARRAY budget: two Normal pages' worth — the same
+    # pressured-allocator regime as the pool-mode sweep, per array
+    from repro.serve.state_store import make_store
+    probe = make_store(cfg, max_batch=max_batch, max_seq=max_seq)
+    budget = 2 * probe.geom.page_bytes_normal
+    del probe
+    offered = load_mult * max_batch * max(num_arrays)
+    sizes: dict = {}
+    golden = None
+    for n in num_arrays:
+        rng = np.random.default_rng(seed + 7)   # same requests per size
+        reqs = [Request(prompt=rng.integers(0, cfg.vocab, size=(plen,))
+                        .astype(np.int32), max_new_tokens=max_new, id=i)
+                for i in range(offered)]
+        fleet = ArrayFleet(cfg, num_arrays=n, placement="least-loaded",
+                           max_batch=max_batch, max_seq=max_seq,
+                           prefill_chunk=16, pool_budget_bytes=budget,
+                           seed=1)
+        res = _drive_fleet(fleet, reqs)
+        outs = res.pop("outputs")
+        if golden is None:
+            golden = outs
+        res["token_identical_to_single_array"] = outs == golden
+        sizes[str(n)] = res
+        row(f"sched_fleet_{n}arrays", res["total_s"] * 1e6,
+            f"peak_conc={res['peak_concurrency']} "
+            f"drops={res['drops']} migrations={res['migrations']} "
+            f"budget/array={budget}")
+    peak1 = max(sizes[str(num_arrays[0])]["peak_concurrency"], 1)
+    scaling = {str(n): sizes[str(n)]["peak_concurrency"] / peak1
+               for n in num_arrays}
+    acceptance = {
+        "offered_requests": offered,
+        "budget_bytes_per_array": budget,
+        "zero_drops": all(s["drops"] == 0 for s in sizes.values()),
+        "token_identity_across_sizes": all(
+            s["token_identical_to_single_array"] for s in sizes.values()),
+        "concurrency_scaling": scaling,
+        "scales_1_to_2_at_least_1p8x": scaling.get("2", 0.0) >= 1.8,
+        "scales_1_to_4_at_least_3p2x": scaling.get("4", 0.0) >= 3.2,
+    }
+    return {"config": {"arch": "qwen1.5-0.5b(reduced)",
+                       "pool_mode": "augment-on-pressure",
+                       "max_batch": max_batch, "max_seq": max_seq,
+                       "prompt_len": plen, "max_new_tokens": max_new,
+                       "placement": "least-loaded",
+                       "num_arrays": list(num_arrays)},
+            "sizes": sizes, "acceptance": acceptance}
+
+
+def run_all(*, seed: int = 0, tiny: bool = False,
+            num_arrays=FLEET_ARRAYS) -> dict:
     base = get_arch("qwen1.5-0.5b").reduced()
     max_batch, max_seq, plen, max_new = 4, 32, 8, 4
     rng = np.random.default_rng(seed)
@@ -222,7 +329,9 @@ def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
         return {"config": config, "tiny": True,
                 "modes": {"augment-on-pressure": {
                     "kv_mode": "normal", "budget_bytes": budget,
-                    "loads": {"1x": res}}}}
+                    "loads": {"1x": res}}},
+                "fleet": bench_fleet_sweep(seed, tiny=True,
+                                           num_arrays=num_arrays)}
 
     modes: dict = {}
     for pool_mode, kv_mode in MODES.items():
@@ -264,11 +373,16 @@ def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
     sweep = bench_arch_sweep(seed)
     acceptance["arch_sweep_augment_admits_more"] = {
         fam: d["augment_admits_strictly_more"] for fam, d in sweep.items()}
+    fleet = bench_fleet_sweep(seed, num_arrays=num_arrays)
+    acceptance["fleet_concurrency_scaling"] = \
+        fleet["acceptance"]["concurrency_scaling"]
+    acceptance["fleet_zero_drops"] = fleet["acceptance"]["zero_drops"]
     return {
         "config": config,
         "modes": modes,
         "refresh": bench_refresh(seed),
         "arch_sweep": sweep,
+        "fleet": fleet,
         "acceptance": acceptance,
     }
 

@@ -44,3 +44,22 @@ print(f"\ncache bytes: {bytes_n} -> {bytes_q} "
       f"({bytes_n/bytes_q:.2f}x augmentation)")
 print(f"greedy output agreement int4 vs bf16: {agree:.0%} "
       f"(lossy dynamic plane, error-aware serving tolerates it)")
+
+# -- array fleet: the same requests across 2 logical SRAM arrays ------------
+# Each array is a full engine (own byte budget, store, refresh clock,
+# fault domain); placement spreads admissions, and outputs stay
+# token-identical to the single-array int4 run above.
+from repro.serve import make_serving  # noqa: E402
+
+cfg = dataclasses.replace(cfg0, amc=AMCConfig(kv_mode="int4"))
+fleet = make_serving(cfg, num_arrays=2, placement="least-loaded",
+                     max_batch=3, max_seq=48, seed=11)
+outs_f = fleet.generate([Request(prompt=p, max_new_tokens=8, id=i)
+                         for i, p in enumerate(prompts)])
+fl = fleet.stats()["fleet"]
+print(f"\n[fleet ] arrays={fl['num_arrays']} "
+      f"peak_concurrency={fl['peak_concurrency']} "
+      f"placements_per_array={fl['placements_per_array']} "
+      f"aggregate_budget={fl['aggregate_budget_bytes']} B")
+assert outs_f == outs_q, "fleet decode must be token-identical"
+print("fleet vs single-array int4 outputs: identical")

@@ -144,6 +144,19 @@ class AMCConfig:
     # bit-serial IMC matmuls at that activation precision (the dynamic-
     # plane read of the 8T duality), "same" drafts with the full config.
     spec_draft_impl: str = "dequant"
+    # -- array fleet (serve/fleet.py) ---------------------------------------
+    # Number of logical SRAM arrays the serving stack instantiates. 1 is
+    # the classic single-array `ServeEngine`; above 1 an `ArrayFleet`
+    # runs one engine per array — each with its OWN byte budget, state
+    # store, refresh clock, fault domain and energy ledger — over a
+    # partition of the jax device mesh (arrays share devices when there
+    # are fewer devices than arrays).
+    num_arrays: int = 1
+    # Fleet admission policy (serve/placement.py): "least-loaded" (fewest
+    # running+queued requests), "budget-headroom" (most free bytes), or
+    # "affinity" (prompt-prefix hash -> preferred array for shared-prefix
+    # locality, falling back to least-loaded under pressure).
+    placement: str = "least-loaded"
     # -- observability (obs/) ------------------------------------------------
     # Chrome-trace span/instant recording of the full request lifecycle
     # (one perfetto lane per request + engine/scheduler/refresh/fault

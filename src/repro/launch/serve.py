@@ -11,7 +11,7 @@ import numpy as np
 
 from repro.configs import get_arch
 from repro.launch import mesh as mesh_lib
-from repro.serve import Request, ServeEngine
+from repro.serve import ArrayFleet, Request, make_serving
 
 
 def main():
@@ -82,30 +82,40 @@ def main():
     ap.add_argument("--obs-sample-every", type=int, default=None,
                     help="time-series sampling stride in engine steps "
                          "(default 1: every step)")
+    ap.add_argument("--num-arrays", type=int, default=None,
+                    help="logical SRAM arrays to serve across (>1 runs "
+                         "an ArrayFleet: per-array budgets, refresh "
+                         "clocks, fault domains and trace lanes)")
+    ap.add_argument("--placement", default=None,
+                    choices=["least-loaded", "budget-headroom", "affinity"],
+                    help="fleet admission policy (default: "
+                         "cfg.amc.placement = least-loaded)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
     if args.reduced:
         cfg = cfg.reduced()
     mesh = mesh_lib.make_local_mesh()
-    eng = ServeEngine(cfg, mesh, max_batch=args.max_batch,
-                      max_seq=args.max_seq, pool_mode=args.pool_mode,
-                      pool_budget_bytes=args.pool_budget_bytes,
-                      retention_steps=args.retention_steps,
-                      matmul_impl=args.matmul_impl,
-                      imc_abits=args.imc_abits,
-                      state_bits=args.state_bits,
-                      spec_k=args.spec_k,
-                      spec_draft_impl=args.spec_draft_impl,
-                      fault_rate=args.fault_rate,
-                      fault_seed=args.fault_seed,
-                      array_loss_rate=args.array_loss_rate,
-                      max_retries=args.max_retries,
-                      integrity_check=(False if args.no_integrity_check
-                                       else None),
-                      trace=(True if args.trace_out else None),
-                      metrics=(True if args.metrics_out else None),
-                      obs_sample_every=args.obs_sample_every)
+    eng = make_serving(cfg, mesh, num_arrays=args.num_arrays,
+                       placement=args.placement,
+                       max_batch=args.max_batch,
+                       max_seq=args.max_seq, pool_mode=args.pool_mode,
+                       pool_budget_bytes=args.pool_budget_bytes,
+                       retention_steps=args.retention_steps,
+                       matmul_impl=args.matmul_impl,
+                       imc_abits=args.imc_abits,
+                       state_bits=args.state_bits,
+                       spec_k=args.spec_k,
+                       spec_draft_impl=args.spec_draft_impl,
+                       fault_rate=args.fault_rate,
+                       fault_seed=args.fault_seed,
+                       array_loss_rate=args.array_loss_rate,
+                       max_retries=args.max_retries,
+                       integrity_check=(False if args.no_integrity_check
+                                        else None),
+                       trace=(True if args.trace_out else None),
+                       metrics=(True if args.metrics_out else None),
+                       obs_sample_every=args.obs_sample_every)
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab,
                                         size=(args.prompt_len,))
@@ -115,6 +125,31 @@ def main():
     outs = eng.generate(reqs)
     for rid in sorted(outs):
         print(f"[serve] req {rid}: {outs[rid]}")
+    if isinstance(eng, ArrayFleet):
+        st = eng.stats()
+        fl = st["fleet"]
+        print(f"[serve] fleet arrays={fl['num_arrays']} "
+              f"placement={fl['placement']} "
+              f"peak_concurrency={fl['peak_concurrency']} "
+              f"migrations={fl['migrations']} "
+              f"array_losses={fl['array_losses']} "
+              f"placements_per_array={fl['placements_per_array']}")
+        for a in fl["per_array"]:
+            print(f"[serve]   array {a['array']}: alive={a['alive']} "
+                  f"peak_conc={a['peak_concurrency']} "
+                  f"occupancy={a['occupancy']:.2f} "
+                  f"mode(norm/aug)={a['mode_normal']}/"
+                  f"{a['mode_augmented']} "
+                  f"refresh_debt={a['refresh_debt']} "
+                  f"tp={a['tensor_parallel']}")
+        if args.trace_out:
+            trace = eng.export_trace(args.trace_out)
+            print(f"[serve] trace: {len(trace['traceEvents'])} events "
+                  f"({fl['num_arrays']} array lanes) -> {args.trace_out}")
+        if args.metrics_out:
+            eng.export_metrics(args.metrics_out)
+            print(f"[serve] metrics (fleet-wide) -> {args.metrics_out}")
+        return
     print(f"[serve] kv_mode={eng.cfg.amc.kv_mode} "
           f"(augmented KV capacity factor "
           f"{ {'normal':1,'int8':2,'int4':4}[eng.cfg.amc.kv_mode] }x)")

@@ -21,6 +21,19 @@ def write_chrome_trace(tracer, path: str) -> dict:
     return obj
 
 
+def merge_chrome_traces(objs: list) -> dict:
+    """Merge several Chrome trace objects (one per array pid) into one:
+    metadata events first, timed events re-sorted into one global
+    monotonic timeline. Only meaningful when the tracers shared an epoch
+    (ArrayFleet passes one), so their timestamps are comparable."""
+    meta, timed = [], []
+    for obj in objs:
+        for e in obj.get("traceEvents", ()):
+            (meta if e.get("ph") == "M" else timed).append(e)
+    timed.sort(key=lambda e: e.get("ts", 0.0))
+    return {"traceEvents": meta + timed, "displayTimeUnit": "ms"}
+
+
 def write_prometheus(registry, path: str) -> str:
     text = registry.prometheus_text()
     with open(path, "w") as f:

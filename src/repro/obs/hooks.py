@@ -56,13 +56,20 @@ class EngineObs:
     enabled = True
 
     def __init__(self, *, trace: bool = True, metrics: bool = True,
-                 sample_every: int = 1, clock: Optional[Callable] = None):
+                 sample_every: int = 1, clock: Optional[Callable] = None,
+                 pid: int = 0, process: str = "amc-serve",
+                 epoch: Optional[float] = None, registry=None):
         self._clock = clock if clock is not None else time.perf_counter
         self.trace_on = trace
         self.metrics_on = metrics
         self.sample_every = max(int(sample_every), 1)
-        self.tracer = Tracer(clock=clock) if trace else NullTracer()
-        self.metrics = MetricsRegistry()
+        # pid/process/epoch: an ArrayFleet gives each array its own trace
+        # pid ("array N" process lane) on ONE shared time base; `registry`
+        # shares a single metrics plane across arrays (fleet-wide
+        # histograms) while traces stay per-array
+        self.tracer = (Tracer(clock=clock, pid=pid, process=process,
+                              epoch=epoch) if trace else NullTracer())
+        self.metrics = registry if registry is not None else MetricsRegistry()
         self._reqs: dict[int, _Req] = {}
         # pre-bound hot-path histograms: the decode loop observes these
         # every step/token, so skip the registry name lookup there
@@ -180,6 +187,24 @@ class EngineObs:
     def on_failed(self, rid: int, step: int) -> None:
         self._finish(rid, step, "failed")
 
+    def on_handoff(self, rid: int, step: int, kind: str) -> None:
+        """Request leaves THIS array (fleet migration / array-loss
+        drain): close its open spans on this pid — the lifecycle
+        continues on the destination array's lane. No latency is
+        observed here (the request is not finished, just elsewhere)."""
+        rec = self._reqs.get(rid)
+        if rec is None or rec.done:
+            return
+        if rec.queue_span:
+            self.tracer.end(rec.queue_span, outcome=kind)
+            rec.queue_span = 0
+        if rec.active_span:
+            self.tracer.end(rec.active_span, outcome=kind, step=step)
+            rec.active_span = 0
+        self.tracer.instant(rec.tid, kind, step=step, tokens=rec.tokens)
+        self.metrics.inc(f"requests_{kind}")
+        rec.done = True
+
     # -- engine phases ----------------------------------------------------------
 
     def step_span(self, step: int, kind: str):
@@ -198,6 +223,15 @@ class EngineObs:
 
     def on_queue_depth(self, depth: int) -> None:
         self.metrics.gauge("queue_depth", depth)
+
+    def on_placement(self, rid: int, array_id: int, policy: str, kind: str,
+                     step: int) -> None:
+        """Fleet placement decision landing a request on THIS array's
+        scheduler lane: kind = admit | migrate | drain."""
+        self.tracer.instant(SCHED_TRACK, "placement", req=rid,
+                            array=array_id, policy=policy, kind=kind,
+                            step=step)
+        self.metrics.inc(f"placement_{kind}")
 
     # -- refresh / store maintenance -------------------------------------------
 
@@ -317,6 +351,9 @@ class NullEngineObs:
     def on_failed(self, rid, step):
         pass
 
+    def on_handoff(self, rid, step, kind):
+        pass
+
     def step_span(self, step, kind):
         return _NULL_CTX
 
@@ -330,6 +367,9 @@ class NullEngineObs:
         pass
 
     def on_queue_depth(self, depth):
+        pass
+
+    def on_placement(self, rid, array_id, policy, kind, step):
         pass
 
     def on_refresh_pass(self, n_units, step):
@@ -367,9 +407,14 @@ class NullEngineObs:
 NULL_OBS = NullEngineObs()
 
 
-def make_engine_obs(amc_cfg, *, clock=None):
-    """AMCConfig -> the engine's obs facade (Null unless a plane is on)."""
+def make_engine_obs(amc_cfg, *, clock=None, pid=0, process="amc-serve",
+                    epoch=None, registry=None):
+    """AMCConfig -> the engine's obs facade (Null unless a plane is on).
+    `pid`/`process`/`epoch`/`registry` are the fleet hooks: per-array
+    trace lanes on one time base, one shared metrics registry."""
     if not (amc_cfg.trace or amc_cfg.metrics):
         return NULL_OBS
     return EngineObs(trace=amc_cfg.trace, metrics=amc_cfg.metrics,
-                     sample_every=amc_cfg.obs_sample_every, clock=clock)
+                     sample_every=amc_cfg.obs_sample_every, clock=clock,
+                     pid=pid, process=process, epoch=epoch,
+                     registry=registry)

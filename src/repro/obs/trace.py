@@ -79,10 +79,16 @@ class Tracer:
 
     enabled = True
 
-    def __init__(self, *, clock=None, pid: int = 0):
+    def __init__(self, *, clock=None, pid: int = 0,
+                 epoch: Optional[float] = None,
+                 process: str = "amc-serve"):
         self._clock = clock if clock is not None else time.perf_counter
-        self._t0 = self._clock()
+        # `epoch` (clock units) lets several tracers share one time base:
+        # an ArrayFleet passes the same epoch to every array's tracer so
+        # the merged multi-pid trace has comparable timestamps
+        self._t0 = self._clock() if epoch is None else epoch
         self.pid = pid
+        self.process = process
         self.events: list[dict] = []
         self._open: dict[int, tuple] = {}   # span id -> (tid, name, ts, args)
         self._next_id = 0
@@ -155,7 +161,7 @@ class Tracer:
                            "args": {**args, "open_at_export": True}})
         events.sort(key=lambda e: e["ts"])
         meta = [{"name": "process_name", "ph": "M", "pid": self.pid,
-                 "tid": 0, "args": {"name": "amc-serve"}}]
+                 "tid": 0, "args": {"name": self.process}}]
         meta += [{"name": "thread_name", "ph": "M", "pid": self.pid,
                   "tid": tid, "args": {"name": name}}
                  for tid, name in sorted(self._track_names.items())]

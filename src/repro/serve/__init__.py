@@ -1,9 +1,13 @@
 from repro.serve.cache_pool import PagedKVPool
 from repro.serve.engine import Request, ServeEngine
+from repro.serve.fleet import ArrayFleet, make_serving
+from repro.serve.placement import (ArrayView, PlacementPolicy, make_policy,
+                                   partition_devices)
 from repro.serve.scheduler import QueueEntry, Scheduler
 from repro.serve.state_store import (AugmentedStatePool, CompositeStore,
                                      make_store)
 
 __all__ = ["Request", "ServeEngine", "PagedKVPool", "Scheduler",
            "QueueEntry", "AugmentedStatePool", "CompositeStore",
-           "make_store"]
+           "make_store", "ArrayFleet", "make_serving", "ArrayView",
+           "PlacementPolicy", "make_policy", "partition_devices"]

@@ -126,7 +126,8 @@ class ServeEngine:
                  fault_pin_threshold: Optional[int] = None,
                  trace: Optional[bool] = None,
                  metrics: Optional[bool] = None,
-                 obs_sample_every: Optional[int] = None):
+                 obs_sample_every: Optional[int] = None,
+                 obs=None):
         # engine-level AMC knobs override the config (e.g. serve a dense
         # checkpoint with ternary weights without touching the arch file)
         fault_overrides = (fault_rate, fault_seed, array_loss_rate,
@@ -195,8 +196,12 @@ class ServeEngine:
                 pages_packed=pool_pages_packed,
                 retention_steps=retention_steps)
         # observability facade (obs/): Null unless a plane is switched on,
-        # so every hook below is a constant no-op on the default path
-        self.obs = obs_hooks.make_engine_obs(cfg.amc)
+        # so every hook below is a constant no-op on the default path.
+        # A pre-built facade may be injected (`obs=`): the ArrayFleet
+        # passes per-array facades that share one trace epoch and one
+        # metrics registry but record on distinct trace pids.
+        self.obs = obs if obs is not None else obs_hooks.make_engine_obs(
+            cfg.amc)
         if self.obs.enabled:
             self.store.attach_obs(self.obs)
         self.scheduler = Scheduler(self.store, max_batch=max_batch,
@@ -464,6 +469,61 @@ class ServeEngine:
         self.obs.on_preempt(entry.req.id, self.step_idx, "capacity")
         self.scheduler.enqueue(resumed, front=True)
         self.scheduler.stats["preemptions"] += 1
+
+    # -- fleet hand-off (serve/fleet.py drives these) ---------------------------
+
+    def adopt_request(self, entry: QueueEntry, generated: list[int], *,
+                      front: bool = False) -> None:
+        """Take over a request mid-flight from another array: seed the
+        output list with the tokens it already generated (the resume
+        prompt in `entry.prompt` contains them, so `_start_row`'s
+        setdefault keeps the seed and a later preemption rebuilds from
+        base_prompt + outputs without duplication), then enqueue. The
+        caller (ArrayFleet) moves each request id between at most one
+        engine's books at a time."""
+        rid = entry.req.id
+        if rid in self.outputs or any(
+                e.req.id == rid for e in self.scheduler.queue):
+            raise ValueError(
+                f"request id {rid} already lives on this array — the "
+                f"fleet must pop it from the source array first")
+        self.outputs[rid] = list(generated)
+        self.obs.on_enqueue(rid, int(len(entry.prompt)), entry.remaining,
+                            self.step_idx)
+        self.scheduler.enqueue(entry, front=front)
+
+    def drain_requests(self) -> list[tuple[QueueEntry, list[int]]]:
+        """Array-loss drain for fleet mode: release every running row and
+        empty the queue, handing back [(entry, generated-so-far)] ready
+        for `adopt_request` on a surviving array. `fault_retries` budgets
+        are PRESERVED, never charged — losing the array is not the
+        request's fault (the cross-array extension of the single-array
+        `_recover_array_loss` guarantee)."""
+        drained: list[tuple[QueueEntry, list[int]]] = []
+        for row in np.flatnonzero(self.active):
+            entry = self._slot_entry[int(row)]
+            gen = self.outputs.pop(entry.req.id, [])
+            resumed = QueueEntry(
+                req=entry.req,
+                prompt=np.concatenate([entry.base_prompt,
+                                       np.asarray(gen, np.int32)]),
+                base_prompt=entry.base_prompt,
+                remaining=int(self.remaining[row]),
+                resumed=True, enqueue_step=self.step_idx,
+                fault_retries=entry.fault_retries,
+                not_before=entry.not_before)
+            self.scheduler.release_row(int(row))
+            self.active[row] = False
+            self.slot_req[row] = None
+            self._slot_entry[row] = None
+            self.obs.on_handoff(entry.req.id, self.step_idx, "drained")
+            drained.append((resumed, gen))
+        while self.scheduler.queue:
+            e = self.scheduler.queue.popleft()
+            self.obs.on_handoff(e.req.id, self.step_idx, "drained")
+            drained.append((e, self.outputs.pop(e.req.id, [])))
+        self.obs.on_queue_depth(0)
+        return drained
 
     # -- prefill ---------------------------------------------------------------
 

@@ -41,6 +41,34 @@ def test_rules_head_tp_disabled_for_indivisible_heads():
     assert r3.resolve("heads") == ("model",)
 
 
+def test_rules_heads_degrade_to_replication_on_fleet_submeshes():
+    """Per-array fleet meshes put the array's devices on "model"; heads
+    shard TP only where the count divides that axis and replicate
+    otherwise — never a crash, never a silent mis-shard."""
+    cfg = get_arch("granite-3-2b")                        # 32 heads
+    for model_axis, want in [(1, ("model",)), (2, ("model",)),
+                             (4, ("model",)), (3, None), (5, None),
+                             (7, None)]:
+        r = _rules(cfg, "train_4k", {"data": 1, "model": model_axis})
+        assert r.resolve("heads") == want, \
+            f"32 heads over model={model_axis}: got {r.resolve('heads')}"
+    # indivisible head count degrades even on a power-of-two axis
+    r = _rules(get_arch("minicpm-2b"), "train_4k",        # 36 heads
+               {"data": 1, "model": 8})
+    assert r.resolve("heads") is None
+    assert r.resolve("mlp") == ("model",)                  # 5760 % 8 == 0
+
+
+def test_rules_single_device_array_replicates_trivially():
+    """The over-host fleet case: every logical array shares one CPU
+    device, model axis 1 — everything "shards" onto the single device
+    (resolve returns the axis; the mesh makes it a no-op)."""
+    r = _rules(get_arch("granite-3-2b"), "train_4k",
+               {"data": 1, "model": 1})
+    assert r.resolve("heads") == ("model",)
+    assert r.resolve("mlp") == ("model",)
+
+
 def test_rules_kv_vs_cache_seq_exclusive():
     # kv=16 divides 16 -> kv TP, no cache seq sharding
     r = _rules(get_arch("qwen1.5-0.5b"), "decode_32k")
