@@ -1,0 +1,189 @@
+"""Shared-prefix page-reuse bench: multi-turn chat sessions over one
+common system prompt, prefix cache ON vs OFF — the BENCH_prefix.json
+payload.
+
+Workload: S sessions, each T turns, all sharing one page-aligned system
+prompt. Turn k's prompt is the session's full context (system + every
+user/assistant turn so far) — the production multi-turn shape where the
+whole history is re-offered per request. With the prefix cache ON the
+engine maps the cached run's physical pages by refcount and prefills
+only the tail; OFF re-prefills everything.
+
+Acceptance (asserted here, so a regression fails the bench run):
+  * decode output is TOKEN-IDENTICAL between the two engines — sharing
+    pages changes where prefill reads from, never what decode computes;
+  * second and later requests over the 100%-shared system prompt incur
+    ZERO prefill dispatches for the shared run (only the tail's);
+  * at >= 4 sessions the cached engine issues >= 2x fewer total prefill
+    dispatches than the no-sharing engine.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+from benchmarks.paper_tables import row
+from repro.configs import get_arch
+from repro.launch.mesh import make_local_mesh
+from repro.serve import Request, ServeEngine
+
+PAGE, CHUNK = 8, 8
+SYS_TOKENS = 32             # 4 full pages — 100% page-aligned shared run
+USER_TOKENS, MAX_NEW = 6, 4
+
+
+def _session_prompts(rng, cfg, sessions: int, turns: int):
+    """Per-session token streams: a common system prompt + per-session
+    user turns (generated tokens are appended by the driver)."""
+    system = rng.integers(0, cfg.vocab, size=(SYS_TOKENS,)).astype(np.int32)
+    users = [[rng.integers(0, cfg.vocab, size=(USER_TOKENS,))
+              .astype(np.int32) for _ in range(turns)]
+             for _ in range(sessions)]
+    return system, users
+
+
+def _drive_chat(eng: ServeEngine, system, users, turns: int) -> dict:
+    """Run every session's turns to completion (turn k+1 re-offers the
+    session's full context), recording prefill dispatches, TTFT proxy
+    (admission wall time — where prefill runs), and peak bytes shared."""
+    sessions = len(users)
+    context = [system.copy() for _ in range(sessions)]
+    outputs: dict[int, list[int]] = {}
+    per_request_prefill: list[int] = []
+    ttft_s: list[float] = []
+    peak_shared = 0
+    rid = 0
+    for turn in range(turns):
+        for s in range(sessions):
+            context[s] = np.concatenate([context[s], users[s][turn]])
+            before = eng.prefill_dispatch_count
+            t0 = time.perf_counter()
+            eng.add_request(Request(prompt=context[s].copy(),
+                                    max_new_tokens=MAX_NEW, id=rid))
+            ttft_s.append(time.perf_counter() - t0)
+            per_request_prefill.append(eng.prefill_dispatch_count - before)
+            if eng.store.kind == "paged":
+                peak_shared = max(peak_shared, eng.store.bytes_shared())
+            while eng.active.any() or eng._queue:
+                eng.step_all()
+            gen = np.asarray(eng.outputs[rid], np.int32)
+            context[s] = np.concatenate([context[s], gen])
+            outputs[rid] = list(map(int, gen))
+            rid += 1
+    st = eng.stats()
+    return {
+        "requests": rid,
+        "outputs": outputs,
+        "prefill_dispatches": eng.prefill_dispatch_count,
+        "per_request_prefill_dispatches": per_request_prefill,
+        "ttft_s_mean": float(np.mean(ttft_s)),
+        "ttft_s_p99": float(np.percentile(ttft_s, 99)),
+        "peak_bytes_shared": peak_shared,
+        "prefix": st["prefix"],
+    }
+
+
+def bench_chat(seed: int, sessions: int, turns: int = 2,
+               arch: str = "qwen1.5-0.5b", entries: int = 8) -> dict:
+    """One ON-vs-OFF cell at `sessions` concurrent chat sessions."""
+    base = get_arch(arch).reduced()
+    cfg = dataclasses.replace(
+        base, amc=dataclasses.replace(base.amc, page_size=PAGE))
+    rng = np.random.default_rng(seed + 11)
+    system, users = _session_prompts(rng, cfg, sessions, turns)
+    runs = {}
+    for label, pc in (("shared", entries), ("baseline", 0)):
+        eng = ServeEngine(cfg, make_local_mesh(), max_batch=4,
+                          max_seq=256, prefill_chunk=CHUNK, seed=1,
+                          prefix_cache=pc)
+        runs[label] = _drive_chat(eng, system, users, turns)
+    on, off = runs["shared"], runs["baseline"]
+    assert on["outputs"] == off["outputs"], (
+        "prefix sharing changed decode output — COW / page aliasing bug")
+    # 2nd+ first-turn requests fully share the system prompt: their
+    # prefill covers ONLY the tail past it, never the shared run
+    tail_fed = SYS_TOKENS + USER_TOKENS - 1 - SYS_TOKENS   # fed minus run
+    expect_tail = -(-max(tail_fed, 0) // CHUNK)
+    first_turn = on["per_request_prefill_dispatches"][1:sessions]
+    assert all(d == expect_tail for d in first_turn), (
+        f"shared-run prefill not skipped: {first_turn} vs {expect_tail}")
+    saved = on["prefix"]["dispatches_saved"]
+    assert saved > 0, "prefix cache saved zero dispatches on a hit workload"
+    speedup = off["prefill_dispatches"] / max(on["prefill_dispatches"], 1)
+    res = {
+        "sessions": sessions, "turns": turns,
+        "prefill_dispatches_shared": on["prefill_dispatches"],
+        "prefill_dispatches_baseline": off["prefill_dispatches"],
+        "prefill_dispatch_reduction_x": speedup,
+        "dispatches_saved": saved,
+        "hit_rate": on["prefix"]["hit_rate"],
+        "hits": on["prefix"]["hits"],
+        "misses": on["prefix"]["misses"],
+        "cow_events": on["prefix"]["cow_events"],
+        "peak_bytes_shared": on["peak_bytes_shared"],
+        "ttft_s_mean_shared": on["ttft_s_mean"],
+        "ttft_s_mean_baseline": off["ttft_s_mean"],
+        "token_identical": True,
+        "zero_shared_run_prefill_on_hits": True,
+    }
+    row(f"prefix_chat_{sessions}sessions", on["ttft_s_mean"] * 1e6,
+        f"prefill_disp={on['prefill_dispatches']} "
+        f"(baseline={off['prefill_dispatches']}, "
+        f"{speedup:.2f}x fewer) hit_rate={res['hit_rate']:.2f} "
+        f"saved={saved} cow={res['cow_events']} "
+        f"bytes_shared_peak={res['peak_bytes_shared']}")
+    return res
+
+
+def bench_moe_identity(seed: int) -> dict:
+    """Decode token-identity pin on the MoE family: routed experts read
+    the same shared pages, so sharing must stay output-invariant there
+    too (2 sessions, 1 turn — identity, not throughput)."""
+    res = bench_chat(seed, sessions=2, turns=1,
+                     arch="qwen3-moe-30b-a3b", entries=4)
+    return {"token_identical": res["token_identical"],
+            "dispatches_saved": res["dispatches_saved"]}
+
+
+def run_all(*, seed: int = 0, tiny: bool = False) -> dict:
+    config = {"arch": "qwen1.5-0.5b(reduced)", "page_size": PAGE,
+              "prefill_chunk": CHUNK, "system_tokens": SYS_TOKENS,
+              "user_tokens": USER_TOKENS, "max_new_tokens": MAX_NEW}
+    sweeps = {}
+    sessions = (4,) if tiny else (1, 4, 8)
+    for s in sessions:
+        sweeps[str(s)] = bench_chat(seed, sessions=s)
+    at4 = sweeps.get("4")
+    acceptance = {
+        "token_identity": all(c["token_identical"] for c in sweeps.values()),
+        "zero_shared_run_prefill_on_hits": all(
+            c["zero_shared_run_prefill_on_hits"] for c in sweeps.values()),
+        "dispatches_saved_positive": all(
+            c["dispatches_saved"] > 0 for c in sweeps.values()),
+        "reduction_at_4_sessions_x":
+            at4["prefill_dispatch_reduction_x"] if at4 else None,
+        "at_least_2x_fewer_at_4_sessions":
+            bool(at4 and at4["prefill_dispatch_reduction_x"] >= 2.0),
+    }
+    assert acceptance["at_least_2x_fewer_at_4_sessions"], (
+        f"prefix cache below 2x prefill-dispatch reduction at 4 sessions: "
+        f"{at4 and at4['prefill_dispatch_reduction_x']:.2f}x")
+    out = {"config": config, "sessions": sweeps, "acceptance": acceptance}
+    if not tiny:
+        out["moe_identity"] = bench_moe_identity(seed)
+        acceptance["moe_token_identity"] = \
+            out["moe_identity"]["token_identical"]
+    return out
+
+
+def main() -> None:
+    import json
+    print("name,us_per_call,derived")
+    payload = run_all()
+    print(json.dumps(payload["acceptance"], indent=2, default=str))
+
+
+if __name__ == "__main__":
+    main()

@@ -8,9 +8,12 @@ sweep), BENCH_paper_tables.json (the Tables I-VI analog rows, structured)
 BENCH_imc.json (storage matrix x activation precision: modeled
 energy/token + throughput), BENCH_fault.json (retention-fault chaos
 sweep: injection rates x recovery outcomes, with token identity to the
-fault-free run asserted) and BENCH_obs.json (observability overhead vs
-the disabled Null facade + trace/metrics cross-validation) so the
-serving perf trajectory is tracked across PRs. BENCH_manifest.json
+fault-free run asserted), BENCH_obs.json (observability overhead vs
+the disabled Null facade + trace/metrics cross-validation) and
+BENCH_prefix.json (shared-prefix page reuse: prefill dispatches saved,
+hit rate, bytes shared, with decode token identity to the
+sharing-disabled run asserted) so the serving perf trajectory is
+tracked across PRs. BENCH_manifest.json
 records run provenance: jax version/backend, seed, git sha and
 per-emitter wall time.
 
@@ -59,7 +62,8 @@ def main() -> None:
     import jax
 
     from benchmarks import e2e_bench, fault_bench, imc_bench, kernels_bench
-    from benchmarks import obs_bench, paper_tables, scheduler_bench
+    from benchmarks import obs_bench, paper_tables, prefix_bench
+    from benchmarks import scheduler_bench
     scheduler_run = functools.partial(scheduler_bench.run_all,
                                       num_arrays=tuple(args.num_arrays))
     # the obs emitter measures a ~1% effect against run-to-run noise, so
@@ -84,6 +88,9 @@ def main() -> None:
         ("BENCH_fault.json",
          "retention-fault chaos (rates x recovery, token identity)",
          fault_bench.run_all),
+        ("BENCH_prefix.json",
+         "shared-prefix page reuse (multi-turn chat, COW + identity)",
+         prefix_bench.run_all),
     )
     root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     failures: list[str] = []

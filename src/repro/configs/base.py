@@ -99,6 +99,17 @@ class AMCConfig:
     # the budget has room (augment-on-pressure only); otherwise they are
     # re-written in place (restamped) and the traffic is accounted.
     refresh_promote: bool = True
+    # -- shared-prefix page reuse (serve/prefix.py) -------------------------
+    # Capacity of the engine's PrefixIndex in cached prefix entries. When
+    # > 0 (paged stores only) prompt prefixes are hashed page-granularly
+    # into a share band of the pool: later requests with the same prefix
+    # map the SAME physical pages into their page tables (refcounted) and
+    # prefill only the tail; divergence copies-on-write the boundary page.
+    # Cold shared prefixes DEMOTE Normal -> Augmented under byte pressure
+    # instead of being evicted (the dual-context ROM-augmented 8T RAM,
+    # arXiv:2304.02908) and are only freed at refcount 0. 0 disables the
+    # index entirely (no share band, zero hot-path cost).
+    prefix_cache: int = 0
     # -- augmented recurrent-state store (serve/state_store.py) -------------
     # Packed width of an Augmented recurrent-state slab (SSM/LRU/conv state
     # of ssm/hybrid rows, static prefix KV of vlm rows): int8 stores one

@@ -90,6 +90,15 @@ def main():
                     choices=["least-loaded", "budget-headroom", "affinity"],
                     help="fleet admission policy (default: "
                          "cfg.amc.placement = least-loaded)")
+    ap.add_argument("--prefix-cache", type=int, default=None,
+                    help="shared-prefix page-reuse entries per array "
+                         "(paged stores; >0 maps repeated prompt "
+                         "prefixes to the same physical pages and "
+                         "prefills only the tail; 0 disables)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="prepend this many common system-prompt tokens "
+                         "to every synthetic request (the prefix-cache "
+                         "hit workload)")
     args = ap.parse_args()
 
     cfg = get_arch(args.arch)
@@ -115,11 +124,15 @@ def main():
                                         else None),
                        trace=(True if args.trace_out else None),
                        metrics=(True if args.metrics_out else None),
-                       obs_sample_every=args.obs_sample_every)
+                       obs_sample_every=args.obs_sample_every,
+                       prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, cfg.vocab,
-                                        size=(args.prompt_len,))
-                    .astype(np.int32),
+    system = rng.integers(0, cfg.vocab,
+                          size=(args.shared_prefix,)).astype(np.int32)
+    reqs = [Request(prompt=np.concatenate(
+                        [system, rng.integers(0, cfg.vocab,
+                                              size=(args.prompt_len,))
+                         .astype(np.int32)]),
                     max_new_tokens=args.max_new, id=i)
             for i in range(args.requests)]
     outs = eng.generate(reqs)
@@ -177,6 +190,14 @@ def main():
           f"augments={st['augment_events']} refreshes={st['refreshes']} "
           f"preemptions={st['preemptions']} "
           f"queue_peak={st['scheduler']['peak_queue_depth']}")
+    pf = st["prefix"]
+    if pf["enabled"]:
+        print(f"[serve] prefix_cache entries={pf['capacity']} "
+              f"hits={pf['hits']} misses={pf['misses']} "
+              f"hit_rate={pf['hit_rate']:.2f} "
+              f"dispatches_saved={pf['dispatches_saved']} "
+              f"cow={pf['cow_events']} demotions={pf['demotions']} "
+              f"evictions={pf['evictions']}")
     fl = st["faults"]
     if fl["enabled"]:
         print(f"[serve] faults injected={fl['faults_injected']} "

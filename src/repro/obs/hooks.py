@@ -243,9 +243,20 @@ class EngineObs:
 
     def store_event(self, kind: str, unit: str, step: int) -> None:
         """Mode transitions / refresh outcomes from the state stores:
-        augment | promote | restamp | decommission."""
+        augment | promote | restamp | decommission | demote | cow
+        (demote = shared-prefix page pressed Normal -> Augmented instead
+        of evicted; cow = copy-on-write divergence page copy)."""
         self.tracer.instant(REFRESH_TRACK, kind, unit=unit, step=step)
         self.metrics.inc(f"store_{kind}")
+
+    def on_prefix(self, kind: str, rid: int, tokens: int, step: int) -> None:
+        """Prefix-cache outcome for a request admission: kind =
+        hit | miss, with the matched token count on hits."""
+        self.tracer.instant(SCHED_TRACK, f"prefix_{kind}", req=rid,
+                            tokens=tokens, step=step)
+        self.metrics.inc(f"prefix_{kind}")
+        if tokens:
+            self.metrics.inc("prefix_tokens_shared", tokens)
 
     # -- faults / healing --------------------------------------------------------
 
@@ -376,6 +387,9 @@ class NullEngineObs:
         pass
 
     def store_event(self, kind, unit, step):
+        pass
+
+    def on_prefix(self, kind, rid, tokens, step):
         pass
 
     def fault_span(self, step):

@@ -169,8 +169,14 @@ class PagedKVPool:
         # host page tables (numpy; mirrored to device per dispatch).
         # Rows [0, B) are the decode band; with prefix_tokens > 0 rows
         # [B, 2B) are each slot's static prefix band (table width covers
-        # the wider of the two bands).
+        # the wider of the two bands). With prefix_cache > 0 a SHARE band
+        # of `share_entries` rows follows: each row anchors one cached
+        # prompt prefix whose pages are refcount-shared into decode rows
+        # (serve/prefix.py owns the hash index; the pool owns the pages).
         n_rows = 2 * B if self.prefix_pages else B
+        self.share_entries = int(getattr(a, "prefix_cache", 0))
+        self._share_base = n_rows
+        n_rows += self.share_entries
         tw = max(maxP, self.prefix_pages)
         self.table_width = tw
         self.page_table = np.zeros((n_rows, tw), np.int32)
@@ -190,7 +196,14 @@ class PagedKVPool:
             "faults_injected": 0, "faults_detected": 0, "faults_masked": 0,
             "refresh_misses": 0, "integrity_checks": 0, "pinned_normal": 0,
             "pages_decommissioned": 0,
+            "cow_events": 0, "cow_bytes": 0, "prefix_demotions": 0,
+            "prefix_evictions": 0,
         }
+        # physical-page reference counts, keyed (mode, phys): every
+        # allocated page carries one; shared-prefix aliases raise it.
+        # live_bytes charges each PHYSICAL page once — aliases are free.
+        self._refcount: dict[tuple[int, int], int] = {}
+        self._prefix_index = None   # serve/prefix.py PrefixIndex (optional)
         # retention-fault machinery (core/faults.py) — inert until a
         # FaultModel is attached; all dicts stay empty at fault_rate=0
         self._fm: Optional[F.FaultModel] = None
@@ -218,17 +231,23 @@ class PagedKVPool:
     def can_admit_tokens(self, n_tokens: int) -> bool:
         """Admission check: could `n_tokens` more tokens be stored right
         now, augmenting cold pages if the policy allows? Counts the
-        static prefix band's pages on top of the prompt's own."""
+        static prefix band's pages on top of the prompt's own, and the
+        IDLE shared-prefix pages (cached entries no live request maps)
+        as reclaimable headroom — the allocator evicts those entries at
+        refcount 0 before failing."""
         pages = -(-n_tokens // self.geom.page_size) + self.prefix_pages
-        free_b = self.budget_bytes - self.live_bytes
+        idle_n, idle_a = self._prefix_idle_counts()
+        free_b = (self.budget_bytes - self.live_bytes
+                  + idle_n * self._cost(0) + idle_a * self._cost(1))
+        free0 = self.free_page_count(0) + idle_n
+        free1 = self.free_page_count(1) + idle_a
         if self.pool_mode == "normal-only":
-            return (pages <= self.free_page_count(0)
-                    and pages * self._cost(0) <= free_b)
+            return pages <= free0 and pages * self._cost(0) <= free_b
         if (self.pool_mode == "augment-on-pressure"
-                and pages <= self.free_page_count(0)
+                and pages <= free0
                 and pages * self._cost(0) <= free_b):
             return True     # fits in the static plane, no pressure at all
-        if pages > self.free_page_count(1):
+        if pages > free1:
             return False
         need = pages * self._cost(1) - free_b
         if need <= 0:
@@ -240,7 +259,7 @@ class PagedKVPool:
         # cannot deliver
         return (self.pool_mode == "augment-on-pressure"
                 and n_aug <= self._augmentable_count()
-                and pages + n_aug <= self.free_page_count(1))
+                and pages + n_aug <= free1)
 
     # -- allocation -----------------------------------------------------------
 
@@ -252,21 +271,31 @@ class PagedKVPool:
         assert not self.allocated[row, lp], (row, lp)
         order = {"normal-only": (0,), "always-augmented": (1,),
                  "augment-on-pressure": (0, 1)}[self.pool_mode]
-        for mode in order:
-            if self._try_place(row, lp, mode, step):
-                return True
-        if self.pool_mode == "augment-on-pressure":
-            # pressure: demote cold Normal pages to the packed plane until
-            # the budget fits one more Augmented page
-            while (self.live_bytes + self._cost(1) > self.budget_bytes
-                   or self.free_page_count(1) == 0):
-                if not self._augment_coldest(step):
+        while True:
+            for mode in order:
+                if self._try_place(row, lp, mode, step):
+                    return True
+            if self.pool_mode == "augment-on-pressure":
+                # pressure: demote cold Normal pages to the packed plane
+                # until the budget fits one more Augmented page; cold
+                # shared-prefix pages demote along this ladder too, and
+                # idle cached prefixes are evicted (refcount 0) last
+                while (self.live_bytes + self._cost(1) > self.budget_bytes
+                       or self.free_page_count(1) == 0):
+                    if self._augment_coldest(step):
+                        continue
+                    if self._reclaim_prefix(step):
+                        continue
                     self.stats["alloc_failures"] += 1
                     return False
-            if self._try_place(row, lp, 1, step):
-                return True
-        self.stats["alloc_failures"] += 1
-        return False
+                if self._try_place(row, lp, 1, step):
+                    return True
+            # pinned-mode pools reach here with both planes exhausted:
+            # evicting one idle cached prefix frees its pages + bytes,
+            # then the order loop retries
+            if not self._reclaim_prefix(step):
+                self.stats["alloc_failures"] += 1
+                return False
 
     def _try_place(self, row: int, lp: int, mode: int, step: int) -> bool:
         cost = self._cost(mode)
@@ -279,6 +308,7 @@ class PagedKVPool:
         self.page_mode[row, lp] = mode
         self.allocated[row, lp] = True
         self.last_write[row, lp] = step
+        self._refcount[(mode, phys)] = 1
         self.live_bytes += cost
         self._live_by_mode[mode] += 1
         self.stats["peak_live_bytes"] = max(self.stats["peak_live_bytes"],
@@ -304,14 +334,28 @@ class PagedKVPool:
     def _prefix_row(self, row: int) -> int:
         return self.max_batch + row
 
-    def admit_row(self, row: int, n_tokens: int, step: int) -> bool:
+    def admit_row(self, row: int, n_tokens: int, step: int, *,
+                  shared=None) -> bool:
         """All-or-nothing admission: the prompt's decode-band pages plus
         (when this pool carries a static prefix) the row's prefix pages,
         zero-initialized so recycled physical pages never leak a previous
-        row's KV through the static-length read."""
+        row's KV through the static-length read. With ``shared=(erow, m)``
+        the first ``m`` prompt tokens are covered by the cached prefix
+        anchored at share-band row ``erow``: its full pages are mapped
+        into this row's table by refcount (no new storage, no prefill),
+        only the tail allocates fresh pages."""
         pages = -(-max(n_tokens, 1) // self.geom.page_size)
         done: list[tuple[int, int]] = []
-        for lp in range(pages):
+        share_pages = 0
+        if shared is not None and self.share_entries:
+            erow, m = shared
+            # ceil: a mid-page match maps the entry's boundary page too —
+            # the first write past the match COWs it (ensure_position)
+            share_pages = min(-(-m // self.geom.page_size), pages)
+            for lp in range(share_pages):
+                self.share_page(erow, lp, row, lp, step)
+                done.append((row, lp))
+        for lp in range(share_pages, pages):
             if not self.alloc_page(row, lp, step):
                 for r, d in done:
                     self._release(r, d)
@@ -345,6 +389,13 @@ class PagedKVPool:
             f"the engine's max_seq done-condition should retire rows "
             f"before this")
         if self.allocated[row, lp]:
+            key = (int(self.page_mode[row, lp]),
+                   int(self.page_table[row, lp]))
+            if self._refcount.get(key, 1) > 1:
+                # about to write into a shared-prefix page: copy-on-write
+                # the tokens below `pos` into a private page first
+                return self._cow_page(row, lp,
+                                      pos - lp * self.geom.page_size, step)
             return True
         return self.alloc_page(row, lp, step)
 
@@ -478,6 +529,21 @@ class PagedKVPool:
     def _release(self, row: int, lp: int) -> None:
         mode = int(self.page_mode[row, lp])
         phys = int(self.page_table[row, lp])
+        rck = (mode, phys)
+        rc = self._refcount.get(rck, 1)
+        if rc > 1:
+            # shared physical page: drop this alias only. The byte charge
+            # and the canonical refresh/integrity metadata stay with the
+            # surviving refs (rehomed if this alias was carrying them).
+            self._refcount[rck] = rc - 1
+            self._rehome_meta((row, lp), mode, phys)
+            self._tables_cache = None
+            self.allocated[row, lp] = False
+            self.page_table[row, lp] = 0
+            self.page_mode[row, lp] = 0
+            self.last_write[row, lp] = -1
+            return
+        self._refcount.pop(rck, None)
         if mode == 1 and phys in self._decommission:
             # repeat-offender packed page: map the weak array out instead
             # of recycling it — capacity genuinely shrinks
@@ -506,13 +572,207 @@ class PagedKVPool:
         self.last_write[row, lp] = -1
         self.policies.pop((row, lp), None)
 
+    # -- shared-prefix page reuse (refcounted aliases + copy-on-write) ---------
+    # serve/prefix.py owns the token-hash index; the pool owns the pages.
+    # Every cached prefix is anchored by one SHARE-band row (its "entry
+    # row") whose table maps the run's physical pages; decode rows alias
+    # the same physical pages by refcount. Invariants:
+    #   * live_bytes charges each PHYSICAL page exactly once — the alias
+    #     that carries the charge is whichever ref releases LAST.
+    #   * refresh/integrity metadata (policies/_words/_masters/_pending/
+    #     _dirty) for a shared page lives on exactly ONE key — the entry
+    #     row while the entry is alive — so an expiring refcounted page
+    #     restamps once, not once per sharer.
+
+    def entry_row(self, slot: int) -> int:
+        return self._share_base + slot
+
+    def attach_prefix_index(self, idx) -> None:
+        """Wire the engine's PrefixIndex so allocation pressure can evict
+        idle cached prefixes (refcount 0) as the last reclaim rung."""
+        self._prefix_index = idx
+
+    def _reclaim_prefix(self, step: int) -> bool:
+        if self._prefix_index is None:
+            return False
+        return self._prefix_index.evict_one(self, step)
+
+    def _refs(self, mode: int, phys: int) -> list[tuple[int, int]]:
+        """All logical keys currently mapping physical page (mode, phys)."""
+        hits = np.argwhere(self.allocated & (self.page_mode == mode)
+                           & (self.page_table == phys))
+        return [(int(r), int(l)) for r, l in hits]
+
+    def page_refcount(self, row: int, lp: int) -> int:
+        if not self.allocated[row, lp]:
+            return 0
+        return self._refcount.get((int(self.page_mode[row, lp]),
+                                   int(self.page_table[row, lp])), 1)
+
+    def bytes_shared(self) -> int:
+        """Bytes the sharing layer is currently saving: each extra ref of
+        a physical page is storage a private copy would have cost."""
+        return sum((rc - 1) * self._cost(m)
+                   for (m, _p), rc in self._refcount.items() if rc > 1)
+
+    def share_page(self, src_row: int, src_lp: int, dst_row: int,
+                   dst_lp: int, step: int) -> None:
+        """Alias the physical page behind (src_row, src_lp) into
+        (dst_row, dst_lp): pure table writes + a refcount bump — no
+        storage, no bytes, no dispatch."""
+        assert self.allocated[src_row, src_lp], (src_row, src_lp)
+        assert not self.allocated[dst_row, dst_lp], (dst_row, dst_lp)
+        mode = int(self.page_mode[src_row, src_lp])
+        phys = int(self.page_table[src_row, src_lp])
+        self.page_table[dst_row, dst_lp] = phys
+        self.page_mode[dst_row, dst_lp] = mode
+        self.allocated[dst_row, dst_lp] = True
+        self.last_write[dst_row, dst_lp] = step
+        k = (mode, phys)
+        self._refcount[k] = self._refcount.get(k, 1) + 1
+        self._tables_cache = None
+
+    def _move_canonical(self, src: tuple[int, int],
+                        dst: tuple[int, int]) -> None:
+        """Move whatever refresh/integrity metadata `src` holds to `dst`
+        (no-op for entries `src` doesn't hold)."""
+        if src == dst:
+            return
+        pol = self.policies.pop(src, None)
+        if pol is not None:
+            self.policies[dst] = pol
+        for d in (self._words, self._masters):
+            if src in d:
+                d[dst] = d.pop(src)
+        for s in (self._dirty, self._pending):
+            if src in s:
+                s.discard(src)
+                s.add(dst)
+
+    def _rehome_meta(self, key: tuple[int, int], mode: int,
+                     phys: int) -> None:
+        """An alias of shared page (mode, phys) is releasing: if it was
+        the canonical metadata holder, hand the metadata to a surviving
+        ref (highest row wins — the share band outranks decode rows, so
+        an entry keeps custody of its own pages)."""
+        if (key not in self.policies and key not in self._words
+                and key not in self._masters and key not in self._pending
+                and key not in self._dirty):
+            return
+        refs = [r for r in self._refs(mode, phys) if r != key]
+        if not refs:
+            return
+        self._move_canonical(key, max(refs))
+
+    def register_entry_pages(self, erow: int, src_row: int, n_pages: int,
+                             step: int) -> None:
+        """Anchor a freshly prefilled prefix: alias `src_row`'s first
+        `n_pages` pages into share-band row `erow` and move each page's
+        canonical metadata there (restamp-once invariant)."""
+        for lp in range(n_pages):
+            self.share_page(src_row, lp, erow, lp, step)
+            self._move_canonical((src_row, lp), (erow, lp))
+
+    def note_entry_use(self, erow: int, n_tokens: int, step: int) -> None:
+        """A hit re-warmed this entry's first ceil(n/page) pages: reset
+        coldness (NOT the retention clock — no bits were rewritten)."""
+        for lp in range(-(-n_tokens // self.geom.page_size)):
+            if self.allocated[erow, lp]:
+                self.last_write[erow, lp] = step
+
+    def _prefix_idle_counts(self) -> tuple[int, int]:
+        """(normal, augmented) physical pages held ONLY by share-band
+        entries — reclaimable headroom for the admission check, since
+        `_reclaim_prefix` frees them at refcount 0 before alloc fails."""
+        if not self.share_entries:
+            return 0, 0
+        counts: dict[tuple[int, int], int] = {}
+        base = self._share_base
+        for erow in range(base, base + self.share_entries):
+            for lp in np.flatnonzero(self.allocated[erow]):
+                k = (int(self.page_mode[erow, lp]),
+                     int(self.page_table[erow, lp]))
+                counts[k] = counts.get(k, 0) + 1
+        idle = [k for k, n in counts.items()
+                if self._refcount.get(k, 0) == n]
+        return (sum(1 for m, _ in idle if m == 0),
+                sum(1 for m, _ in idle if m == 1))
+
+    def _cow_page(self, row: int, lp: int, keep: int, step: int) -> bool:
+        """Copy-on-write: (row, lp) aliases a shared physical page and is
+        about to diverge at token `keep` of the page. Copy tokens
+        [0, keep) into a private page (masked page-copy dispatch), zero
+        the rest, and repoint only this row. False = pool exhausted."""
+        src_mode = int(self.page_mode[row, lp])
+        src_phys = int(self.page_table[row, lp])
+        order = {"normal-only": (0,), "always-augmented": (1,),
+                 "augment-on-pressure": (0, 1)}[self.pool_mode]
+        dst_mode = None
+        while dst_mode is None:
+            for mode in order:
+                free = self.free_normal if mode == 0 else self.free_packed
+                if free and self.live_bytes + self._cost(mode) \
+                        <= self.budget_bytes:
+                    dst_mode = mode
+                    break
+            else:
+                if self.pool_mode == "augment-on-pressure" \
+                        and self._augment_coldest(step):
+                    continue
+                if self._reclaim_prefix(step):
+                    # reclaim may have freed OUR source's last other ref —
+                    # then the page is private now and no copy is needed
+                    if self._refcount.get((src_mode, src_phys), 1) == 1:
+                        return True
+                    continue
+                self.stats["alloc_failures"] += 1
+                return False
+        free = self.free_normal if dst_mode == 0 else self.free_packed
+        dst_phys = free.pop()
+        self.arenas = _cow_page_op(self.arenas, src_phys, dst_phys, keep,
+                                   src_mode=src_mode, dst_mode=dst_mode,
+                                   aug_bits=self.geom.aug_bits)
+        self.stats["maintenance_dispatches"] += 1
+        self.stats["cow_events"] += 1
+        self.stats["cow_bytes"] += self._cost(src_mode) + self._cost(dst_mode)
+        sk = (src_mode, src_phys)
+        self._refcount[sk] = self._refcount.get(sk, 2) - 1
+        self._refcount[(dst_mode, dst_phys)] = 1
+        self._rehome_meta((row, lp), src_mode, src_phys)
+        self.page_table[row, lp] = dst_phys
+        self.page_mode[row, lp] = dst_mode
+        self.last_write[row, lp] = step
+        self.live_bytes += self._cost(dst_mode)
+        self._live_by_mode[dst_mode] += 1
+        self.stats["peak_live_bytes"] = max(self.stats["peak_live_bytes"],
+                                            self.live_bytes)
+        if dst_mode == 1:
+            pol = RefreshPolicy(retention_steps=self.retention_steps)
+            pol.stamp(step)
+            self.policies[(row, lp)] = pol
+            if self._fm is not None:
+                self._dirty.add((row, lp))
+        self._tables_cache = None
+        if self._obs is not None:
+            self._obs.store_event("cow", f"pg{src_phys}>{dst_phys}", step)
+        return True
+
     # -- mode switching (the paper's WL/SL reconfiguration) --------------------
 
     def _augmentable_count(self) -> int:
-        return int((self.allocated & (self.page_mode == 0)).sum())
+        # PHYSICAL Normal pages the pressure ladder may demote; actively
+        # shared pages (refcount > 1) are pinned in place — mutating the
+        # bits under a concurrent reader is never allowed
+        return sum(1 for (m, _p), rc in self._refcount.items()
+                   if m == 0 and rc == 1)
 
     def _coldest_normal(self) -> Optional[tuple[int, int]]:
         cand = self.allocated & (self.page_mode == 0)
+        if self.share_entries:
+            for (m, phys), rc in self._refcount.items():
+                if m == 0 and rc > 1:
+                    cand &= ~((self.page_table == phys)
+                              & (self.page_mode == 0))
         if not cand.any():
             return None
         age = np.where(cand, self.last_write, np.iinfo(np.int64).max)
@@ -530,58 +790,77 @@ class PagedKVPool:
         """Normal -> Augmented in place: quantize-pack the page into the
         dynamic plane, release the byte difference back to the budget.
         The bf16 master is gone afterwards — the page is now dynamic data
-        under the retention clock."""
+        under the retention clock. Shared pages move ALL their aliases
+        (the pressure ladder only sends refcount-1 pages here, but a
+        direct call on a shared page stays consistent); a share-band
+        page taking this path is a prefix DEMOTION — the dual-context
+        alternative to eviction."""
         assert self.page_mode[row, lp] == 0 and self.allocated[row, lp]
         src = int(self.page_table[row, lp])
+        refs = self._refs(0, src)
         dst = self.free_packed.pop()
         self.arenas = _augment_page_op(self.arenas, src, dst,
                                        aug_bits=self.geom.aug_bits)
         self.stats["maintenance_dispatches"] += 1
         self.free_normal.append(src)
         self._tables_cache = None
-        self.page_table[row, lp] = dst
-        self.page_mode[row, lp] = 1
+        for r, l in refs:
+            self.page_table[r, l] = dst
+            self.page_mode[r, l] = 1
+        rc = self._refcount.pop((0, src), 1)
+        self._refcount[(1, dst)] = rc
         self.live_bytes -= self._cost(0) - self._cost(1)
         self._live_by_mode[0] -= 1
         self._live_by_mode[1] += 1
+        ckey = max(refs) if refs else (row, lp)
         pol = RefreshPolicy(retention_steps=self.retention_steps)
         pol.stamp(step)
-        self.policies[(row, lp)] = pol
+        self.policies[ckey] = pol
         if self._fm is not None:
-            self._dirty.add((row, lp))
+            self._dirty.add(ckey)
         self.stats["augment_events"] += 1
         self.stats["augment_bytes"] += self._cost(0) + self._cost(1)
+        demoted = self.share_entries and ckey[0] >= self._share_base
+        if demoted:
+            self.stats["prefix_demotions"] += 1
         if self._obs is not None:
-            self._obs.store_event("augment", f"pg{dst}", step)
+            self._obs.store_event("demote" if demoted else "augment",
+                                  f"pg{dst}", step)
 
     def promote_page(self, row: int, lp: int, step: int) -> bool:
         """Augmented -> Normal (refresh-promote): dequantize back into the
-        static plane when the budget has room again."""
+        static plane when the budget has room again. Shared pages move
+        ALL their aliases and clear the single canonical metadata key."""
         assert self.page_mode[row, lp] == 1 and self.allocated[row, lp]
-        if (row, lp) in self._pending:
+        src = int(self.page_table[row, lp])
+        refs = self._refs(1, src)
+        ckey = max(refs) if refs else (row, lp)
+        if ckey in self._pending:
             # never materialize a corrupted packed page into the static
             # plane — the fault pass must detect and heal it first
             return False
         cost_up = self._cost(0) - self._cost(1)
         if not self.free_normal or self.live_bytes + cost_up > self.budget_bytes:
             return False
-        src = int(self.page_table[row, lp])
         dst = self.free_normal.pop()
         self.arenas = _promote_page_op(self.arenas, src, dst,
                                        aug_bits=self.geom.aug_bits)
         self.stats["maintenance_dispatches"] += 1
         self.free_packed.append(src)
         self._tables_cache = None
-        self.page_table[row, lp] = dst
-        self.page_mode[row, lp] = 0
+        for r, l in refs:
+            self.page_table[r, l] = dst
+            self.page_mode[r, l] = 0
+            self.last_write[r, l] = step
+        rc = self._refcount.pop((1, src), 1)
+        self._refcount[(0, dst)] = rc
         self.live_bytes += cost_up
         self._live_by_mode[1] -= 1
         self._live_by_mode[0] += 1
-        self.last_write[row, lp] = step
-        self.policies.pop((row, lp), None)
-        self._words.pop((row, lp), None)
-        self._masters.pop((row, lp), None)
-        self._dirty.discard((row, lp))
+        self.policies.pop(ckey, None)
+        self._words.pop(ckey, None)
+        self._masters.pop(ckey, None)
+        self._dirty.discard(ckey)
         self.stats["promote_events"] += 1
         if self._obs is not None:
             self._obs.store_event("promote", f"pg{dst}", step)
@@ -768,8 +1047,12 @@ class PagedKVPool:
 
     def fault_row(self, key: tuple[int, int]) -> Optional[int]:
         """Engine row whose request owns the faulted page (prefix-band
-        rows map back to their decode slot)."""
+        rows map back to their decode slot; SHARE-band rows have no
+        single owner — unhealed faults there are handled by entry
+        eviction, not by retrying one request)."""
         row = key[0]
+        if self.share_entries and row >= self._share_base:
+            return None
         return row if row < self.max_batch else row - self.max_batch
 
     def fault_unit_bytes(self, key: tuple[int, int]) -> int:
@@ -830,8 +1113,10 @@ class PagedKVPool:
 
     def describe(self) -> dict:
         g = self.geom
-        live_n = int((self.allocated & (self.page_mode == 0)).sum())
-        live_a = int((self.allocated & (self.page_mode == 1)).sum())
+        # PHYSICAL live pages (aliases of a shared page count once) — the
+        # ground-truth cross-check of the incremental _live_by_mode pair
+        live_n = sum(1 for (m, _p) in self._refcount if m == 0)
+        live_a = sum(1 for (m, _p) in self._refcount if m == 1)
         return {
             "kind": self.kind,
             "pool_mode": self.pool_mode,
@@ -840,6 +1125,9 @@ class PagedKVPool:
             "prefix_tokens": self.prefix_tokens,
             "pages_live_normal": live_n,
             "pages_live_augmented": live_a,
+            "pages_shared": sum(1 for rc in self._refcount.values()
+                                if rc > 1),
+            "bytes_shared": self.bytes_shared(),
             "page_bytes_normal": g.page_bytes_normal,
             "page_bytes_aug": g.page_bytes_aug,
             "page_capacity_factor": g.capacity_factor,
@@ -878,6 +1166,55 @@ def _zero_page_op(arenas: dict, phys: int, *, mode: int):
     keys = ("kn", "vn") if mode == 0 else ("kp", "vp", "ks", "vs")
     for k in keys:
         out[k] = out[k].at[:, phys].set(jnp.zeros_like(out[k][:, phys]))
+    return out
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("src_mode", "dst_mode", "aug_bits"),
+                   donate_argnums=(0,))
+def _cow_page_op(arenas: dict, src: int, dst: int, keep, *,
+                 src_mode: int, dst_mode: int, aug_bits: int):
+    """Masked page copy for copy-on-write divergence: tokens [0, keep) of
+    physical page `src` land in `dst` (crossing planes when the modes
+    differ), the rest of `dst` is scrubbed to the plane's neutral value.
+    The Normal->Augmented leg reuses `quantize_pack_kv(valid=)` — the
+    same masked write driver the verify-commit path uses."""
+    out = dict(arenas)
+    P = arenas["kn"].shape[3]
+    tokmask = jnp.arange(P) < keep
+    if src_mode == 0 and dst_mode == 0:
+        for k in ("kn", "vn"):
+            page = jnp.where(tokmask[None, None, :, None],
+                             arenas[k][:, src], 0)
+            out[k] = out[k].at[:, dst].set(page)
+    elif src_mode == 1 and dst_mode == 1:
+        for p, s in (("kp", "ks"), ("vp", "vs")):
+            pg = jnp.where(tokmask[None, None, :, None], arenas[p][:, src],
+                           jnp.zeros_like(arenas[p][:, src]))
+            sc = jnp.where(tokmask[None, None, :], arenas[s][:, src],
+                           jnp.ones_like(arenas[s][:, src]))
+            out[p] = out[p].at[:, dst].set(pg)
+            out[s] = out[s].at[:, dst].set(sc)
+    elif src_mode == 0 and dst_mode == 1:
+        for plane, packed, scale in (("kn", "kp", "ks"), ("vn", "vp", "vs")):
+            x = arenas[plane][:, src]                   # (L, KV, page, hd)
+            if aug_bits == 4:
+                p, s = K.quantize_pack_kv(x, tokmask[None, None, :])
+            else:
+                p, s = L.pack_kv_int8(x)
+                p = jnp.where(tokmask[None, None, :, None], p,
+                              jnp.zeros_like(p))
+                s = jnp.where(tokmask[None, None, :, None], s,
+                              jnp.ones_like(s))
+            out[packed] = out[packed].at[:, dst].set(p)
+            out[scale] = out[scale].at[:, dst].set(
+                s[..., 0].astype(jnp.bfloat16))
+    else:                                               # Augmented -> Normal
+        unpack = L.unpack_kv_int4 if aug_bits == 4 else L.unpack_kv_int8
+        for plane, packed, scale in (("kn", "kp", "ks"), ("vn", "vp", "vs")):
+            d = unpack(arenas[packed][:, src], arenas[scale][:, src][..., None])
+            d = jnp.where(tokmask[None, None, :, None], d, 0)
+            out[plane] = out[plane].at[:, dst].set(d.astype(jnp.bfloat16))
     return out
 
 

@@ -55,6 +55,7 @@ from repro.models import model as M
 from repro.models.params import init_params, is_pspec
 from repro.obs import hooks as obs_hooks
 from repro.serve import state_store
+from repro.serve.prefix import PrefixIndex
 from repro.serve.scheduler import QueueEntry, Scheduler
 
 
@@ -117,6 +118,7 @@ class ServeEngine:
                  state_bits: Optional[int] = None,
                  spec_k: Optional[int] = None,
                  spec_draft_impl: Optional[str] = None,
+                 prefix_cache: Optional[int] = None,
                  fault_rate: Optional[float] = None,
                  fault_seed: Optional[int] = None,
                  array_loss_rate: Optional[float] = None,
@@ -138,6 +140,7 @@ class ServeEngine:
                 or pool_mode is not None or matmul_impl is not None \
                 or imc_abits is not None or state_bits is not None \
                 or spec_k is not None or spec_draft_impl is not None \
+                or prefix_cache is not None \
                 or any(v is not None for v in fault_overrides) \
                 or any(v is not None for v in obs_overrides):
             # numeric/bool fault knobs need explicit None checks — 0.0 and
@@ -152,6 +155,8 @@ class ServeEngine:
                 state_bits=state_bits or cfg.amc.state_bits,
                 spec_k=cfg.amc.spec_k if spec_k is None else spec_k,
                 spec_draft_impl=spec_draft_impl or cfg.amc.spec_draft_impl,
+                prefix_cache=(cfg.amc.prefix_cache if prefix_cache is None
+                              else prefix_cache),
                 fault_rate=(cfg.amc.fault_rate if fault_rate is None
                             else fault_rate),
                 fault_seed=(cfg.amc.fault_seed if fault_seed is None
@@ -206,6 +211,18 @@ class ServeEngine:
             self.store.attach_obs(self.obs)
         self.scheduler = Scheduler(self.store, max_batch=max_batch,
                                    obs=self.obs)
+        # shared-prefix page reuse (serve/prefix.py): paged stores with a
+        # share band get a token-hash index over cached prefix page runs;
+        # hits map the SAME physical pages into the new row (refcounted)
+        # and prefill only the tail. None on every other path — zero cost.
+        self._prefix_index: Optional[PrefixIndex] = None
+        if self.store.kind == "paged" \
+                and getattr(self.store, "share_entries", 0) > 0:
+            self._prefix_index = PrefixIndex(self.store.share_entries,
+                                             self.cfg.amc.page_size)
+            self.store.attach_prefix_index(self._prefix_index)
+        self.prefill_dispatch_count = 0   # prefill-only subset of dispatches
+        self._prefix_saved = 0            # prefill dispatches skipped by hits
         # retention-fault injection + self-healing (core/faults.py): the
         # model samples per-page/per-slab early expiries and refresh
         # misses deterministically under the seed; the store detects them
@@ -378,6 +395,14 @@ class ServeEngine:
                     "ServeEngine to define what an empty prompt decodes "
                     "from (there is no implicit token 0)")
             prompt = np.array([self.bos_id], np.int32)
+        if int(prompt.min()) < 0 or int(prompt.max()) >= self.cfg.vocab:
+            # out-of-range ids would gather garbage rows deep inside
+            # prefill (and poison the prefix index) — reject at the door
+            bad = prompt[(prompt < 0) | (prompt >= self.cfg.vocab)]
+            raise ValueError(
+                f"prompt contains token id(s) outside the vocab "
+                f"[0, {self.cfg.vocab}): {bad[:8].tolist()}"
+                f"{'...' if bad.size > 8 else ''}")
         if prompt.size > self.max_seq:
             # past max_seq every cache write would clamp to the last slot,
             # silently corrupting the row — reject instead
@@ -420,16 +445,35 @@ class ServeEngine:
             entry = self.scheduler.pop_admittable(self.step_idx)
             if entry is None:
                 break
+            shared = self._prefix_match(entry)
             if not self.scheduler.admit(row, len(entry.prompt),
-                                        self.step_idx):
+                                        self.step_idx,
+                                        shared=(None if shared is None else
+                                                (shared[0].row, shared[1]))):
                 # can_admit_tokens raced a concurrent change; requeue
                 self.scheduler.enqueue(entry, front=True)
                 break
-            self._start_row(row, entry)
+            self._start_row(row, entry, shared=shared)
             admitted[entry.req.id] = row
         return admitted
 
-    def _start_row(self, row: int, entry: QueueEntry) -> None:
+    def _prefix_match(self, entry: QueueEntry):
+        """Deepest cached prefix of the tokens this admission will FEED
+        (prompt[:-1] — the last prompt token goes through decode), as
+        (PrefixEntry, matched_tokens), or None."""
+        if self._prefix_index is None:
+            return None
+        fed = entry.prompt[:-1]
+        if fed.size < self.cfg.amc.page_size:
+            return None
+        e, m = self._prefix_index.match(fed)
+        if e is None:
+            self._prefix_index.note_miss()
+            self.obs.on_prefix("miss", entry.req.id, 0, self.step_idx)
+            return None
+        return e, m
+
+    def _start_row(self, row: int, entry: QueueEntry, shared=None) -> None:
         self.active[row] = True
         self.slot_req[row] = entry.req
         self._slot_entry[row] = entry
@@ -441,10 +485,44 @@ class ServeEngine:
         # feed prompt[:-1] into the cache (the last prompt token is fed by
         # the first batched decode step, whose argmax is the first
         # generated token)
-        if prompt.size > 1:
-            with self.obs.prefill_span(entry.req.id, int(prompt.size) - 1):
-                self.prefill(row, prompt[:-1])
+        fed = prompt[:-1]
+        m = 0
+        if shared is not None:
+            # prefix hit: admit_row already mapped the cached run's pages
+            # into this row — skip their prefill dispatches entirely and
+            # start the position clock past the shared tokens
+            e, m = shared
+            self.positions[row] = m
+            self._prefix_index.note_hit(e, m, self.step_idx)
+            self.store.note_entry_use(e.row, m, self.step_idx)
+            C = self.prefill_chunk
+            self._prefix_saved += -(-m // C)
+            self.obs.on_prefix("hit", entry.req.id, m, self.step_idx)
+        if fed.size > m:
+            with self.obs.prefill_span(entry.req.id, int(fed.size) - m):
+                self.prefill(row, fed[m:])
+        if shared is None:
+            self._register_prefix(row, fed)
         self.last_token[row] = int(prompt[-1])
+
+    def _register_prefix(self, row: int, fed: np.ndarray) -> None:
+        """Cache the freshly prefilled prompt's full pages as a prefix
+        entry: alias them into a share-band row and index the token run.
+        Skipped when the run is shorter than one page or no slot can be
+        freed (every cached entry still has live sharers)."""
+        idx = self._prefix_index
+        if idx is None:
+            return
+        page = self.cfg.amc.page_size
+        full = fed.size // page
+        if full == 0:
+            return
+        slot = idx.acquire_slot(self.store, self.step_idx)
+        if slot is None:
+            return
+        erow = self.store.entry_row(slot)
+        self.store.register_entry_pages(erow, row, full, self.step_idx)
+        idx.add_entry(slot, erow, fed[:full * page], self.step_idx)
 
     def _preempt(self, victim: int) -> None:
         """Preemption: release the victim's storage and requeue it with
@@ -544,7 +622,10 @@ class ServeEngine:
         callers would otherwise silently scatter into the dump page)."""
         page = self.cfg.amc.page_size
         for lp in range(first // page, last // page + 1):
-            if not self.scheduler.ensure_position(slot, lp * page,
+            # pass the page's first WRITTEN position, not its first slot:
+            # a shared boundary page must copy-on-write with exactly the
+            # tokens below `first` preserved
+            if not self.scheduler.ensure_position(slot, max(first, lp * page),
                                                   self.step_idx):
                 raise RuntimeError(
                     f"store exhausted allocating prefill page {lp} of row "
@@ -601,6 +682,7 @@ class ServeEngine:
                     {"tokens": jnp.asarray(tok),
                      "positions": jnp.asarray(positions),
                      "write_mask": jnp.asarray(write_mask)})
+            self.prefill_dispatch_count += 1
             self._account_dispatch(np.array([slot]), n,
                                    np.array([p + n]), np.array([p]))
             self.energy_ledger.note_tokens(n)
@@ -617,6 +699,7 @@ class ServeEngine:
         last = None
         for t in tokens:
             last = self._step_slot(slot, int(t))
+            self.prefill_dispatch_count += 1
         return last
 
     def _step_slot(self, slot: int, token: int) -> int:
@@ -877,6 +960,17 @@ class ServeEngine:
         if self.straggler.record(self.step_idx, dt):
             self._fault_stats["straggler_mitigations"] += 1
 
+    def prefix_probe(self, prompt: np.ndarray) -> int:
+        """Tokens of `prompt` this engine's prefix cache already holds
+        (0 without one) — pure; the affinity placement policy's
+        prefix-locality signal."""
+        if self._prefix_index is None:
+            return 0
+        fed = np.asarray(prompt, np.int32).reshape(-1)[:-1]
+        if fed.size < self.cfg.amc.page_size:
+            return 0
+        return self._prefix_index.probe(fed)
+
     def inject_array_loss(self) -> None:
         """Force a whole-array failure event at the next `step_all` (the
         chaos hook `examples/elastic_restart.py` and the tests drive):
@@ -905,6 +999,10 @@ class ServeEngine:
         for row in rows:
             self._preempt(int(row))
             self._fault_stats["array_loss_requeues"] += 1
+        if self._prefix_index is not None:
+            # the arenas behind every cached prefix are gone with the
+            # array — the index must not serve stale physical pages
+            self._prefix_index.invalidate(self.store)
         self._fault_stats["array_losses"] += 1
         return int(rows.size)
 
@@ -1080,6 +1178,19 @@ class ServeEngine:
         }
         pool = self.store.describe()
         out["pool"] = pool
+        out["prefix"] = {
+            "enabled": self._prefix_index is not None,
+            "prefill_dispatches": self.prefill_dispatch_count,
+            "dispatches_saved": self._prefix_saved,
+            "cow_events": pool.get("cow_events", 0),
+            "cow_bytes": pool.get("cow_bytes", 0),
+            "demotions": pool.get("prefix_demotions", 0),
+            "evictions": pool.get("prefix_evictions", 0),
+            "pages_shared": pool.get("pages_shared", 0),
+            "bytes_shared": pool.get("bytes_shared", 0),
+        }
+        if self._prefix_index is not None:
+            out["prefix"].update(self._prefix_index.describe())
         out["scheduler"] = self.scheduler.describe()
         for k in ("refreshes", "refresh_bytes", "augment_events",
                   "promote_events", "maintenance_dispatches"):

@@ -120,6 +120,9 @@ class ArrayFleet:
             "placements": 0, "migrations": 0, "array_losses": 0,
             "drain_requeues": 0, "peak_concurrency": 0,
         }
+        # decision-reason histogram (affinity distinguishes prefix / hash
+        # / fallback via `last_reason`; other policies count their name)
+        self._placement_decisions: dict[str, int] = {}
 
     # -- request intake ---------------------------------------------------------
 
@@ -133,7 +136,8 @@ class ArrayFleet:
                           free_rows=int((~e.active).sum()),
                           live_bytes=int(e.store.live_bytes),
                           budget_bytes=int(e.store.budget_bytes),
-                          admit_probe=e.store.can_admit_tokens)
+                          admit_probe=e.store.can_admit_tokens,
+                          prefix_probe=e.prefix_probe)
                 for i, e in enumerate(self.engines)]
 
     def add_request(self, req: Request) -> int:
@@ -150,6 +154,9 @@ class ArrayFleet:
         eng.add_request(req)          # validates; may admit immediately
         self.placements[req.id] = aid
         self._fleet_stats["placements"] += 1
+        reason = getattr(self.policy, "last_reason", self.policy.name)
+        self._placement_decisions[reason] = \
+            self._placement_decisions.get(reason, 0) + 1
         eng.obs.on_placement(req.id, aid, self.policy.name, "admit",
                              eng.step_idx)
         self._note_concurrency()
@@ -421,6 +428,10 @@ class ArrayFleet:
             "per_array": per_array,
         }
         return {"fleet": fleet,
+                "placement": {
+                    "policy": self.policy.name,
+                    "decisions": dict(self._placement_decisions),
+                },
                 "arrays": [eng.stats() for eng in self.engines]}
 
     def export_trace(self, path: str) -> dict:

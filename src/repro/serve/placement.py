@@ -49,6 +49,9 @@ class ArrayView:
     budget_bytes: int
     # store.can_admit_tokens probe (counts augmentation headroom)
     admit_probe: Optional[Callable[[int], bool]] = None
+    # engine.prefix_probe: tokens of a prompt the array's prefix cache
+    # already holds (None on fleets without prefix caching)
+    prefix_probe: Optional[Callable[[np.ndarray], int]] = None
 
     @property
     def load(self) -> int:
@@ -101,25 +104,49 @@ class BudgetHeadroom(PlacementPolicy):
 
 
 class Affinity(PlacementPolicy):
-    """Shared-prefix locality: requests whose first `prefix_tokens`
-    tokens match hash to the same preferred array, so a common system
-    prompt's pages concentrate on one array's planes. The hash is
-    crc32-stable (NOT Python's salted hash) — placement reproduces
-    across processes. When the preferred array cannot admit right now,
-    fall back to least-loaded among the others instead of queueing
-    behind a full array."""
+    """Shared-prefix locality, strongest signal first:
+
+    1. PREFIX: the array whose `PrefixIndex` already holds the deepest
+       cached prefix of this prompt (ties break to the lower array id) —
+       the request maps those pages by refcount and skips their prefill.
+    2. HASH: no array holds the prefix yet — crc32 of the first
+       `prefix_tokens` tokens picks a stable preferred array, so a
+       common system prompt CONCENTRATES on one array's planes (crc32,
+       NOT Python's salted hash: placement reproduces across processes).
+    3. FALLBACK: the choice above cannot admit right now — deterministic
+       least-loaded among the OTHER alive arrays (the over-budget array
+       is excluded, so the fallback is never a disguised retry).
+
+    `last_reason` records which rung decided — the fleet surfaces it in
+    `stats()["placement"]["decisions"]`, so a fallback is distinguishable
+    from a plain least-loaded decision."""
 
     name = "affinity"
     prefix_tokens = 8
 
+    def __init__(self):
+        self.last_reason = "hash"
+
     def _pick(self, prompt, alive):
-        prefix = np.asarray(prompt, np.int32).reshape(-1)
-        prefix = prefix[:self.prefix_tokens]
-        h = zlib.crc32(prefix.tobytes())
+        flat = np.asarray(prompt, np.int32).reshape(-1)
+        best, best_m = None, 0
+        for v in alive:
+            if v.prefix_probe is None:
+                continue
+            m = v.prefix_probe(flat)
+            if m > best_m:
+                best, best_m = v, m
+        if best is not None and best.can_admit_now(flat.size):
+            self.last_reason = "prefix"
+            return best.aid
+        h = zlib.crc32(flat[:self.prefix_tokens].tobytes())
         preferred = alive[h % len(alive)]
-        if preferred.can_admit_now(len(np.asarray(prompt).reshape(-1))):
+        if preferred.can_admit_now(flat.size):
+            self.last_reason = "hash"
             return preferred.aid
-        return LeastLoaded()._pick(prompt, alive)
+        self.last_reason = "fallback"
+        others = [v for v in alive if v.aid != preferred.aid]
+        return LeastLoaded()._pick(prompt, others or alive)
 
 
 POLICIES = {p.name: p for p in (LeastLoaded, BudgetHeadroom, Affinity)}

@@ -119,9 +119,16 @@ class Scheduler:
 
     # -- state lifecycle ------------------------------------------------------
 
-    def admit(self, row: int, n_tokens: int, step: int) -> bool:
-        """Reserve the row's decode state in the store; all-or-nothing."""
-        if not self.store.admit_row(row, n_tokens, step):
+    def admit(self, row: int, n_tokens: int, step: int, *,
+              shared=None) -> bool:
+        """Reserve the row's decode state in the store; all-or-nothing.
+        ``shared=(entry_row, matched_tokens)`` maps a cached prefix's
+        pages into the row instead of allocating them (paged stores)."""
+        if shared is not None:
+            ok = self.store.admit_row(row, n_tokens, step, shared=shared)
+        else:
+            ok = self.store.admit_row(row, n_tokens, step)
+        if not ok:
             return False
         self._admit_ticket += 1
         self.row_ticket[row] = self._admit_ticket

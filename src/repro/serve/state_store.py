@@ -14,7 +14,11 @@ StateStore interface (duck-typed; implemented by `PagedKVPool`,
 
   kind                      "paged" | "slab" | "composite"
   can_admit_tokens(n)       admission probe, counting augmentation headroom
-  admit_row(row, n, step)   all-or-nothing capacity grab for a fresh row
+  admit_row(row, n, step, *, shared=None)  all-or-nothing capacity grab
+                            for a fresh row; paged pools accept
+                            shared=(entry_row, m) to map a cached
+                            prefix's pages by refcount instead of
+                            allocating the first ceil(m/page) pages
   ensure_position(row, pos, step)  capacity for the next token write
   release_row(row)          free a finished / preempted row
   note_token_writes(rows, positions, step)  restamp written storage
@@ -416,7 +420,10 @@ class AugmentedStatePool:
 
     # -- allocation ---------------------------------------------------------
 
-    def admit_row(self, row: int, n_tokens: int, step: int) -> bool:
+    def admit_row(self, row: int, n_tokens: int, step: int, *,
+                  shared=None) -> bool:
+        # `shared` (prefix page reuse) is a paged-pool concept; slab
+        # state has no pages to alias — accepted and ignored
         assert not self.slot_alloc[row], row
         order = {"normal-only": (0,), "always-augmented": (1,),
                  "augment-on-pressure": (0, 1)}[self.pool_mode]
@@ -850,7 +857,8 @@ class CompositeStore:
     def can_admit_tokens(self, n: int) -> bool:
         return all(p.can_admit_tokens(n) for p in self.parts.values())
 
-    def admit_row(self, row: int, n_tokens: int, step: int) -> bool:
+    def admit_row(self, row: int, n_tokens: int, step: int, *,
+                  shared=None) -> bool:
         done = []
         for name, p in self.parts.items():
             if not p.admit_row(row, n_tokens, step):

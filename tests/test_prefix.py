@@ -1,0 +1,371 @@
+"""Shared-prefix page reuse: COW divergence at every page geometry,
+refcount/demotion/eviction invariants, the masked page-copy kernel's
+parity with the pack/unpack primitives it composes, placement fallback,
+and decode token identity to the sharing-disabled engine."""
+import dataclasses
+import zlib
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_arch
+from repro.configs.base import AMCConfig
+from repro.kernels import ops as K
+from repro.launch.mesh import make_local_mesh
+from repro.models import layers as L
+from repro.serve import Request, ServeEngine, make_serving
+from repro.serve.cache_pool import PagedKVPool, _cow_page_op
+from repro.serve.placement import ArrayView, make_policy
+from repro.serve.prefix import PrefixIndex, chain_hashes
+
+PAGE, CHUNK = 8, 8
+
+
+# ---------------------------------------------------------------------------
+# engine-level: prefill skipping + COW at every divergence geometry
+# ---------------------------------------------------------------------------
+
+def _engine(prefix_cache, arch="qwen1.5-0.5b", max_seq=96):
+    cfg = get_arch(arch).reduced()
+    cfg = dataclasses.replace(
+        cfg, amc=dataclasses.replace(cfg.amc, page_size=PAGE))
+    return ServeEngine(cfg, make_local_mesh(), max_batch=4,
+                       max_seq=max_seq, prefill_chunk=CHUNK, seed=1,
+                       prefix_cache=prefix_cache)
+
+
+def _drain(eng):
+    while eng.active.any() or eng._queue:
+        eng.step_all()
+    return {rid: list(map(int, eng.outputs[rid])) for rid in eng.outputs}
+
+
+def _prompts(seed=0):
+    rng = np.random.default_rng(seed)
+    sys_p = rng.integers(0, 100, size=(4 * PAGE,)).astype(np.int32)
+    a = rng.integers(0, 100, size=(9,)).astype(np.int32)
+    b = (a + 1) % 100          # diverges from `a` at its very first token
+    return sys_p, a, b
+
+
+def _run_pair(prompts, max_new=4):
+    """The same request stream through sharing-on and sharing-off
+    engines; returns (on_engine, per-request prefill dispatch deltas,
+    outputs_on, outputs_off)."""
+    outs, deltas = {}, []
+    for pc in (4, 0):
+        eng = _engine(pc)
+        for i, p in enumerate(prompts):
+            before = eng.prefill_dispatch_count
+            eng.add_request(Request(prompt=p, max_new_tokens=max_new, id=i))
+            if pc:
+                deltas.append(eng.prefill_dispatch_count - before)
+        outs[pc] = _drain(eng)
+        if pc:
+            on = eng
+    return on, deltas, outs[4], outs[0]
+
+
+def test_full_hit_zero_prefill_dispatches_for_shared_run():
+    """A 100%-shared page-aligned system prompt costs ZERO prefill
+    dispatches on 2nd+ requests — fed == the cached run exactly — and
+    the first token after the run lands in a fresh page (no COW)."""
+    sys_p, a, _ = _prompts()
+    p0 = np.concatenate([sys_p, a[:1]])     # fed = sys_p: registers 4 pages
+    p1 = np.concatenate([sys_p, a[1:2]])    # fed = sys_p: full hit
+    eng, deltas, on, off = _run_pair([p0, p1])
+    assert deltas[0] == -(-sys_p.size // CHUNK)     # miss pays full prefill
+    assert deltas[1] == 0                           # hit pays nothing
+    st = eng.stats()["prefix"]
+    assert st["hits"] == 1 and st["dispatches_saved"] >= deltas[0]
+    assert st["cow_events"] == 0                    # divergence past the run
+    assert on == off
+
+
+def test_cow_divergence_at_page_boundary_shares_without_copy():
+    """Divergence exactly ON a page boundary: every matched page is
+    fully shared, the tail allocates fresh pages, so no COW fires."""
+    sys_p, a, b = _prompts()
+    p0 = np.concatenate([sys_p, a[:5]])     # fed 36 -> registers 4 pages
+    p1 = np.concatenate([sys_p, b[:5]])     # diverges at token 32
+    eng, deltas, on, off = _run_pair([p0, p1])
+    st = eng.stats()["prefix"]
+    assert st["hits"] == 1
+    assert st["cow_events"] == 0
+    assert deltas[1] == -(-(p1.size - 1 - 4 * PAGE) // CHUNK)
+    assert on == off
+
+
+def test_cow_divergence_mid_page_copies_boundary_page():
+    """Divergence mid-page INSIDE the entry's coverage: the boundary
+    page is mapped shared (refcount 2) and the prefill tail's first
+    write copies it — exactly one COW, `keep` = tokens before the
+    divergence point."""
+    sys_p, a, _ = _prompts()
+    c = a.copy()
+    c[4:] = (c[4:] + 7) % 100               # same first 4 tail tokens
+    p0 = np.concatenate([sys_p, a])         # fed 40 -> registers 5 pages
+    p1 = np.concatenate([sys_p, c])         # match m = 36, mid page 4
+    eng, deltas, on, off = _run_pair([p0, p1])
+    st = eng.stats()["prefix"]
+    assert st["hits"] == 1
+    assert st["cow_events"] == 1
+    assert st["cow_bytes"] > 0
+    assert deltas[1] == -(-(p1.size - 1 - 36) // CHUNK)
+    assert on == off
+
+
+def test_cow_on_first_decode_write_into_shared_page():
+    """A prompt that ends mid-shared-page pays zero prefill dispatches
+    (fed == matched run) and COWs on its FIRST DECODE token's write —
+    the decode-side divergence geometry."""
+    sys_p, a, _ = _prompts()
+    p0 = np.concatenate([sys_p, a])         # registers 5 pages (40 tokens)
+    p1 = np.concatenate([sys_p, a[:4]])     # fed 35 tokens, all matched
+    eng, deltas, on, off = _run_pair([p0, p1])
+    st = eng.stats()["prefix"]
+    assert st["hits"] == 1
+    assert deltas[1] == 0                   # nothing left to prefill
+    assert st["cow_events"] == 1            # first decode write, keep=3
+    assert on == off
+
+
+@pytest.mark.parametrize("arch", ["qwen1.5-0.5b", "qwen3-moe-30b-a3b"])
+def test_decode_token_identity_with_sharing(arch):
+    """Sharing changes which physical pages prefill writes, never what
+    decode computes — pinned for the dense and moe families."""
+    rng = np.random.default_rng(3)
+    sys_p = rng.integers(0, 100, size=(2 * PAGE,)).astype(np.int32)
+    prompts = [np.concatenate(
+        [sys_p, rng.integers(0, 100, size=(5,)).astype(np.int32)])
+        for _ in range(3)]
+    outs = {}
+    for pc in (4, 0):
+        eng = _engine(pc, arch=arch, max_seq=64)
+        for i, p in enumerate(prompts):
+            eng.add_request(Request(prompt=p, max_new_tokens=3, id=i))
+        outs[pc] = _drain(eng)
+        if pc:
+            assert eng.stats()["prefix"]["hits"] == 2
+    assert outs[4] == outs[0]
+
+
+def test_add_request_rejects_out_of_vocab_tokens():
+    eng = _engine(0)
+    bad = np.array([0, 1, eng.cfg.vocab], np.int32)
+    with pytest.raises(ValueError, match="outside the vocab"):
+        eng.add_request(Request(prompt=bad, max_new_tokens=1, id=0))
+    with pytest.raises(ValueError, match="outside the vocab"):
+        eng.add_request(Request(prompt=np.array([-1, 2], np.int32),
+                                max_new_tokens=1, id=1))
+
+
+# ---------------------------------------------------------------------------
+# PrefixIndex: chain hashes, deepest-first match, boundary extension
+# ---------------------------------------------------------------------------
+
+def test_chain_hashes_page_granular_and_prefix_consistent():
+    t = np.arange(25, dtype=np.int32)
+    h = chain_hashes(t, PAGE)
+    assert len(h) == 3                      # only FULL pages are hashed
+    assert h[:2] == chain_hashes(t[:16], PAGE)     # chaining is a prefix
+    u = t.copy()
+    u[0] += 1                               # first-page change reseeds all
+    assert chain_hashes(u, PAGE)[2] != h[2]
+
+
+def test_match_prefers_deepest_entry_and_extends_into_boundary_page():
+    t = np.arange(100, 124, dtype=np.int32)
+    idx = PrefixIndex(2, PAGE)
+    idx.add_entry(idx.acquire_slot(None, 0), 90, t[:16], step=0)
+    idx.add_entry(idx.acquire_slot(None, 1), 91, t[:24], step=1)
+    e, m = idx.match(t[:24])
+    assert e.row == 91 and m == 24          # deepest wins over the 2-pager
+    q = t.copy()
+    q[19:] += 50                            # diverge mid page 2
+    e, m = idx.match(q)
+    assert e.row == 91 and m == 19          # full pages + 3-token extension
+    assert idx.probe(q) == 19
+
+
+# ---------------------------------------------------------------------------
+# pool: restamp-once refresh, demotion ladder, eviction only at refcount 0
+# ---------------------------------------------------------------------------
+
+def _ppool(entries, kv_mode="normal", pool_mode="augment-on-pressure", **kw):
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    cfg = dataclasses.replace(cfg, amc=AMCConfig(
+        kv_mode=kv_mode, pool_mode=pool_mode, prefix_cache=entries))
+    return PagedKVPool(cfg, max_batch=2, max_seq=32, **kw)
+
+
+def test_shared_page_refresh_restamps_once_not_per_sharer():
+    """A shared physical page nearing retention expiry appears ONCE in
+    refresh_due (on its canonical share-band key) however many rows map
+    it, and one refresh_page restamps it for every sharer."""
+    pool = _ppool(2, kv_mode="int8", pool_mode="always-augmented",
+                  retention_steps=2)
+    assert pool.alloc_page(0, 0, 0) and pool.alloc_page(0, 1, 0)
+    erow = pool.entry_row(0)
+    pool.register_entry_pages(erow, 0, 2, step=0)
+    pool.share_page(erow, 0, 1, 0, step=0)  # third sharer of page (0,0)
+    due = pool.refresh_due(2)
+    assert sorted(due) == [(erow, 0), (erow, 1)]   # 2 physical, not 5 keys
+    for lp in (0, 1):
+        pool.refresh_page(erow, lp, step=2)
+    assert pool.refresh_due(2) == []
+    assert pool.stats["refreshes"] == 2
+    assert pool.stats["refresh_bytes"] == 2 * 2 * pool.geom.page_bytes_aug
+    # releasing the canonical holder re-homes the clock, doesn't drop it
+    pool.free_row(1)
+    pool.free_row(0)
+    assert sorted(pool.policies) == [(erow, 0), (erow, 1)]
+
+
+def test_prefix_pages_demote_under_pressure_and_evict_only_at_refcount_0():
+    pool0 = _ppool(1)
+    pbn = pool0.geom.page_bytes_normal
+    pool = _ppool(1, budget_bytes=2 * pbn)
+    idx = PrefixIndex(1, pool.geom.page_size)
+    pool.attach_prefix_index(idx)
+    assert pool.alloc_page(0, 0, 0) and pool.alloc_page(0, 1, 0)
+    erow = pool.entry_row(0)
+    pool.register_entry_pages(erow, 0, 2, step=0)
+    idx.add_entry(0, erow, np.arange(2 * pool.geom.page_size,
+                                     dtype=np.int32), step=0)
+    # refcount 2: the shared pages are untouchable — no demotion source,
+    # no eviction candidate, so the pressured alloc must FAIL
+    assert not idx.evict_one(pool, step=1)
+    assert not pool.alloc_page(1, 0, step=1)
+    assert (np.asarray(pool.page_mode[0, :2]) == 0).all()
+    assert pool.stats["prefix_demotions"] == 0
+    assert pool.stats["prefix_evictions"] == 0
+    # sharer gone (refcount 1, entry only): admission headroom reappears
+    # and the allocator DEMOTES the idle prefix pages instead of evicting
+    pool.free_row(0)
+    assert pool.can_admit_tokens(pool.geom.page_size)
+    assert pool.alloc_page(1, 0, step=2)
+    assert pool.stats["prefix_demotions"] > 0
+    assert pool.stats["prefix_evictions"] == 0
+    assert 0 in idx.entries                 # still cached, just denser
+    assert (np.asarray(pool.page_mode[erow, :2]) == 1).all()
+    # eviction is the LAST rung, at refcount 0 only
+    assert pool._reclaim_prefix(step=3)
+    assert pool.stats["prefix_evictions"] == 1
+    assert not idx.entries
+    # only row 1's page remains, charged at whichever mode it landed in
+    assert pool.live_bytes == pool._cost(int(pool.page_mode[1, 0]))
+
+
+def test_coldest_normal_never_selects_refcounted_pages():
+    pool = _ppool(1)
+    assert pool.alloc_page(0, 0, 0) and pool.alloc_page(0, 1, 0)
+    pool.register_entry_pages(pool.entry_row(0), 0, 2, step=0)  # rc 2 both
+    assert pool.alloc_page(1, 0, 5)         # hotter, but unshared
+    victim = pool._coldest_normal()
+    assert victim is not None
+    assert pool.page_refcount(*victim) == 1
+    assert victim == (1, 0)                 # NOT the cold shared pages
+
+
+# ---------------------------------------------------------------------------
+# masked page-copy kernel: parity with the primitives it composes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("src_mode,dst_mode,aug_bits", [
+    (0, 0, 4), (1, 1, 4), (1, 1, 8),
+    (0, 1, 4), (0, 1, 8), (1, 0, 4), (1, 0, 8)])
+def test_cow_page_op_matches_pack_unpack_primitives(src_mode, dst_mode,
+                                                    aug_bits):
+    rng = np.random.default_rng(7)
+    Lg, N, KV, P, hd = 2, 3, 2, PAGE, 32
+    src, dst, keep = 1, 2, 5
+    da = hd // 2 if aug_bits == 4 else hd
+    pdt = jnp.uint8 if aug_bits == 4 else jnp.int8
+    kn = rng.standard_normal((Lg, N, KV, P, hd)).astype(np.float32)
+    kp = rng.integers(0, 256 if aug_bits == 4 else 127,
+                      (Lg, N, KV, P, da))
+    ks = rng.uniform(0.01, 0.1, (Lg, N, KV, P)).astype(np.float32)
+
+    def arenas():
+        return {"kn": jnp.asarray(kn, jnp.bfloat16),
+                "vn": jnp.asarray(-kn, jnp.bfloat16),
+                "kp": jnp.asarray(kp, pdt), "vp": jnp.asarray(kp, pdt),
+                "ks": jnp.asarray(ks, jnp.bfloat16),
+                "vs": jnp.asarray(ks, jnp.bfloat16)}
+
+    a = arenas()                  # donated to the op
+    ref = arenas()                # survives for the oracle
+    out = _cow_page_op(a, src, dst, keep, src_mode=src_mode,
+                       dst_mode=dst_mode, aug_bits=aug_bits)
+    mask = (jnp.arange(P) < keep)[None, None, :]
+    if (src_mode, dst_mode) == (0, 0):
+        want = jnp.where(mask[..., None], ref["kn"][:, src], 0)
+        assert (out["kn"][:, dst] == want).all()
+    elif (src_mode, dst_mode) == (1, 1):
+        assert (out["kp"][:, dst] == jnp.where(
+            mask[..., None], ref["kp"][:, src], 0)).all()
+        assert (out["ks"][:, dst] == jnp.where(
+            mask, ref["ks"][:, src], 1)).all()
+    elif (src_mode, dst_mode) == (0, 1):
+        if aug_bits == 4:
+            p, s = K.quantize_pack_kv(ref["kn"][:, src], mask)
+        else:
+            p, s = L.pack_kv_int8(ref["kn"][:, src])
+            p = jnp.where(mask[..., None], p, 0)
+            s = jnp.where(mask[..., None], s, 1)
+        assert (out["kp"][:, dst] == p).all()
+        assert (out["ks"][:, dst] == s[..., 0].astype(jnp.bfloat16)).all()
+    else:
+        unpack = L.unpack_kv_int4 if aug_bits == 4 else L.unpack_kv_int8
+        d = unpack(ref["kp"][:, src], ref["ks"][:, src][..., None])
+        want = jnp.where(mask[..., None], d, 0).astype(jnp.bfloat16)
+        assert (out["kn"][:, dst] == want).all()
+
+
+# ---------------------------------------------------------------------------
+# placement: affinity's deterministic fallback rung + fleet accounting
+# ---------------------------------------------------------------------------
+
+def _view(aid, free_rows=1, admit=True):
+    return ArrayView(aid=aid, alive=True, running=0, queued=0,
+                     free_rows=free_rows, live_bytes=0,
+                     budget_bytes=1 << 20,
+                     admit_probe=(lambda n: admit))
+
+
+def test_affinity_fallback_excludes_preferred_and_is_recorded():
+    pol = make_policy("affinity")
+    prompt = np.arange(40, dtype=np.int32)
+    pref = zlib.crc32(prompt[:pol.prefix_tokens].tobytes()) % 2
+    assert pol.place(prompt, [_view(0), _view(1)]) == pref
+    assert pol.last_reason == "hash"
+    views = [_view(0), _view(1)]
+    views[pref] = _view(pref, free_rows=0)      # preferred over budget
+    assert pol.place(prompt, views) == 1 - pref  # deterministic: the other
+    assert pol.last_reason == "fallback"
+
+
+def test_fleet_placement_stats_record_decision_rungs():
+    cfg = get_arch("qwen1.5-0.5b").reduced()
+    cfg = dataclasses.replace(
+        cfg, amc=dataclasses.replace(cfg.amc, page_size=PAGE))
+    fleet = make_serving(cfg, make_local_mesh(), num_arrays=2,
+                         placement="affinity", prefix_cache=2,
+                         max_batch=1, max_seq=64, prefill_chunk=CHUNK)
+    rng = np.random.default_rng(5)
+    sys_p = rng.integers(0, 100, size=(4 * PAGE,)).astype(np.int32)
+    for i in range(3):
+        tail = rng.integers(0, 100, size=(3,)).astype(np.int32)
+        fleet.add_request(Request(prompt=np.concatenate([sys_p, tail]),
+                                  max_new_tokens=2, id=i))
+    pl = fleet.stats()["placement"]
+    assert pl["policy"] == "affinity"
+    assert sum(pl["decisions"].values()) == 3
+    # array 0 rung names only — the fallback rung must be attributable
+    assert set(pl["decisions"]) <= {"prefix", "hash", "fallback"}
+    assert pl["decisions"].get("fallback", 0) >= 1
+    while fleet.has_work:
+        fleet.step_all()
+    assert len(fleet.outputs) == 3
